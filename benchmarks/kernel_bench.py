@@ -1,0 +1,63 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — these numbers
+measure the *simulated-kernel* path, not TPU wall time; the roofline for
+the TPU target comes from the dry-run in benchmarks/roofline_report.py)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import (cache_sim_op, flash_attention_op,
+                               flash_decode_op, page_gather_op)
+
+Row = Tuple[str, float, str]
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_kernels() -> List[Row]:
+    rows: List[Row] = []
+
+    rng = np.random.default_rng(0)
+    n = 20_000
+    pages = jnp.asarray(rng.integers(0, 4096, size=n), jnp.int32)
+    writes = jnp.asarray(rng.random(n) < 0.3)
+    us, (hits, _) = _time(cache_sim_op, pages, writes, num_sets=256, ways=8,
+                          reps=1)
+    rows.append(("kernels/cache_sim_20k", us,
+                 f"hit={float(jnp.mean(hits.astype(jnp.float32))):.3f}"))
+
+    q = jax.random.normal(KEY, (1, 256, 8, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 256, 8, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 256, 8, 64))
+    us, _ = _time(flash_attention_op, q, k, v, reps=1)
+    flops = 4 * 256 * 256 * 8 * 64 / 2  # causal
+    rows.append(("kernels/flash_attention_256", us, f"{flops/us:.0f}MFLOP/s-sim"))
+
+    qd = jax.random.normal(KEY, (4, 8, 64))
+    kc = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 1024, 8, 64))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 4), (4, 1024, 8, 64))
+    us, _ = _time(flash_decode_op, qd, kc, vc, 1000, reps=1)
+    rows.append(("kernels/flash_decode_1k", us, "ok"))
+
+    pool = jax.random.normal(KEY, (64, 16, 128))
+    table = jnp.asarray(rng.integers(0, 64, size=8), jnp.int32)
+    us, _ = _time(page_gather_op, pool, table, reps=1)
+    rows.append(("kernels/page_gather_8x8KB", us, "ok"))
+    return rows
+
+
+ALL = [bench_kernels]

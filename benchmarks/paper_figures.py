@@ -1,0 +1,117 @@
+"""Benchmarks reproducing the paper's figures/tables on the simulator.
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``:
+``us_per_call`` is the wall-clock cost of producing the datapoint (simulator
+throughput), ``derived`` is the simulated metric the paper plots.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.cache.dram_cache import DRAMCacheConfig
+from repro.core.devices import DEVICE_NAMES, CachedCXLSSDDevice, make_device
+from repro.core.workloads.membench import run_membench
+from repro.core.workloads.stream import run_stream
+from repro.core.workloads.viper import ViperConfig, run_viper
+
+Row = Tuple[str, float, str]
+
+
+def bench_fig3_bandwidth() -> List[Row]:
+    """Fig. 3: STREAM bandwidth across the five devices."""
+    rows: List[Row] = []
+    for name in DEVICE_NAMES:
+        t0 = time.perf_counter()
+        res = run_stream(make_device(name), dataset_bytes=4 << 20)
+        wall = (time.perf_counter() - t0) * 1e6
+        for kernel, r in res.items():
+            rows.append((f"fig3/{name}/{kernel}", wall / 4,
+                         f"{r.bandwidth_gbps:.2f}GB/s"))
+    return rows
+
+
+def bench_fig4_latency() -> List[Row]:
+    """Fig. 4: random-read latency across the five devices."""
+    rows: List[Row] = []
+    for name in DEVICE_NAMES:
+        t0 = time.perf_counter()
+        r = run_membench(make_device(name), working_set_bytes=2 << 20,
+                         accesses=5000)
+        wall = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig4/{name}", wall, f"{r.avg_latency_ns:.1f}ns"))
+    return rows
+
+
+def _viper_rows(kv_bytes: int, tag: str) -> List[Row]:
+    rows: List[Row] = []
+    for name in DEVICE_NAMES:
+        t0 = time.perf_counter()
+        qps = run_viper(make_device(name), ViperConfig(kv_bytes=kv_bytes))
+        wall = (time.perf_counter() - t0) * 1e6
+        for phase in ("insert", "write", "query", "update", "delete", "avg"):
+            rows.append((f"{tag}/{name}/{phase}", wall / 6,
+                         f"{qps[phase] / 1e3:.0f}kQPS"))
+    return rows
+
+
+def bench_fig5_viper_216() -> List[Row]:
+    """Fig. 5: Viper QPS, 216 B key-value pairs."""
+    return _viper_rows(216, "fig5_216B")
+
+
+def bench_fig6_viper_532() -> List[Row]:
+    """Fig. 6: Viper QPS, 532 B key-value pairs."""
+    return _viper_rows(532, "fig6_532B")
+
+
+def bench_policy_comparison() -> List[Row]:
+    """§III-C: the five replacement policies on the cached CXL-SSD."""
+    rows: List[Row] = []
+    for pol in ("lru", "fifo", "2q", "lfru", "direct"):
+        t0 = time.perf_counter()
+        dev = CachedCXLSSDDevice(cache_cfg=DRAMCacheConfig(policy=pol))
+        qps = run_viper(dev, ViperConfig(kv_bytes=532))
+        wall = (time.perf_counter() - t0) * 1e6
+        rows.append((f"policies/{pol}", wall,
+                     f"{qps['avg'] / 1e3:.0f}kQPS,hit={dev.cache.hit_rate:.3f}"))
+    return rows
+
+
+def bench_claims_summary() -> List[Row]:
+    """Headline ratios (C1-C8) in one place."""
+    rows: List[Row] = []
+    t0 = time.perf_counter()
+    v216 = {n: run_viper(make_device(n), ViperConfig(kv_bytes=216))
+            for n in DEVICE_NAMES}
+    v532 = {n: run_viper(make_device(n), ViperConfig(kv_bytes=532))
+            for n in DEVICE_NAMES}
+    st = {n: np.mean([r.bandwidth_gbps for r in
+                      run_stream(make_device(n), dataset_bytes=4 << 20).values()])
+          for n in ("dram", "pmem", "cxl-dram", "cxl-ssd-cache")}
+    wall = (time.perf_counter() - t0) * 1e6
+    rows.append(("claims/C2_cached_vs_cxldram_bw", wall / 6,
+                 f"{st['cxl-ssd-cache'] / st['cxl-dram']:.2f}"))
+    rows.append(("claims/C3_pmem_vs_dram_bw", wall / 6, f"{st['pmem'] / st['dram']:.2f}"))
+    rows.append(("claims/C4_cxldram_vs_dram_qps", wall / 6,
+                 f"{v216['cxl-dram']['avg'] / v216['dram']['avg']:.3f}"))
+    rows.append(("claims/C5_pmem_vs_cxldram_qps", wall / 6,
+                 f"{v216['pmem']['avg'] / v216['cxl-dram']['avg']:.3f}"))
+    rows.append(("claims/C6_cached_vs_uncached_216B", wall / 6,
+                 f"{v216['cxl-ssd-cache']['avg'] / v216['cxl-ssd']['avg']:.1f}x"))
+    rows.append(("claims/C7_cached_vs_pmem_532B", wall / 6,
+                 f"{v532['cxl-ssd-cache']['avg'] / v532['pmem']['avg']:.3f}"))
+    return rows
+
+
+ALL = [
+    bench_fig3_bandwidth,
+    bench_fig4_latency,
+    bench_fig5_viper_216,
+    bench_fig6_viper_532,
+    bench_policy_comparison,
+    bench_claims_summary,
+]

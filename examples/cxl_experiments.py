@@ -1,0 +1,74 @@
+"""Full reproduction of the paper's experiment suite (Figs. 3-6 + policy
+study), written as CSVs under results/paper/.
+
+  PYTHONPATH=src python examples/cxl_experiments.py [--fast]
+"""
+
+import argparse
+import csv
+from pathlib import Path
+
+from repro.core.cache.dram_cache import DRAMCacheConfig
+from repro.core.devices import DEVICE_NAMES, CachedCXLSSDDevice, make_device
+from repro.core.workloads.membench import run_membench
+from repro.core.workloads.stream import run_stream
+from repro.core.workloads.viper import ViperConfig, run_viper
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="results/paper")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    ops = 2000 if args.fast else 10_000
+    ks, seed = (12000, 8000) if args.fast else (28000, 18000)
+
+    # Fig. 3 — bandwidth
+    with open(out / "fig3_bandwidth.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["device", "kernel", "GBps"])
+        for name in DEVICE_NAMES:
+            for kernel, r in run_stream(make_device(name),
+                                        dataset_bytes=4 << 20).items():
+                w.writerow([name, kernel, f"{r.bandwidth_gbps:.3f}"])
+    print("fig3_bandwidth.csv done")
+
+    # Fig. 4 — latency
+    with open(out / "fig4_latency.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["device", "avg_latency_ns"])
+        for name in DEVICE_NAMES:
+            r = run_membench(make_device(name), working_set_bytes=4 << 20,
+                             accesses=5000)
+            w.writerow([name, f"{r.avg_latency_ns:.1f}"])
+    print("fig4_latency.csv done")
+
+    # Figs. 5/6 — Viper QPS
+    for kv, tag in ((216, "fig5"), (532, "fig6")):
+        with open(out / f"{tag}_viper_{kv}B.csv", "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["device", "phase", "QPS"])
+            for name in DEVICE_NAMES:
+                qps = run_viper(make_device(name),
+                                ViperConfig(kv_bytes=kv, ops_per_phase=ops,
+                                            keyspace=ks, seed_keys=seed))
+                for phase, v in qps.items():
+                    w.writerow([name, phase, f"{v:.0f}"])
+        print(f"{tag}_viper_{kv}B.csv done")
+
+    # §III-C — replacement-policy study on the cached CXL-SSD
+    with open(out / "policy_study.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["policy", "avg_QPS", "hit_rate"])
+        for pol in ("lru", "fifo", "2q", "lfru", "direct"):
+            dev = CachedCXLSSDDevice(cache_cfg=DRAMCacheConfig(policy=pol))
+            qps = run_viper(dev, ViperConfig(kv_bytes=532, ops_per_phase=ops,
+                                             keyspace=ks, seed_keys=seed))
+            w.writerow([pol, f"{qps['avg']:.0f}", f"{dev.cache.hit_rate:.4f}"])
+    print("policy_study.csv done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: the CXL-SSD-Sim reproduction in 60 seconds.
+
+Runs the paper's three experiments (latency / bandwidth / Viper KV-store)
+on small inputs across all five memory devices and prints the headline
+comparisons from Figs. 3-6.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.devices import DEVICE_NAMES, make_device
+from repro.core.workloads.membench import run_membench
+from repro.core.workloads.stream import run_stream
+from repro.core.workloads.viper import ViperConfig, run_viper
+
+
+def main() -> None:
+    print("== membench: random-read latency (Fig. 4) ==")
+    for name in DEVICE_NAMES:
+        r = run_membench(make_device(name), working_set_bytes=2 << 20,
+                         accesses=3000)
+        print(f"  {name:14s} {r.avg_latency_ns:9.1f} ns")
+
+    print("\n== STREAM: copy bandwidth (Fig. 3) ==")
+    for name in DEVICE_NAMES:
+        r = run_stream(make_device(name), dataset_bytes=2 << 20)
+        print(f"  {name:14s} {r['copy'].bandwidth_gbps:6.2f} GB/s")
+
+    print("\n== Viper 216B KV store (Fig. 5) ==")
+    qps = {}
+    for name in DEVICE_NAMES:
+        qps[name] = run_viper(make_device(name),
+                              ViperConfig(kv_bytes=216, ops_per_phase=2000,
+                                          keyspace=12000, seed_keys=8000))
+        print(f"  {name:14s} {qps[name]['avg']/1e3:7.0f} kQPS avg")
+
+    print("\n== headline claims ==")
+    print(f"  CXL-DRAM / DRAM QPS        : {qps['cxl-dram']['avg']/qps['dram']['avg']:.2f}"
+          f"  (paper: ~0.86)")
+    print(f"  cached / uncached CXL-SSD  : {qps['cxl-ssd-cache']['avg']/qps['cxl-ssd']['avg']:.1f}x"
+          f" (paper: 7-10x)")
+
+
+if __name__ == "__main__":
+    main()

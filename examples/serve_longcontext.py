@@ -1,0 +1,52 @@
+"""Long-context serving with the tiered KV store — the paper's architecture
+at the model level.
+
+A sliding-window model decodes far past its HBM ring buffer; evicted KV
+segments land in the capacity tier (simulated CXL-SSD) and historical
+segments are re-read with a Zipf access pattern (lookback / re-prefill).
+Compares the five CXL-SSD-Sim replacement policies on HBM hit-rate and
+simulated CXL-SSD time.
+
+  PYTHONPATH=src python examples/serve_longcontext.py
+"""
+
+import numpy as np
+
+from repro.core.devices import make_device
+from repro.tiered.store import TieredStore, TieredStoreConfig
+
+
+def run_policy(policy: str, n_pages=64, hbm_pages=12, steps=1200, seed=0):
+    rng = np.random.default_rng(seed)
+    store = TieredStore(
+        TieredStoreConfig(n_logical_pages=n_pages, page_shape=(4, 64),
+                          hbm_pages=hbm_pages, policy=policy),
+        backing=make_device("cxl-ssd"))
+    # archive pages as decode proceeds; lookback reads are Zipf over history
+    w = None
+    for step in range(steps):
+        seg = step % n_pages
+        if step % 8 == 0:
+            store.write_page(seg, np.full((4, 64), float(step), np.float32))
+        hist = max(step // 8, 1)
+        ranks = np.arange(1, min(hist, n_pages) + 1, dtype=np.float64)
+        p = ranks ** -1.1
+        p /= p.sum()
+        picks = (seg - rng.choice(len(ranks), size=2, p=p)) % n_pages
+        store.read_pages([int(x) for x in picks])
+    return store
+
+
+def main() -> None:
+    print(f"{'policy':8s} {'hit-rate':>9s} {'fills':>7s} {'writebacks':>11s} "
+          f"{'sim CXL-SSD ms':>15s}")
+    for pol in ("lru", "lfru", "2q", "fifo", "direct"):
+        st = run_policy(pol)
+        print(f"{pol:8s} {st.hit_rate:9.3f} {st.stats['fills']:7d} "
+              f"{st.stats['writebacks']:11d} {st.sim_time_us/1e3:15.2f}")
+    print("\nThe DRAM/HBM cache layer in front of the capacity tier is the "
+          "paper's contribution; higher hit-rate == less CXL-SSD time.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Fault-tolerant checkpointing: atomic writes, checksums, async save,
+elastic re-mesh restore.
+
+* **Atomic**: a checkpoint is written to ``step_N.tmp/`` and ``os.replace``d
+  into ``step_N/`` only after every leaf + the manifest land — a crash
+  mid-save never corrupts the latest good checkpoint.
+* **Verified**: the manifest records per-leaf SHA-256; restore checks them.
+* **Elastic**: ``restore(..., mesh=, specs=)`` places leaves with
+  ``NamedSharding`` on whatever mesh the *restarted* job has — a checkpoint
+  saved on 2x16x16 restores onto 16x16 (or a debug 2x2) unchanged, which is
+  the elastic-scaling path for node failures.
+* **Async**: ``save_async`` snapshots to host then writes on a thread so
+  training continues; ``wait()`` joins before the next save.
+* Iterator/RNG state rides along (preemption-safe data order).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                       for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any, extra: Dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat, _ = _flatten(host_tree)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for key, leaf in flat.items():
+            # raw bytes + dtype string: np.save corrupts ml_dtypes (bfloat16)
+            fname = key.replace("/", "__") + ".bin"
+            raw = np.ascontiguousarray(leaf).tobytes()
+            (tmp / fname).write_bytes(raw)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(leaf.shape),
+                "dtype": str(leaf.dtype),
+                "sha256": hashlib.sha256(raw).hexdigest(),
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if not p.name.endswith(".tmp")]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                mesh=None, specs: Any = None, verify: bool = True):
+        """Restore into the structure of ``template``.  With ``mesh`` and
+        ``specs``, leaves are placed as NamedSharding(mesh, spec) — the
+        elastic re-mesh path."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        cdir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((cdir / "manifest.json").read_text())
+
+        flat_t, treedef = _flatten(template)
+        spec_flat = None
+        if specs is not None:
+            spec_flat, _ = _flatten(specs)
+
+        restored = {}
+        for key, tmpl in flat_t.items():
+            ent = manifest["leaves"].get(key)
+            if ent is None:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            raw = (cdir / ent["file"]).read_bytes()
+            if verify:
+                digest = hashlib.sha256(raw).hexdigest()
+                if digest != ent["sha256"]:
+                    raise IOError(f"checksum mismatch for {key!r}")
+            dtype = np.dtype(ent["dtype"]) if ent["dtype"] != "bfloat16" \
+                else np.dtype("bfloat16")
+            arr = np.frombuffer(raw, dtype=dtype).reshape(ent["shape"]).copy()
+            if list(arr.shape) != list(tmpl.shape):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {tmpl.shape}")
+            if mesh is not None:
+                spec = spec_flat.get(key, P()) if spec_flat else P()
+                arr = jax.device_put(arr, NamedSharding(mesh, spec))
+            restored[key] = arr
+
+        leaves = [restored[k] for k in flat_t]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest["extra"], step

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    all_archs,
+    cell_applicable,
+    get_arch,
+)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "MoEConfig", "SSMConfig",
+           "ShapeConfig", "all_archs", "cell_applicable", "get_arch"]

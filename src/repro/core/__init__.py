@@ -1,0 +1,24 @@
+"""repro.core — the CXL-SSD-Sim reproduction (paper pillar 1).
+
+Full-system memory simulator: CXL.mem protocol layer, SimpleSSD-style SSD
+backend, DRAM cache layer with five replacement policies, five device
+models, and the paper's workloads (STREAM, membench, Viper).
+"""
+
+from repro.core.engine import EventEngine, ns, us, to_ns, to_us, to_s
+from repro.core.devices import (
+    DEVICE_NAMES,
+    CachedCXLSSDDevice,
+    CXLDRAMDevice,
+    CXLSSDDevice,
+    DRAMDevice,
+    PMEMDevice,
+    make_device,
+)
+
+__all__ = [
+    "EventEngine", "ns", "us", "to_ns", "to_us", "to_s",
+    "DEVICE_NAMES", "make_device",
+    "DRAMDevice", "CXLDRAMDevice", "PMEMDevice", "CXLSSDDevice",
+    "CachedCXLSSDDevice",
+]

@@ -1,0 +1,27 @@
+from repro.core.cache.policies import (
+    POLICIES,
+    CachePolicy,
+    DirectPolicy,
+    FIFOPolicy,
+    LFRUPolicy,
+    LRUPolicy,
+    TwoQPolicy,
+    make_policy,
+)
+from repro.core.cache.dram_cache import DRAMCache, DRAMCacheConfig
+from repro.core.cache.trace_sim import TraceCacheSim, simulate_trace
+
+__all__ = [
+    "POLICIES",
+    "CachePolicy",
+    "DirectPolicy",
+    "FIFOPolicy",
+    "LFRUPolicy",
+    "LRUPolicy",
+    "TwoQPolicy",
+    "make_policy",
+    "DRAMCache",
+    "DRAMCacheConfig",
+    "TraceCacheSim",
+    "simulate_trace",
+]

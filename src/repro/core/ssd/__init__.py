@@ -1,0 +1,5 @@
+from repro.core.ssd.pal import NANDTiming, PAL
+from repro.core.ssd.ftl import FTL
+from repro.core.ssd.hil import HIL, SSDConfig
+
+__all__ = ["NANDTiming", "PAL", "FTL", "HIL", "SSDConfig"]

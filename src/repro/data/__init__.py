@@ -1,0 +1,3 @@
+from repro.data.pipeline import ShardedLoader, make_batch_spec
+
+__all__ = ["ShardedLoader", "make_batch_spec"]

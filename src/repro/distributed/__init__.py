@@ -1,0 +1,12 @@
+from repro.distributed.sharding import (
+    MeshAxes,
+    batch_spec,
+    decode_state_specs,
+    param_specs,
+    opt_state_specs,
+)
+from repro.distributed.step import make_train_step, make_prefill_step, make_decode_step
+
+__all__ = ["MeshAxes", "batch_spec", "decode_state_specs", "param_specs",
+           "opt_state_specs", "make_train_step", "make_prefill_step",
+           "make_decode_step"]

@@ -1,0 +1,284 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Axis roles:
+  * ``dp`` axes (``('data',)`` single-pod, ``('pod','data')`` multi-pod):
+    batch / ZeRO-1 optimizer-state sharding.
+  * ``tp`` axis (``'model'``): tensor parallelism — attention heads, FFN
+    hidden, vocab, MoE experts (EP) or expert-hidden (TP-in-expert), SSM
+    inner channels.
+
+Rules are name-based over the stacked parameter pytree (leaves carry a
+leading ``n_layers`` axis).  Anything not matched is replicated.  Divisibility
+is checked per-leaf: a rule that does not divide falls back to replication
+(logged), so every assigned architecture shards cleanly on the 16x16 and
+2x16x16 production meshes.
+"""
+
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+log = logging.getLogger(__name__)
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...]
+    tp: str
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        if names == ("data", "model"):
+            return MeshAxes(dp=("data",), tp="model")
+        if names == ("pod", "data", "model"):
+            return MeshAxes(dp=("pod", "data"), tp="model")
+        # generic: last axis is tp, all leading axes dp
+        return MeshAxes(dp=names[:-1], tp=names[-1])
+
+
+def _dim(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _spec_fits(mesh: Mesh, shape, spec: P) -> bool:
+    for size, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            continue
+        if size % _dim(mesh, axes) != 0:
+            return False
+    return True
+
+
+def _rule(path: str, cfg: ArchConfig, ax: MeshAxes,
+          kind: str = "train") -> P:
+    """PartitionSpec for a stacked-leaf path (without the layer axis)."""
+    tp = ax.tp
+    # ---- top-level
+    if path.endswith("embed"):
+        if cfg.n_codebooks:
+            return P(None, tp, None)
+        return P(tp, None)
+    if path.endswith("lm_head"):
+        if cfg.n_codebooks:
+            return P(None, None, tp)
+        return P(None, tp)
+    if path.endswith("final_norm"):
+        return P(None)
+
+    layered = ".blocks." in path or ".cross." in path
+    lead = (None, None) if ".blocks." in path and cfg.cross_attn_every else \
+           ((None,) if layered else ())
+
+    name = path.split(".")[-1]
+    # ---- moe (checked before dense mlp: names overlap)
+    if ".moe." in path:
+        if name == "router":
+            return P(*lead, None, None)
+        ep = cfg.moe is not None and cfg.moe.sharding == "ep"
+        if ep:
+            if kind == "decode":
+                # resident-expert decode layout: experts over tp, expert-
+                # hidden over dp — weights never move; tokens do (§Perf)
+                if name == "w_down":   # (E, F, D)
+                    return P(*lead, tp, ax.dp, None)
+                return P(*lead, tp, None, ax.dp)
+            # EP + FSDP (training): experts over tp AND the within-expert
+            # dim over the dp axes (a trillion-param expert store exceeds
+            # HBM under EP alone; pjit all-gathers each layer's local
+            # experts just in time, which is the FSDP pattern).
+            return P(*lead, tp, ax.dp, None)
+        # tp-in-expert
+        if kind == "decode":
+            # keep weights resident at decode (F over tp only)
+            if name == "w_down":
+                return P(*lead, None, tp, None)
+            return P(*lead, None, None, tp)
+        # training: + FSDP over the other hidden dim
+        if name == "w_down":  # (E, F, D): shard F over tp, D over dp
+            return P(*lead, None, tp, ax.dp)
+        return P(*lead, None, ax.dp, tp)  # (E, D, F): D over dp, F over tp
+    # ---- ssm (shard inner channels for pure-SSM; replicate for hybrid,
+    # whose head count does not divide the model axis — see DESIGN.md §6)
+    if ".ssm." in path:
+        if cfg.family != "ssm":
+            return P()
+        if name in ("in_z", "in_x", "conv_x"):
+            return P(*lead, None, tp)
+        if name == "out_proj":
+            return P(*lead, tp, None)
+        if name in ("A_log", "D_skip", "dt_bias", "norm_w", "conv_bx"):
+            return P(*lead, tp)
+        if name == "in_dt":
+            return P(*lead, None, tp)
+        return P()  # in_B, in_C, conv_B/C + their biases: replicated
+    # ---- attention
+    if name in ("wq", "wk", "wv"):
+        return P(*lead, None, tp)
+    if name == "wo":
+        return P(*lead, tp, None)
+    # ---- dense mlp
+    if name in ("w_gate", "w_up"):
+        return P(*lead, None, tp)
+    if name == "w_down":
+        return P(*lead, tp, None)
+    # ---- norms, gates, everything else
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "." + ".".join(parts)
+
+
+def param_specs(params, cfg: ArchConfig, mesh: Mesh,
+                ax: Optional[MeshAxes] = None, kind: str = "train"):
+    """PartitionSpec pytree for the parameter pytree.  ``kind='decode'``
+    switches MoE experts to the resident layout (see _rule)."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+
+    def leaf_spec(path, leaf):
+        # NamedTuple fields (SSMParams/MoEParams) appear as tuple indices;
+        # rebuild a name using the field list when possible.
+        spec = _rule(_path_str(path), cfg, ax, kind)
+        if len(spec) > leaf.ndim:
+            spec = P(*tuple(spec)[:leaf.ndim])
+        if not _spec_fits(mesh, leaf.shape, spec):
+            log.info("sharding fallback to replicate: %s %s %s",
+                     _path_str(path), leaf.shape, spec)
+            return P()
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def fsdp_param_specs(params, cfg: ArchConfig, mesh: Mesh,
+                     ax: Optional[MeshAxes] = None,
+                     axes: Optional[Tuple[str, ...]] = None):
+    """Fully-sharded (ZeRO-3 / MaxText-style) parameter specs: every leaf's
+    largest divisible dim shards over ALL mesh axes; weights are all-gathered
+    just-in-time per layer.  The §Perf alternative to Megatron TP when the
+    per-layer activation all-reduces dominate (weak-ICI pods, small models):
+    wire drops from O(L x activations) to O(3 x params)."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+    all_axes = axes if axes is not None else tuple(ax.dp) + (ax.tp,)
+    n_all = _dim(mesh, all_axes)
+
+    def leaf_spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if leaf.shape[i] % n_all == 0:
+                return P(*(None,) * i, all_axes, *(None,) * (leaf.ndim - i - 1))
+        for i in order:  # fall back to a single-axis shard
+            if leaf.shape[i] % _dim(mesh, ax.tp) == 0:
+                return P(*(None,) * i, ax.tp, *(None,) * (leaf.ndim - i - 1))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def opt_state_specs(opt_state, pspecs, mesh: Mesh,
+                    ax: Optional[MeshAxes] = None, zero1: bool = True):
+    """Moment specs = param specs, plus ZeRO-1: additionally shard the first
+    dimension whose spec is free over the dp axes (when divisible)."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+    dp_size = _dim(mesh, ax.dp)
+
+    def _uses_dp(spec_t) -> bool:
+        for axes in spec_t:
+            if axes is None:
+                continue
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                if a in ax.dp:
+                    return True
+        return False
+
+    def zero_spec(spec: P, leaf):
+        if not zero1:
+            return spec
+        spec_t = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        if _uses_dp(spec_t):
+            return spec  # already FSDP-sharded over dp (e.g. MoE experts)
+        for i, (s, size) in enumerate(zip(spec_t, leaf.shape)):
+            if s is None and size % dp_size == 0 and size >= dp_size:
+                return P(*spec_t[:i], ax.dp, *spec_t[i + 1:])
+        return spec
+
+    if "mu_q" in opt_state:  # int8 moments: values like params, scales
+        # like params minus the (row-quantized) last axis
+        q_mu = jax.tree.map(zero_spec, pspecs, opt_state["mu_q"])
+        q_nu = jax.tree.map(zero_spec, pspecs, opt_state["nu_q"])
+
+        def scale_spec(spec: P, leaf):
+            t = tuple(spec)[:-1] if len(spec) else ()
+            cand = P(*t)
+            return cand if _spec_fits(mesh, leaf.shape, cand) else P()
+
+        s_mu = jax.tree.map(scale_spec, q_mu, opt_state["mu_s"])
+        s_nu = jax.tree.map(scale_spec, q_nu, opt_state["nu_s"])
+        return {"mu_q": q_mu, "mu_s": s_mu, "nu_q": q_nu, "nu_s": s_nu,
+                "count": P()}
+    mu_specs = jax.tree.map(zero_spec, pspecs, opt_state["mu"])
+    nu_specs = jax.tree.map(zero_spec, pspecs, opt_state["nu"])
+    return {"mu": mu_specs, "nu": nu_specs, "count": P()}
+
+
+def batch_spec(cfg: ArchConfig, ax: MeshAxes, kind: str,
+               batch_replicated: bool = False) -> Dict[str, P]:
+    """Input shardings for a batch dict."""
+    b = None if batch_replicated else ax.dp
+    spec = {"tokens": P(b, None, None) if cfg.n_codebooks else P(b, None)}
+    if cfg.cross_attn_every:
+        spec["frontend"] = P(b, None, None)
+    if kind == "train":
+        spec["targets"] = dict(spec)["tokens"]
+    return spec
+
+
+def decode_state_specs(state, cfg: ArchConfig, mesh: Mesh,
+                       ax: Optional[MeshAxes] = None,
+                       batch_replicated: bool = False):
+    """Decode-state shardings: KV cache sequence axis over tp (the
+    flash-decoding layout), batch over dp, SSM heads over tp for pure SSM."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+    b = None if batch_replicated else ax.dp
+    specs: Dict[str, Any] = {"cur": P()}
+    if "k" in state:
+        seq_ok = state["k"].shape[2] % _dim(mesh, ax.tp) == 0
+        s = ax.tp if seq_ok else None
+        specs["k"] = P(None, b, s, None, None)
+        specs["v"] = P(None, b, s, None, None)
+        if "k_scale" in state:
+            specs["k_scale"] = P(None, b, s, None)
+            specs["v_scale"] = P(None, b, s, None)
+    if "ssm" in state:
+        h_shard = ax.tp if (cfg.family == "ssm" and
+                            state["ssm"].h.shape[2] % _dim(mesh, ax.tp) == 0) else None
+        from repro.models.ssm import SSMState
+        specs["ssm"] = SSMState(h=P(None, b, h_shard, None, None),
+                                conv_buf=P(None, b, None, None))
+    if "cross_k" in state:
+        specs["cross_k"] = P(None, b, None, None, None)
+        specs["cross_v"] = P(None, b, None, None, None)
+    return specs

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: set-associative cache-replay (the simulator hot-spot).
+
+The paper's DRAM-cache layer decides hit/miss/evict for every 64 B access;
+replaying long address traces against that state machine is the dominant
+compute of trace-driven evaluation.  This kernel keeps the full cache state
+— tags, timestamps, dirty bits, laid out ``(ways, sets)`` so the set axis
+rides the 128-wide lanes — in VMEM scratch that persists across a
+sequential grid, streaming the trace through in ``(1, T)`` chunks.
+
+The update rule is bit-identical to :func:`repro.core.cache.trace_sim._run_trace`
+(the lax.scan oracle), which in turn matches the pure-Python policy objects.
+Cache replay is inherently sequential (every access depends on the state
+left by the previous one), so the kernel is latency-bound scalar work per
+access; TPU leverage comes from running independent sweeps (policies,
+capacities, workloads) in parallel via vmap over ``pallas_call`` — see
+``benchmarks/kernel_bench.py``.
+
+VMEM budget: ``3 * ways * sets * 4`` bytes for state (default 8x4096 ->
+384 KB) + two ``(1, T)`` int32 trace blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -(2**31) + 1
+
+
+def _cache_sim_kernel(pages_ref, writes_ref, hits_ref, evicts_ref,
+                      tags_ref, meta_ref, dirty_ref, *,
+                      num_sets: int, ways: int, chunk: int, is_lru: bool):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        tags_ref[...] = jnp.full((ways, num_sets), -1, jnp.int32)
+        meta_ref[...] = jnp.zeros((ways, num_sets), jnp.int32)
+        dirty_ref[...] = jnp.zeros((ways, num_sets), jnp.int32)
+
+    base_t = step * chunk
+
+    def body(i, _):
+        page = pages_ref[0, i]
+        wr = writes_ref[0, i]
+        t = base_t + i + 1
+        s = jax.lax.rem(page, num_sets)
+
+        line_tags = tags_ref[:, pl.ds(s, 1)][:, 0]    # (W,)
+        line_meta = meta_ref[:, pl.ds(s, 1)][:, 0]
+        line_dirty = dirty_ref[:, pl.ds(s, 1)][:, 0]
+
+        match = line_tags == page
+        hit = jnp.any(match)
+        hit_way = jnp.argmax(match)
+
+        valid = line_tags >= 0
+        victim_key = jnp.where(valid, line_meta, NEG)
+        victim_way = jnp.argmin(victim_key)
+        way = jnp.where(hit, hit_way, victim_way).astype(jnp.int32)
+
+        dirty_evict = jnp.logical_and(
+            jnp.logical_and(~hit, valid[victim_way]),
+            line_dirty[victim_way] > 0)
+
+        new_tag = jnp.where(hit, line_tags[way], page)
+        stamp = jnp.where(hit,
+                          jnp.where(is_lru, t, line_meta[way]),
+                          t).astype(jnp.int32)
+        new_dirty = jnp.where(hit, line_dirty[way] | wr, wr).astype(jnp.int32)
+
+        line_tags = line_tags.at[way].set(new_tag)
+        line_meta = line_meta.at[way].set(stamp)
+        line_dirty = line_dirty.at[way].set(new_dirty)
+        tags_ref[:, pl.ds(s, 1)] = line_tags[:, None]
+        meta_ref[:, pl.ds(s, 1)] = line_meta[:, None]
+        dirty_ref[:, pl.ds(s, 1)] = line_dirty[:, None]
+
+        hits_ref[0, i] = hit.astype(jnp.int32)
+        evicts_ref[0, i] = dirty_evict.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_sets", "ways", "policy",
+                                             "chunk", "interpret"))
+def cache_sim(pages: jnp.ndarray, writes: jnp.ndarray, *, num_sets: int,
+              ways: int, policy: str = "lru", chunk: int = 512,
+              interpret: bool = True):
+    """Replay a trace. pages: (N,) int32; writes: (N,) bool.
+    Returns (hits (N,) bool, dirty_evicts (N,) bool)."""
+    if policy not in ("lru", "fifo", "direct"):
+        raise ValueError(f"kernel supports lru/fifo/direct, got {policy!r}")
+    if policy == "direct" and ways != 1:
+        raise ValueError("direct-mapped requires ways == 1")
+    n = pages.shape[0]
+    pad = (-n) % chunk
+    pages = jnp.pad(pages.astype(jnp.int32), (0, pad))
+    writes = jnp.pad(writes.astype(jnp.int32), (0, pad))
+    c = (n + pad) // chunk
+    pages2 = pages.reshape(c, chunk)
+    writes2 = writes.reshape(c, chunk)
+
+    kern = functools.partial(_cache_sim_kernel, num_sets=num_sets, ways=ways,
+                             chunk=chunk, is_lru=(policy == "lru"))
+    hits, evicts = pl.pallas_call(
+        kern,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, chunk), jnp.int32),
+            jax.ShapeDtypeStruct((c, chunk), jnp.int32),
+        ],
+        scratch_shapes=[_vmem((ways, num_sets)) for _ in range(3)],
+        interpret=interpret,
+    )(pages2, writes2)
+    return (hits.reshape(-1)[:n].astype(bool),
+            evicts.reshape(-1)[:n].astype(bool))
+
+
+def _vmem(shape):
+    """VMEM scratch allocation (int32)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.int32)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: prefill flash attention (tiled online softmax).
+
+Grid ``(BH, nq, nk)`` with the kv axis innermost — TPU executes the grid
+sequentially, so the running (m, l, acc) for one query tile lives in VMEM
+scratch across the kv steps and the output tile is written on the last one.
+Block shapes default to ``(128, head_dim)`` — MXU-aligned when head_dim is a
+multiple of 128 (the wrapper pads).  Causal tiles that are fully masked
+skip their matmuls via ``pl.when``.
+
+Wrapper handles GQA by folding the group into the query tile index map, so
+KV tiles are never materialized per-head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  bq: int, bk: int, seq_q: int, seq_kv: int,
+                  causal: bool, window: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc[...], NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc[...])
+        acc_sc[...] = jnp.zeros_like(acc_sc[...])
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= q_pos >= k_pos
+            if window > 0:
+                mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot(p, v)
+        m_sc[...] = m_new
+
+    if causal:
+        # skip tiles the causal/window mask kills entirely
+        live = k_start <= q_start + bq - 1
+        if window > 0:
+            live = jnp.logical_and(live, k_start + bk - 1 >= q_start - window + 1)
+        pl.when(live)(_tile)
+    else:
+        _tile()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-37)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_tpu(q, k, v, *, causal: bool = True, window: int = 0,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = True):
+    """q: (B, S, H, hd); k, v: (B, Skv, KV, hd). Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+
+    bq = min(bq, S)
+    bk = min(bk, Skv)
+    pad_q = (-S) % bq
+    pad_k = (-Skv) % bk
+    pad_d = (-hd) % 128 if not interpret else 0   # MXU lane alignment on TPU
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, pad_d)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    Sq, Sk, d = S + pad_q, Skv + pad_k, hd + pad_d
+
+    # (B*KV*G, Sq, d) query-major; KV stays (B*KV, Sk, d)
+    qf = qp.transpose(0, 2, 1, 3).reshape(B * KV * G, Sq, d)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * KV, Sk, d)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * KV, Sk, d)
+
+    nq, nk = Sq // bq, Sk // bk
+    kern = functools.partial(_flash_kernel, bq=bq, bk=bk, seq_q=S, seq_kv=Skv,
+                             causal=causal, window=window, scale=scale)
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        kern,
+        grid=(B * KV * G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV * G, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, KV * G, Sq, d).transpose(0, 2, 1, 3)
+    return out[:, :S, :, :hd]

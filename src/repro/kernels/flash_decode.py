@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: single-token decode attention over a KV-cache shard.
+
+Designed for the flash-decoding scheme of ``repro.distributed``: the KV
+cache's sequence axis is sharded across the ``model`` mesh axis, every
+device runs this kernel over its local shard, and the partial results are
+combined with a max/sum softmax merge across devices — so the kernel also
+RETURNS its local ``(m, l)`` statistics.
+
+Grid ``(BH, nk)``; kv tiles stream through VMEM while the running
+(m, l, acc) sits in scratch.  ``n_valid`` arrives via scalar prefetch so the
+same compiled kernel serves any cache fill level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(n_valid_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, m_sc, l_sc, acc_sc, *,
+                   bk: int, scale: float, gqa: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc[...], NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc[...])
+        acc_sc[...] = jnp.zeros_like(acc_sc[...])
+
+    n_valid = n_valid_ref[0]
+    k_start = ki * bk
+
+    @pl.when(k_start < n_valid)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                 # (G, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G, bk)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < n_valid, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot(p, v)
+        m_sc[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-37)).astype(o_ref.dtype)
+        m_ref[0] = m_sc[...]
+        l_ref[0] = l_sc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode_tpu(q, k_cache, v_cache, n_valid, *, bk: int = 512,
+                     interpret: bool = True):
+    """q: (B, H, hd); k/v_cache: (B, Skv, KV, hd); n_valid: () int32.
+
+    Returns (out (B, H, hd), m (B, H), l (B, H)) — partial-softmax stats for
+    cross-shard combining; ``out`` is already the locally-normalized result.
+    """
+    B, H, hd = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    bk = min(bk, Skv)
+    pad_k = (-Skv) % bk
+    pad_d = (-hd) % 128 if not interpret else 0
+    kp = jnp.pad(k_cache, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_d)))
+    Sk, d = Skv + pad_k, hd + pad_d
+
+    qf = qp.reshape(B * KV, G, d)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * KV, Sk, d)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * KV, Sk, d)
+    nk = Sk // bk
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1)
+
+    kern = functools.partial(_decode_kernel, bk=bk, scale=scale, gqa=G)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * KV, nk),
+            in_specs=[
+                pl.BlockSpec((1, G, d), lambda bh, ki, nv_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, bk, d), lambda bh, ki, nv_ref: (bh, ki, 0)),
+                pl.BlockSpec((1, bk, d), lambda bh, ki, nv_ref: (bh, ki, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, G, d), lambda bh, ki, nv_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, G, 1), lambda bh, ki, nv_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, G, 1), lambda bh, ki, nv_ref: (bh, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KV, G, d), q.dtype),
+            jax.ShapeDtypeStruct((B * KV, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nv, qf, kf, vf)
+    out = out.reshape(B, H, d)[:, :, :hd]
+    return out, m.reshape(B, H), l.reshape(B, H)
+
+
+def combine_partials(outs, ms, ls):
+    """Merge per-shard decode partials along a leading shard axis.
+
+    outs: (n, B, H, hd) locally-normalized outputs; ms/ls: (n, B, H).
+    Returns the exact global attention output (B, H, hd)."""
+    m_glob = ms.max(axis=0)                              # (B, H)
+    w = jnp.exp(ms - m_glob[None]) * ls                  # un-normalize
+    denom = w.sum(axis=0)
+    num = (outs * w[..., None]).sum(axis=0)
+    return num / jnp.maximum(denom, 1e-37)[..., None]

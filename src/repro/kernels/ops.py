@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernel bodies execute in Python for
+validation) and False on TPU, where the kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cache_sim import cache_sim
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.flash_decode import combine_partials, flash_decode_tpu
+from repro.kernels.page_gather import page_gather, page_scatter
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cache_sim_op(pages, writes, *, num_sets, ways, policy="lru", chunk=512):
+    return cache_sim(pages, writes, num_sets=num_sets, ways=ways,
+                     policy=policy, chunk=chunk,
+                     interpret=_interpret_default())
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=_interpret_default())
+
+
+def flash_decode_op(q, k_cache, v_cache, n_valid, *, bk=512):
+    return flash_decode_tpu(q, k_cache, v_cache, n_valid, bk=bk,
+                            interpret=_interpret_default())
+
+
+def _as3d(x):
+    """Kernels address pages as (P, R, C); flatten any trailing page shape."""
+    if x.ndim == 3:
+        return x, None
+    shape = x.shape
+    r = shape[1] if x.ndim > 1 else 1
+    c = 1
+    for d in shape[2:]:
+        c *= d
+    return x.reshape(shape[0], r, max(c, 1)), shape
+
+
+def page_gather_op(pool, table):
+    pool3, orig = _as3d(pool)
+    out = page_gather(pool3, table, interpret=_interpret_default())
+    if orig is not None:
+        out = out.reshape((out.shape[0],) + orig[1:])
+    return out
+
+
+def page_scatter_op(pool, table, pages):
+    pool3, orig = _as3d(pool)
+    pages3, _ = _as3d(pages)
+    out = page_scatter(pool3, table, pages3, interpret=_interpret_default())
+    return out.reshape(orig) if orig is not None else out
+
+
+__all__ = ["cache_sim_op", "flash_attention_op", "flash_decode_op",
+           "combine_partials", "page_gather_op", "page_scatter_op"]

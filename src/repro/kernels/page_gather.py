@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: page gather/scatter for the tiered KV/expert store.
+
+The TPU-side half of the paper's DRAM-cache fill path: given a page table
+(produced by the CXL-SSD-Sim replacement policies in ``repro.tiered``),
+gather the referenced pages from the resident pool into a dense output —
+one page per grid step, with the page index delivered by scalar prefetch so
+the DMA source address is known before the body runs (Pallas pipelines the
+copies).  ``page_scatter`` is the eviction path (dense -> pool).
+
+A "page" here is one KV page: (page_tokens, kv_heads * head_dim * 2) — the
+4 KB-flash-page analogue at the model level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(table_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool: jnp.ndarray, table: jnp.ndarray, *,
+                interpret: bool = True) -> jnp.ndarray:
+    """pool: (P, R, C) resident pages; table: (n,) int32 page indices.
+    Returns (n, R, C) gathered pages."""
+    P, R, C = pool.shape
+    n = table.shape[0]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, R, C), lambda i, table: (table[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, R, C), lambda i, table: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, R, C), pool.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pool)
+
+
+def _scatter_kernel(table_ref, pages_ref, pool_in_ref, pool_out_ref):
+    pool_out_ref[...] = pages_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_scatter(pool: jnp.ndarray, table: jnp.ndarray, pages: jnp.ndarray, *,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Write pages (n, R, C) into pool slots table (n,); returns new pool.
+    (Eviction/fill path of the HBM page cache.)  The pool is aliased
+    input->output so untouched slots carry over without a copy."""
+    P, R, C = pool.shape
+    n = table.shape[0]
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, R, C), lambda i, table: (i, 0, 0)),
+                pl.BlockSpec((1, R, C), lambda i, table: (table[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, R, C), lambda i, table: (table[i], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, R, C), pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(table.astype(jnp.int32), pages, pool)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache.trace_sim import _run_trace
+from repro.models.layers import attention_ref, decode_attention
+
+
+def cache_sim_ref(pages, writes, *, num_sets: int, ways: int,
+                  policy: str = "lru"):
+    """lax.scan cache replay (validated against the Python policy objects)."""
+    hits, evicts, _ = _run_trace(jnp.asarray(pages, jnp.int32),
+                                 jnp.asarray(writes, bool),
+                                 num_sets, ways, policy == "lru")
+    return hits, evicts
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """O(S^2) full-softmax attention (supports GQA + SWA + cross lengths)."""
+    if q.shape[1] == k.shape[1] or causal:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, n_valid):
+    """Masked full-length decode attention + its (m, l) statistics."""
+    out = decode_attention(q, k_cache, v_cache, n_valid)
+    B, Smax, KV, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(Smax)[None, :] < jnp.asarray(n_valid).reshape(-1, 1)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1).reshape(B, H)
+    l = jnp.exp(s - s.max(axis=-1, keepdims=True)).sum(-1).reshape(B, H)
+    return out, m, l
+
+
+def page_gather_ref(pool, table):
+    return jnp.take(pool, table, axis=0)
+
+
+def page_scatter_ref(pool, table, pages):
+    return pool.at[table].set(pages)

@@ -1,0 +1,159 @@
+"""Roofline analysis over the dry-run artifacts (single-pod mesh).
+
+Per (arch x shape) cell, from ``results/dryrun/*_single.json``:
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per chip, seconds)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_wire_bytes / ICI_bw
+
+``cost_analysis()`` on the SPMD-partitioned module is already per-device;
+collective wire bytes come from the HLO parse in dryrun.py (ring cost
+model).  The dominant term is the bottleneck; roofline fraction =
+compute_term / max(all terms) (how close the cell is to being
+compute-bound at peak).  MODEL_FLOPS / HLO_FLOPs flags remat/redundancy
+waste (MODEL_FLOPS is the analytic 6*N*D / 2*N*D + attention count).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16, per chip (TPU v5e-class)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def analytic_memory_bytes(rec: dict) -> float:
+    """Fusion-aware analytic HBM traffic per device per step (lower bound).
+
+    ``cost_analysis()['bytes accessed']`` counts every HLO op's operands
+    unfused (~50x real traffic on fused TPU programs), so the memory term
+    used for bottleneck classification comes from this explicit model:
+
+      train:   3x weight reads (fwd + remat-fwd + bwd) + grad r/w +
+               f32 moment r/w + layer checkpoints (w + r + recompute w) +
+               flash KV re-streaming per q-tile (x2 for bwd) + logits
+      prefill: 1x weights + activations + KV streaming + logits
+      decode:  1x weights + full KV-cache read + state r/w   (= the
+               analytic state bytes, which decode must touch once)
+    """
+    from repro.configs.base import SHAPES, get_arch
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    tp = 16
+    dp = chips // tp
+    state = rec.get("analytic_state_bytes_per_device", 0)
+
+    if shape.kind == "decode":
+        return float(state)  # one pass over params + KV + state
+
+    params_dev = cfg.param_count() * 2 / tp          # bf16, TP-sharded
+    B_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+    D = cfg.d_model
+    L = cfg.n_layers
+    act_ckpt = L * B_loc * S * D * 2                  # bf16 layer carries
+    hd = cfg.resolved_head_dim
+    nq = max(S // max(cfg.attn_block, 1), 1)
+    kv_layer = 2 * B_loc * S * cfg.n_kv_heads * hd * 2 / tp
+    if cfg.swa_window:
+        nq = max(min(nq, cfg.swa_window // max(cfg.attn_block, 1) + 1), 1)
+    logits = B_loc * S * cfg.padded_vocab * 4 / tp
+
+    if shape.kind == "train":
+        n_active_dev = cfg.active_param_count() * 2 / tp
+        weights = 3 * n_active_dev + 2 * params_dev          # reads + grads
+        opt = 2 * 2 * cfg.param_count() * 4 / chips          # mu/nu r+w, ZeRO
+        acts = 3 * act_ckpt
+        kv = 2 * L * nq * kv_layer
+        return weights + opt + acts + kv + 4 * logits
+    # prefill
+    n_active_dev = cfg.active_param_count() * 2 / tp
+    return n_active_dev + act_ckpt + L * nq * kv_layer + logits
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "OK":
+        return None
+    ca = rec.get("cost_analysis") or {}
+    if not isinstance(ca, dict):
+        return None
+    corr = rec.get("corrected") or {}
+    flops_dev = float(corr.get("flops") or ca.get("flops", 0.0))
+    hlo_bytes_dev = float(corr.get("bytes") or ca.get("bytes accessed", 0.0))
+    coll = rec.get("collectives", {})
+    wire = float(corr.get("wire") or coll.get("total_wire_bytes", 0.0))
+    chips = rec["chips"]
+    mem_bytes_dev = analytic_memory_bytes(rec)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = mem_bytes_dev / HBM_BW
+    memory_s_upper = hlo_bytes_dev / HBM_BW
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    model_flops_dev = rec.get("model_flops_global", 0.0) / chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_s_upper": memory_s_upper,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "roofline_fraction": compute_s / bound_s if bound_s else 0.0,
+        "model_flops_dev": model_flops_dev,
+        "hlo_flops_dev": flops_dev,
+        "useful_flops_ratio": (model_flops_dev / flops_dev
+                               if flops_dev else 0.0),
+        "state_gib_dev": rec.get("analytic_state_bytes_per_device", 0) / 2**30,
+        "loop_corrected": bool(corr),
+        "collective_detail": {k: v for k, v in coll.items()
+                              if isinstance(v, dict)},
+    }
+
+
+def load_all(results_dir: str, mesh: str = "single") -> List[dict]:
+    rows = []
+    for f in sorted(Path(results_dir).glob(f"*_{mesh}.json")):
+        rec = json.loads(f.read_text())
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'roof%':>6s} {'useful%':>8s} "
+           f"{'GiB/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {100*r['roofline_fraction']:6.1f} "
+            f"{100*min(r['useful_flops_ratio'], 9.99):8.1f} "
+            f"{r['state_gib_dev']:8.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.results, args.mesh)
+    print(table(rows))
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

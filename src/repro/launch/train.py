@@ -1,0 +1,108 @@
+"""Training driver: config -> mesh -> jit'd train step -> loop with
+checkpointing, straggler watchdog, WSD schedule and preemption-safe restart.
+
+Examples:
+  # tiny CPU run (reduced config), a few hundred steps:
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --reduced \\
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+  # production lowering is exercised by repro.launch.dryrun; this driver
+  # runs the same step function on whatever devices exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_arch
+from repro.data.pipeline import ShardedLoader
+from repro.distributed.step import make_train_step
+from repro.distributed.straggler import StragglerWatchdog
+from repro.models.transformer import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.schedules import wsd_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    opt_state = adamw_init(params)
+    loader = ShardedLoader(cfg, args.seq, args.batch, seed=args.seed + 1)
+
+    lr_fn = wsd_schedule(args.lr, warmup_steps=max(args.steps // 20, 5),
+                         stable_steps=int(args.steps * 0.7),
+                         decay_steps=max(int(args.steps * 0.25), 1))
+    train_step = jax.jit(make_train_step(cfg, mesh=None, lr_fn=lr_fn,
+                                         adamw_cfg=AdamWConfig()),
+                         donate_argnums=(0, 1))
+
+    start_step = 0
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        (state, extra, start_step) = ckpt.restore(
+            {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        loader.restore(extra["loader"])
+        print(f"[train] resumed from step {start_step}")
+
+    watchdog = StragglerWatchdog()
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in loader.next().items()}
+        watchdog.start_step()
+        params, opt_state, loss = train_step(
+            params, opt_state, batch, jnp.asarray(step, jnp.int32))
+        loss = float(loss)
+        rep = watchdog.end_step()
+        losses.append(loss)
+        if rep.flagged:
+            print(f"[watchdog] step {step} slow: {rep.duration_s:.3f}s "
+                  f"(ewma {rep.ewma_s:.3f}s)"
+                  + (" -> EVICT ADVISED" if rep.evict_advised else ""))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"lr {float(lr_fn(step)):.2e} "
+                  f"({rep.duration_s:.2f}s/step)", flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step + 1, {"params": params, "opt": opt_state},
+                            extra={"loader": loader.state()})
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(args.steps, {"params": params, "opt": opt_state},
+                  extra={"loader": loader.state()})
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"[train] done: loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

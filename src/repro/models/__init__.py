@@ -1,0 +1,1 @@
+# Model zoo: layers, moe, ssm, transformer (top-level dispatch).

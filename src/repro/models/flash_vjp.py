@@ -1,0 +1,305 @@
+"""Flash attention with a custom VJP — O(S·d) residuals.
+
+Without this, differentiating the double-scan attention stashes every
+per-block f32 score matrix (the full S x S attention matrix): ~39 GB/device
+for a 4k x 16-batch minicpm layer.  The custom VJP saves only
+``(q, k, v, out, lse)`` and recomputes score blocks inside the backward
+scans — the standard flash-attention backward, here in pure JAX so it works
+under pjit/GSPMD on any mesh (the Pallas forward kernel shares its numerics).
+
+Layout mirrors :func:`repro.models.layers.flash_attention`:
+q (B, S, H, hd); k, v (B, Skv, KV, hd); GQA via H = KV * G.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _masks(q_pos, k_pos, Skv, causal, window):
+    m = (k_pos < Skv)[None, :]
+    if causal:
+        c = q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            c &= q_pos[:, None] - k_pos[None, :] < window
+        m = m & c
+    return m
+
+
+def _fwd_scan(q, k, v, causal, window, qb, kb, Skv):
+    """Returns (out, lse) with out (nq,B,KV,G,qb,hd), lse (nq,B,KV,G,qb)."""
+    nq = q.shape[0]
+    nk = k.shape[0]
+    B, KV, G, _, hd = q.shape[1:]
+    scale = hd ** -0.5
+
+    def outer(_, qi):
+        qblk, qidx = qi
+        q_pos = qidx * qb + jnp.arange(qb)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = kidx * kb + jnp.arange(kb)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk) * scale
+            s = jnp.where(_masks(q_pos, k_pos, Skv, causal, window)
+                          [None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                      (k, v, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return None, (out, lse)
+
+    _, (out, lse) = jax.lax.scan(outer, None, (q, jnp.arange(nq)))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_vjp(q, k, v, causal: bool = True, window: int = 0,
+                        q_block: int = 256, kv_block: int = 256):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_block, kv_block)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Triangular variant: iterate only the (q-block, kv-block) pairs the causal
+# (+ sliding-window) mask can reach, instead of masking a full nq x nk grid.
+# Halves causal attention FLOPs; makes SWA attention O(S * window).  The
+# pair list is static (host-computed); one scan runs over it with the
+# per-q-block (m, l, acc) stats as a full-size carry updated by
+# dynamic-slice.  See EXPERIMENTS.md §Perf (hillclimb #1).
+# --------------------------------------------------------------------------
+def _valid_pairs(nq: int, nk: int, qb: int, kb: int, causal: bool,
+                 window: int, S: int, Skv: int):
+    import numpy as _np
+    pairs = []
+    for qi in range(nq):
+        q_lo, q_hi = qi * qb, min(qi * qb + qb - 1, S - 1)
+        for ki in range(nk):
+            k_lo, k_hi = ki * kb, ki * kb + kb - 1
+            if k_lo >= Skv:
+                continue
+            if causal and k_lo > q_hi:
+                continue                    # fully above the diagonal
+            if causal and window > 0 and k_hi < q_lo - window + 1:
+                continue                    # fully outside the window
+            pairs.append((qi, ki))
+    arr = _np.asarray(pairs, _np.int32)
+    return arr[:, 0], arr[:, 1]
+
+
+def _tri_fwd_scan(q, k, v, causal, window, qb, kb, S, Skv):
+    nq, nk = q.shape[0], k.shape[0]
+    B, KV, G, _, hd = q.shape[1:]
+    scale = hd ** -0.5
+    qi_arr, ki_arr = _valid_pairs(nq, nk, qb, kb, causal, window, S, Skv)
+
+    def step(carry, pair):
+        m, l, acc = carry                      # (nq, B,KV,G,qb[,hd])
+        qi, ki = pair
+        qblk = jax.lax.dynamic_index_in_dim(q, qi, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(k, ki, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(v, ki, 0, keepdims=False)
+        q_pos = qi * qb + jnp.arange(qb)
+        k_pos = ki * kb + jnp.arange(kb)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk) * scale
+        s = jnp.where(_masks(q_pos, k_pos, Skv, causal, window)
+                      [None, None, None], s, NEG_INF)
+        mi = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(-1)
+        a_new = ai * corr[..., None] + jnp.einsum("bkgqc,bkcd->bkgqd", p, vblk)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    m0 = jnp.full((nq, B, KV, G, qb), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, KV, G, qb), jnp.float32)
+    a0 = jnp.zeros((nq, B, KV, G, qb, hd), jnp.float32)
+    if len(qi_arr) <= 64:
+        # unrolled: every block pair appears explicitly in the HLO, so the
+        # dry-run probe compiles count triangular FLOPs exactly
+        carry = (m0, l0, a0)
+        for qi, ki in zip(qi_arr.tolist(), ki_arr.tolist()):
+            carry, _ = step(carry, (jnp.int32(qi), jnp.int32(ki)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (jnp.asarray(qi_arr), jnp.asarray(ki_arr)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_tri(q, k, v, causal: bool = True, window: int = 0,
+                        q_block: int = 256, kv_block: int = 256):
+    out, _ = _tri_fwd(q, k, v, causal, window, q_block, kv_block)
+    return out
+
+
+def _tri_fwd(q, k, v, causal, window, q_block, kv_block):
+    qf, kf, vf, dims = _prep(q, k, v, q_block, kv_block)
+    B, S, Skv, H, KV, G, hd, qb, kb, nq, nk = dims
+    out_b, lse_b = _tri_fwd_scan(qf, kf, vf, causal, window, qb, kb, S, Skv)
+    out = out_b.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, hd)[:, :S]
+    return out.astype(q.dtype), (q, k, v, out_b, lse_b)
+
+
+def _tri_bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, out_b, lse_b = res
+    qf, kf, vf, dims = _prep(q, k, v, q_block, kv_block)
+    B, S, Skv, H, KV, G, hd, qb, kb, nq, nk = dims
+    scale = hd ** -0.5
+    pad_q = nq * qb - S
+    dof = jnp.pad(dout, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else dout
+    dof = dof.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5) \
+             .astype(jnp.float32)
+    delta = jnp.sum(dof * out_b, axis=-1)
+    qi_arr, ki_arr = _valid_pairs(nq, nk, qb, kb, causal, window, S, Skv)
+
+    def step(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair
+        qblk = jax.lax.dynamic_index_in_dim(qf, qi, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kf, ki, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vf, ki, 0, keepdims=False)
+        doblk = jax.lax.dynamic_index_in_dim(dof, qi, 0, keepdims=False)
+        lseblk = jax.lax.dynamic_index_in_dim(lse_b, qi, 0, keepdims=False)
+        dblk = jax.lax.dynamic_index_in_dim(delta, qi, 0, keepdims=False)
+        q_pos = qi * qb + jnp.arange(qb)
+        k_pos = ki * kb + jnp.arange(kb)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk) * scale
+        mask = _masks(q_pos, k_pos, Skv, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lseblk[..., None])
+        dvi = jnp.einsum("bkgqc,bkgqd->bkcd", p, doblk)
+        dp = jnp.einsum("bkgqd,bkcd->bkgqc", doblk, vblk)
+        ds = p * (dp - dblk[..., None]) * scale
+        dki = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qblk)
+        dqi = jnp.einsum("bkgqc,bkcd->bkgqd", ds, kblk)
+        dq = dq.at[qi].add(dqi)
+        dk = dk.at[ki].add(dki)
+        dv = dv.at[ki].add(dvi)
+        return (dq, dk, dv), None
+
+    dq0 = jnp.zeros_like(qf)
+    dk0 = jnp.zeros((nk, B, KV, kb, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, B, KV, kb, hd), jnp.float32)
+    if len(qi_arr) <= 64:
+        carry = (dq0, dk0, dv0)
+        for qi, ki in zip(qi_arr.tolist(), ki_arr.tolist()):
+            carry, _ = step(carry, (jnp.int32(qi), jnp.int32(ki)))
+        dq, dk, dv = carry
+    else:
+        (dq, dk, dv), _ = jax.lax.scan(
+            step, (dq0, dk0, dv0), (jnp.asarray(qi_arr), jnp.asarray(ki_arr)))
+
+    dq = dq.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, hd)[:, :S]
+    dk = dk.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, KV, hd)[:, :Skv]
+    dv = dv.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, KV, hd)[:, :Skv]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_tri.defvjp(_tri_fwd, _tri_bwd)
+
+
+def _prep(q, k, v, qb, kb):
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qb = min(qb, S)
+    kb = min(kb, Skv)
+    pad_q = (-S) % qb
+    pad_k = (-Skv) % kb
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = (S + pad_q) // qb, (Skv + pad_k) // kb
+    qf = qp.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5) \
+           .astype(jnp.float32)
+    kf = kp.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4) \
+           .astype(jnp.float32)
+    vf = vp.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4) \
+           .astype(jnp.float32)
+    return qf, kf, vf, (B, S, Skv, H, KV, G, hd, qb, kb, nq, nk)
+
+
+def _flash_fwd(q, k, v, causal, window, q_block, kv_block):
+    qf, kf, vf, dims = _prep(q, k, v, q_block, kv_block)
+    B, S, Skv, H, KV, G, hd, qb, kb, nq, nk = dims
+    out_b, lse_b = _fwd_scan(qf, kf, vf, causal, window, qb, kb, Skv)
+    out = out_b.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, hd)[:, :S]
+    return out.astype(q.dtype), (q, k, v, out_b, lse_b)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, out_b, lse_b = res
+    qf, kf, vf, dims = _prep(q, k, v, q_block, kv_block)
+    B, S, Skv, H, KV, G, hd, qb, kb, nq, nk = dims
+    scale = hd ** -0.5
+    pad_q = nq * qb - S
+    dof = jnp.pad(dout, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else dout
+    dof = dof.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5) \
+             .astype(jnp.float32)
+    # delta_i = sum_d dout_i * out_i
+    delta = jnp.sum(dof * out_b, axis=-1)              # (nq,B,KV,G,qb)
+
+    def kv_step(dq_acc, ki):
+        kblk, vblk, kidx = ki
+        k_pos = kidx * kb + jnp.arange(kb)
+
+        def q_step(carry, qi):
+            dkb, dvb = carry
+            qblk, doblk, lseblk, dblk, dqblk, qidx = qi
+            q_pos = qidx * qb + jnp.arange(qb)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk) * scale
+            mask = _masks(q_pos, k_pos, Skv, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])         # (B,KV,G,qb,kb)
+            dvb = dvb + jnp.einsum("bkgqc,bkgqd->bkcd", p, doblk)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", doblk, vblk)
+            ds = p * (dp - dblk[..., None]) * scale
+            dkb = dkb + jnp.einsum("bkgqc,bkgqd->bkcd", ds, qblk)
+            dqblk = dqblk + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kblk)
+            return (dkb, dvb), dqblk
+
+        dk0 = jnp.zeros((B, KV, kb, hd), jnp.float32)
+        dv0 = jnp.zeros((B, KV, kb, hd), jnp.float32)
+        (dkb, dvb), dq_acc = jax.lax.scan(
+            q_step, (dk0, dv0),
+            (qf, dof, lse_b, delta, dq_acc, jnp.arange(nq)))
+        return dq_acc, (dkb, dvb)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0, (kf, vf, jnp.arange(nk)))
+
+    dq = dq.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, hd)[:, :S]
+    dk = dk.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, KV, hd)[:, :Skv]
+    dv = dv.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, KV, hd)[:, :Skv]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_vjp.defvjp(_flash_fwd, _flash_bwd)

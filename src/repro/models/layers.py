@@ -1,0 +1,199 @@
+"""Core transformer layers in pure JAX: RMSNorm, RoPE, GQA attention with
+chunked (flash-style) online softmax, SWA masking, SwiGLU MLP.
+
+Attention is written as a double ``lax.scan`` over query/key blocks so the
+HLO stays O(1) in sequence length and peak memory stays
+O(q_block x kv_block) — the property the multi-pod dry-run needs at 32 k
+context.  The Pallas kernel in :mod:`repro.kernels.flash_attention` is the
+TPU performance path; this is the reference/fallback used by default in the
+pure-JAX model (numerics validated against each other in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def _block_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int) -> jnp.ndarray:
+    """(q_block, kv_block) causal (+ optional sliding-window) mask."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        causal &= q_pos[:, None] - k_pos[None, :] < window
+    return causal
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 256, kv_block: int = 256,
+                    impl: str = "masked") -> jnp.ndarray:
+    """Chunked attention with online softmax and an O(S*d)-residual custom
+    VJP (see repro.models.flash_vjp) — the differentiable production path.
+    ``impl='triangular'`` skips causally-unreachable block pairs."""
+    from repro.models.flash_vjp import flash_attention_tri, flash_attention_vjp
+    if impl == "triangular" and causal:
+        return flash_attention_tri(q, k, v, causal, window, q_block, kv_block)
+    return flash_attention_vjp(q, k, v, causal, window, q_block, kv_block)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block"))
+def flash_attention_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, window: int = 0,
+                         q_block: int = 256, kv_block: int = 256) -> jnp.ndarray:
+    """Chunked attention with online softmax (autodiff-naive variant kept as
+    a cross-check oracle; backward stashes per-block scores).
+
+    q: (B, S, H, hd);  k, v: (B, S, KV, hd) with H % KV == 0 (GQA).
+    Returns (B, S, H, hd).  Peak memory O(B*H*q_block*kv_block).
+    """
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, Skv)
+    pad_q = (-S) % q_block
+    pad_k = (-Skv) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = S + pad_q, Skv + pad_k
+    nq, nk = Sq // q_block, Sk // kv_block
+
+    # (nq, B, KV, G, qb, hd)
+    qb = q.reshape(B, nq, q_block, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nk, B, KV, kb, hd)
+    kb = k.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 3, 2, 4)
+
+    def outer(_, qi):
+        qblk, qidx = qi                                  # (B,KV,G,qb,hd), scalar
+        q_pos = qidx * q_block + jnp.arange(q_block)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = kidx * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            if causal:
+                mask = _block_mask(q_pos, k_pos, window)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            # padding keys masked out
+            s = jnp.where((k_pos < Skv)[None, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return None, out
+
+    _, ob = jax.lax.scan(outer, None, (qb, jnp.arange(nq)))
+    # (nq, B, KV, G, qb, hd) -> (B, S, H, hd)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """O(S^2)-memory reference attention (tests / tiny shapes only)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        pos = jnp.arange(S)
+        mask = _block_mask(pos, pos, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: int = 0):
+    """Single-token decode attention against a (possibly padded) KV cache.
+
+    q: (B, H, hd); k_cache/v_cache: (B, Smax, KV, hd); cur_len: () or (B,)
+    int32 — number of valid cache entries (the new token's KV must already
+    be written at index cur_len-1).  Returns (B, H, hd).
+    """
+    B, Smax, KV, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(Smax)
+    cur = jnp.asarray(cur_len, jnp.int32)
+    if cur.ndim == 0:
+        cur = jnp.full((B,), cur)
+    valid = pos[None, :] < cur[:, None]
+    if window > 0:
+        valid &= pos[None, :] >= cur[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ------------------------------------------------------------------ embeds
+def embed_tokens(table: jnp.ndarray, token_ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, token_ids, axis=0)
+
+
+def embed_codebooks(tables: jnp.ndarray, token_grid: jnp.ndarray) -> jnp.ndarray:
+    """MusicGen-style: tables (nq, V, D), token_grid (B, S, nq) -> summed."""
+    nq = tables.shape[0]
+    embs = [jnp.take(tables[i], token_grid[..., i], axis=0) for i in range(nq)]
+    return functools.reduce(jnp.add, embs)

@@ -1,0 +1,215 @@
+"""Mamba2 — SSD (state-space duality) layer in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the recurrence is computed as
+a masked (attention-like) matmul, across chunks a short ``lax.scan`` carries
+the (B, H, P, N) state.  This is the TPU-friendly formulation — the chunk
+matmuls hit the MXU, the scan is O(S/chunk).
+
+Decode is the O(1) recurrence:
+    state = exp(dt*A) * state + dt * B ⊗ x ;  y = C·state + D*x
+which is why SSM archs are the ones eligible for the 500k-context shape.
+
+Layout conventions:
+    x (inner activations): (B, S, H, P)   H = d_inner/P heads, P = head_dim
+    B/C (input/output proj of the state): (B, S, N)   (n_groups == 1)
+    dt: (B, S, H);  A: (H,) (negative);  state: (B, H, P, N)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import rms_norm
+
+NEG_INF = -1e30
+
+
+class SSMParams(NamedTuple):
+    """Projections are SPLIT (z/x/B/C/dt separately) rather than one fused
+    in_proj so tensor parallelism can shard the d_in-sized pieces over the
+    model axis while keeping the small B/C/dt pieces replicated."""
+
+    in_z: jnp.ndarray          # (D, d_in)
+    in_x: jnp.ndarray          # (D, d_in)
+    in_B: jnp.ndarray          # (D, N)
+    in_C: jnp.ndarray          # (D, N)
+    in_dt: jnp.ndarray         # (D, H)
+    conv_x: jnp.ndarray        # (K, d_in) depthwise causal conv
+    conv_B: jnp.ndarray        # (K, N)
+    conv_C: jnp.ndarray        # (K, N)
+    conv_bx: jnp.ndarray       # (d_in,)
+    conv_bB: jnp.ndarray       # (N,)
+    conv_bC: jnp.ndarray       # (N,)
+    A_log: jnp.ndarray         # (H,)
+    D_skip: jnp.ndarray        # (H,)
+    dt_bias: jnp.ndarray       # (H,)
+    norm_w: jnp.ndarray        # (d_in,) gated RMSNorm
+    out_proj: jnp.ndarray      # (d_in, D)
+
+
+def init_ssm_params(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> SSMParams:
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    N = cfg.d_state
+    ks = jax.random.split(key, 6)
+    scale = d_model ** -0.5
+    rnd = lambda k, shape, s: (jax.random.normal(k, shape) * s).astype(dtype)
+    return SSMParams(
+        in_z=rnd(ks[0], (d_model, d_in), scale),
+        in_x=rnd(ks[1], (d_model, d_in), scale),
+        in_B=rnd(ks[2], (d_model, N), scale),
+        in_C=rnd(ks[3], (d_model, N), scale),
+        in_dt=rnd(ks[4], (d_model, H), scale),
+        conv_x=rnd(ks[5], (cfg.conv_kernel, d_in), 0.1),
+        conv_B=rnd(jax.random.fold_in(key, 7), (cfg.conv_kernel, N), 0.1),
+        conv_C=rnd(jax.random.fold_in(key, 8), (cfg.conv_kernel, N), 0.1),
+        conv_bx=jnp.zeros((d_in,), dtype),
+        conv_bB=jnp.zeros((N,), dtype),
+        conv_bC=jnp.zeros((N,), dtype),
+        A_log=jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype),
+        D_skip=jnp.ones((H,), dtype),
+        dt_bias=jnp.full((H,), -2.0, dtype),   # softplus(-2) ~ 0.12
+        norm_w=jnp.ones((d_in,), dtype),
+        out_proj=rnd(jax.random.fold_in(key, 9), (d_in, d_model), d_in ** -0.5),
+    )
+
+
+def _split_proj(u, p: SSMParams, d_in: int, N: int, H: int):
+    return (u @ p.in_z, u @ p.in_x, u @ p.in_B, u @ p.in_C, u @ p.in_dt)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along S.  x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum_exp(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (B, L, H) -> (B, H, L, L) with [l, s] = exp(sum_{r=s+1..l} a_r),
+    masked to s <= l."""
+    cs = jnp.cumsum(a, axis=1)                       # (B, L, H)
+    diff = cs[:, :, None, :] - cs[:, None, :, :]     # (B, L, S, H): cs[l]-cs[s]
+    L = a.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    diff = jnp.where(mask[None, :, :, None], diff, NEG_INF)
+    return jnp.exp(diff).transpose(0, 3, 1, 2)       # (B, H, L, L)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ssd_forward(u: jnp.ndarray, p: SSMParams, cfg: SSMConfig) -> jnp.ndarray:
+    """Chunked SSD over a full sequence. u: (B, S, D) -> (B, S, D)."""
+    Bsz, S, D = u.shape
+    d_in = cfg.expand * D
+    P = cfg.head_dim
+    H = d_in // P
+    N = cfg.d_state
+    L = min(cfg.chunk, S)
+    pad = (-S) % L
+    z, x, Bm, Cm, dt = _split_proj(u, p, d_in, N, H)
+
+    x = jax.nn.silu(_causal_conv(x, p.conv_x, p.conv_bx))
+    Bm = jax.nn.silu(_causal_conv(Bm, p.conv_B, p.conv_bB))
+    Cm = jax.nn.silu(_causal_conv(Cm, p.conv_C, p.conv_bC))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias.astype(jnp.float32))
+    A = -jnp.exp(p.A_log.astype(jnp.float32))        # (H,)
+
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+
+    xh = x.reshape(Bsz, nc, L, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    a = dtc * A                                      # (B, nc, L, H)
+
+    def chunk_step(h_prev, inputs):
+        xk, Bk, Ck, ak, dk = inputs                  # (B,L,H,P),(B,L,N),(B,L,N),(B,L,H),(B,L,H)
+        cs = jnp.cumsum(ak, axis=1)                  # (B,L,H)
+        decay = _segsum_exp(ak)                      # (B,H,L,S)
+        CB = jnp.einsum("bln,bsn->bls", Ck, Bk)      # (B,L,S)
+        W = CB[:, None] * decay * dk.transpose(0, 2, 1)[:, :, None, :]  # (B,H,L,S)
+        y_diag = jnp.einsum("bhls,bshp->blhp", W, xk)
+        # contribution of the carried state
+        state_decay = jnp.exp(cs)                    # (B,L,H)
+        y_off = jnp.einsum("bln,bhpn->blhp", Ck, h_prev) * state_decay[..., None]
+        # new chunk state
+        end_decay = jnp.exp(cs[:, -1:, :] - cs)      # (B,L,H)
+        S_new = jnp.einsum("blh,bln,blhp->bhpn", end_decay * dk, Bk, xk)
+        h = h_prev * jnp.exp(cs[:, -1])[:, :, None, None] + S_new
+        return h, y_diag + y_off
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (xh.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3),
+          Cc.transpose(1, 0, 2, 3), a.transpose(1, 0, 2, 3),
+          dtc.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(chunk_step, h0, xs)         # (nc, B, L, H, P)
+
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, H, P)[:, :S]
+    y = y + x.reshape(Bsz, Sp, H, P)[:, :S] * p.D_skip.astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p.norm_w)
+    return (y @ p.out_proj.astype(y.dtype)).astype(u.dtype)
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray             # (B, H, P, N)
+    conv_buf: jnp.ndarray      # (B, K-1, d_in + 2N) trailing conv inputs
+                               # (x channels first, then B, then C)
+
+
+def init_ssm_state(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.float32) -> SSMState:
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    return SSMState(
+        h=jnp.zeros((batch, H, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv_buf=jnp.zeros((batch, cfg.conv_kernel - 1, d_in + 2 * cfg.d_state),
+                           dtype),
+    )
+
+
+def ssd_decode_step(u: jnp.ndarray, state: SSMState, p: SSMParams,
+                    cfg: SSMConfig) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token recurrence. u: (B, D) -> (B, D), new state."""
+    Bsz, D = u.shape
+    d_in = cfg.expand * D
+    P = cfg.head_dim
+    H = d_in // P
+    N = cfg.d_state
+
+    z, x, Bm, Cm, dt = _split_proj(u, p, d_in, N, H)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)      # (B, C)
+    window = jnp.concatenate([state.conv_buf, xbc[:, None]], axis=1)  # (B,K,C)
+    conv_w = jnp.concatenate([p.conv_x, p.conv_B, p.conv_C], axis=-1)
+    conv_b = jnp.concatenate([p.conv_bx, p.conv_bB, p.conv_bC], axis=-1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b
+    xbc = jax.nn.silu(conv_out)
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias.astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p.A_log.astype(jnp.float32))
+    xh = x.reshape(Bsz, H, P).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                             # (B,H)
+    h = state.h * dA[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p.D_skip.astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p.norm_w)
+    out = (y @ p.out_proj.astype(y.dtype)).astype(u.dtype)
+    new_state = SSMState(h=h, conv_buf=window[:, 1:])
+    return out, new_state

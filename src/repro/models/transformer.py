@@ -1,0 +1,491 @@
+"""Top-level model: init / forward / decode for all six architecture
+families (dense, moe, ssm, hybrid, vlm, audio).
+
+Layer parameters are STACKED along a leading ``n_layers`` axis and the
+forward pass is a ``jax.lax.scan`` over that axis, so the lowered HLO is
+O(1) in depth — a hard requirement for compiling 100-layer 90 B configs on
+this machine and for keeping dry-run compile times sane.  VLM models scan
+over *super-blocks* (``cross_attn_every`` self layers + 1 cross layer) to
+stay homogeneous.
+
+The KV cache for decode is a ring buffer of ``min(context, window)`` slots:
+sliding-window archs therefore hold O(window) KV in HBM while the full
+history lives in the tiered store (the paper's DRAM-cache-over-SSD pattern;
+see repro.tiered).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.moe import MoEParams, init_moe_params, moe_ffn_local, moe_ffn_sharded
+from repro.models.ssm import (SSMParams, SSMState, init_ssm_params,
+                              init_ssm_state, ssd_decode_step, ssd_forward)
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    """Distribution context for shard_map islands (None => single device)."""
+    mesh: Any
+    dp_axes: Tuple[str, ...]
+    tp_axis: str
+    # long-context decode with tiny batch: replicate batch over dp, shard
+    # only the KV sequence axis over tp
+    batch_replicated: bool = False
+    # decode-time MoE layout: expert weights resident (tp x dp sharded),
+    # tokens gathered — see repro.models.moe.moe_ffn_sharded
+    resident_experts: bool = False
+
+
+# ----------------------------------------------------------------- init
+def _init_attn(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(kq, (d, cfg.n_heads * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, cfg.n_kv_heads * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, cfg.n_kv_heads * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (cfg.n_heads * hd, d))
+               * (cfg.n_heads * hd) ** -0.5).astype(dtype),
+    }
+
+
+def _init_mlp(key, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(kg, (d, f)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ku, (d, f)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(kd, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def _init_block(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    blk: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        blk["ln1"] = jnp.ones((d,), dtype)
+        blk["ssm"] = init_ssm_params(key, d, cfg.ssm, dtype)
+        return blk
+    k1, k2, k3 = jax.random.split(key, 3)
+    blk["ln1"] = jnp.ones((d,), dtype)
+    blk["ln2"] = jnp.ones((d,), dtype)
+    blk.update(_init_attn(k1, cfg, dtype))
+    if cfg.family == "hybrid":
+        blk["ssm"] = init_ssm_params(k3, d, cfg.ssm, dtype)
+        blk["norm_attn"] = jnp.ones((d,), dtype)
+        blk["norm_ssm"] = jnp.ones((d,), dtype)
+    if cfg.moe is not None:
+        blk["moe"] = init_moe_params(k2, d, cfg.moe, dtype)
+    elif cfg.d_ff:
+        blk.update(_init_mlp(k2, cfg, dtype))
+    return blk
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.padded_vocab
+    ke, kl, kh, kc = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.n_codebooks:
+        params["embed"] = (jax.random.normal(
+            ke, (cfg.n_codebooks, V, d)) * 0.02).astype(dtype)
+        params["lm_head"] = (jax.random.normal(
+            kh, (cfg.n_codebooks, d, V)) * d ** -0.5).astype(dtype)
+    else:
+        params["embed"] = (jax.random.normal(ke, (V, d)) * 0.02).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(kh, (d, V)) * d ** -0.5).astype(dtype)
+    params["final_norm"] = jnp.ones((d,), dtype)
+
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_block(k, cfg, dtype))(layer_keys)
+
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        cross_keys = jax.random.split(kc, n_cross)
+
+        def _init_cross(k):
+            blk = _init_attn(k, cfg, dtype)
+            blk["ln"] = jnp.ones((d,), dtype)
+            blk["gate"] = jnp.zeros((1,), dtype)  # gated cross-attn (llama3.2)
+            return blk
+
+        params["cross"] = jax.vmap(_init_cross)(cross_keys)
+        # reshape self blocks into (n_cross, cross_every, ...) super-blocks
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape((n_cross, cfg.cross_attn_every) + x.shape[1:]),
+            params["blocks"])
+    return params
+
+
+# -------------------------------------------------------------- forward
+def _attn_forward(x, blk, cfg: ArchConfig, positions):
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ blk["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ blk["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ blk["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.flash_attention(q, k, v, causal=True, window=cfg.swa_window,
+                          q_block=cfg.attn_block, kv_block=cfg.attn_block,
+                          impl=cfg.attn_impl)
+    return o.reshape(B, S, cfg.n_heads * hd) @ blk["wo"]
+
+
+def _cross_attn_forward(x, blk, cfg: ArchConfig, frontend):
+    """x: (B, S, D) attends over frontend embeds (B, T_img, D)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    xn = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    q = (xn @ blk["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (frontend @ blk["wk"]).reshape(B, -1, cfg.n_kv_heads, hd)
+    v = (frontend @ blk["wv"]).reshape(B, -1, cfg.n_kv_heads, hd)
+    o = L.flash_attention(q, k, v, causal=False,
+                          q_block=cfg.attn_block, kv_block=cfg.attn_block)
+    o = o.reshape(B, S, cfg.n_heads * hd) @ blk["wo"]
+    return x + jnp.tanh(blk["gate"]) * o
+
+
+def _ffn_forward(x, blk, cfg: ArchConfig, ctx: Optional[MeshCtx]):
+    if cfg.moe is not None:
+        if ctx is not None:
+            y, aux = moe_ffn_sharded(x, blk["moe"], cfg.moe,
+                                     ctx.mesh, ctx.dp_axes, ctx.tp_axis,
+                                     batch_replicated=ctx.batch_replicated,
+                                     resident_experts=ctx.resident_experts)
+        else:
+            B, S, D = x.shape
+            y, aux = moe_ffn_local(x.reshape(-1, D), blk["moe"], cfg.moe)
+            y = y.reshape(B, S, D)
+        return y, aux
+    if cfg.d_ff:
+        return L.swiglu(x, blk["w_gate"], blk["w_up"], blk["w_down"]), 0.0
+    return jnp.zeros_like(x), 0.0
+
+
+def _block_forward(x, blk, cfg: ArchConfig, positions, ctx: Optional[MeshCtx]):
+    """One decoder block (self-attn/ssm/hybrid + FFN). Returns (x, aux)."""
+    aux = 0.0
+    if cfg.family == "ssm":
+        h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        x = x + ssd_forward(h, blk["ssm"], cfg.ssm)
+        return x, aux
+    h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a = _attn_forward(h, blk, cfg, positions)
+        s = ssd_forward(h, blk["ssm"], cfg.ssm)
+        mixed = 0.5 * (L.rms_norm(a, blk["norm_attn"], cfg.norm_eps)
+                       + L.rms_norm(s, blk["norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+    else:
+        x = x + _attn_forward(h, blk, cfg, positions)
+    h2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    y, aux = _ffn_forward(h2, blk, cfg, ctx)
+    return x + y, aux
+
+
+def _embed(params, cfg: ArchConfig, tokens):
+    if cfg.n_codebooks:
+        return L.embed_codebooks(params["embed"], tokens)
+    return L.embed_tokens(params["embed"], tokens)
+
+
+def _unembed(params, cfg: ArchConfig, x):
+    if cfg.n_codebooks:
+        return jnp.einsum("bsd,qdv->bsqv", x, params["lm_head"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            ctx: Optional[MeshCtx] = None, remat: bool = True,
+            unroll: bool = False, remat_policy: Optional[str] = None):
+    """Full-sequence forward. batch['tokens']: (B, S[,nq]) int32; vlm batches
+    also carry batch['frontend'] (B, T_img, D).  Returns (logits, aux_loss).
+
+    ``unroll=True`` replaces the layer scans with Python loops — used by the
+    dry-run probe compiles, because XLA cost analysis counts a while-loop
+    body once regardless of trip count."""
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+
+    def _constrain(x):
+        if ctx is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        b = None if ctx.batch_replicated else ctx.dp_axes
+        return jax.lax.with_sharding_constraint(x, P(b, None, None))
+
+    x = _constrain(x)
+
+    def self_block(x, blk):
+        x, aux = _block_forward(x, blk, cfg, positions, ctx)
+        return _constrain(x), aux
+
+    policy = None
+    if remat_policy == "dots":
+        # save matmul results without batch dims (weight-stationary values):
+        # the backward pass then re-uses them instead of recomputing — which
+        # under FSDP also skips the remat-time weight re-gather (§Perf A#5)
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    body = (jax.checkpoint(self_block, policy=policy) if remat
+            else self_block)
+
+    if cfg.cross_attn_every:
+        frontend = batch["frontend"]
+
+        def super_block(x, blks):
+            self_stack, cross_blk = blks
+            if unroll:
+                auxs = []
+                for i in range(cfg.cross_attn_every):
+                    x, a = body(x, jax.tree.map(lambda p: p[i], self_stack))
+                    auxs.append(a)
+                aux = jnp.asarray(auxs).sum()
+            else:
+                x, aux = jax.lax.scan(body, x, self_stack)
+                aux = aux.sum()
+            x = _cross_attn_forward(x, cross_blk, cfg, frontend)
+            return x, aux
+
+        sb = (jax.checkpoint(super_block, policy=policy) if remat
+              else super_block)
+        if unroll:
+            n_groups = jax.tree.leaves(params["blocks"])[0].shape[0]
+            auxs = []
+            for g in range(n_groups):
+                x, a = sb(x, (jax.tree.map(lambda p: p[g], params["blocks"]),
+                              jax.tree.map(lambda p: p[g], params["cross"])))
+                auxs.append(a)
+            auxs = jnp.asarray(auxs)
+        else:
+            x, auxs = jax.lax.scan(sb, x, (params["blocks"], params["cross"]))
+    elif unroll:
+        auxs = []
+        for i in range(cfg.n_layers):
+            x, a = body(x, jax.tree.map(lambda p: p[i], params["blocks"]))
+            auxs.append(a)
+        auxs = jnp.asarray(auxs)
+    else:
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), jnp.sum(auxs)
+
+
+# --------------------------------------------------------------- decode
+def kv_cache_len(cfg: ArchConfig, context_len: int) -> int:
+    if cfg.swa_window:
+        return min(context_len, cfg.swa_window)
+    return context_len
+
+
+def init_decode_state(params, cfg: ArchConfig, batch: int, context_len: int,
+                      dtype=jnp.float32,
+                      frontend: Optional[jnp.ndarray] = None) -> Dict[str, Any]:
+    """Allocate decode state: ring-buffer KV caches, SSM states, cross-KV."""
+    state: Dict[str, Any] = {"cur": jnp.zeros((), jnp.int32)}
+    hd = cfg.resolved_head_dim
+    Sc = kv_cache_len(cfg, context_len)
+    nl = cfg.n_layers
+    if cfg.n_heads:
+        kv_dt = jnp.int8 if cfg.kv_dtype == "int8" else dtype
+        state["k"] = jnp.zeros((nl, batch, Sc, cfg.n_kv_heads, hd), kv_dt)
+        state["v"] = jnp.zeros((nl, batch, Sc, cfg.n_kv_heads, hd), kv_dt)
+        if cfg.kv_dtype == "int8":
+            # per-(slot, kv-head) scales, fp16 (0.4% of the cache bytes)
+            state["k_scale"] = jnp.zeros((nl, batch, Sc, cfg.n_kv_heads),
+                                         jnp.float16)
+            state["v_scale"] = jnp.zeros((nl, batch, Sc, cfg.n_kv_heads),
+                                         jnp.float16)
+    if cfg.family in ("ssm", "hybrid"):
+        def mk(_):
+            return init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
+        state["ssm"] = jax.vmap(mk)(jnp.arange(nl))
+    if cfg.cross_attn_every and frontend is not None:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+
+        def cross_kv(blk):
+            k = (frontend @ blk["wk"]).reshape(batch, -1, cfg.n_kv_heads, hd)
+            v = (frontend @ blk["wv"]).reshape(batch, -1, cfg.n_kv_heads, hd)
+            return k, v
+
+        ck, cv = jax.vmap(cross_kv)(params["cross"])
+        state["cross_k"], state["cross_v"] = ck, cv
+    return state
+
+
+def _quantize_kv(t):
+    """t: (B, KV, hd) -> (int8 values, fp16 per-(B,KV) scales)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(t), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(t / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _attn_decode(x, blk, cfg, k_cache, v_cache, cur, ctx=None,
+                 k_scale=None, v_scale=None):
+    """x: (B, D). Writes this token's KV at slot cur % ring, attends.
+    With a MeshCtx whose model axis is >1, uses the sequence-sharded
+    flash-decoding path (repro.distributed.decode).  int8 caches carry
+    per-(slot, head) scales alongside."""
+    if ctx is not None and ctx.mesh.shape[ctx.tp_axis] > 1:
+        from repro.distributed.decode import decode_attn_sharded
+        return decode_attn_sharded(x, blk, cfg, k_cache, v_cache, cur, ctx,
+                                   k_scale=k_scale, v_scale=v_scale)
+    B, d = x.shape
+    hd = cfg.resolved_head_dim
+    Sc = k_cache.shape[1]
+    q = (x @ blk["wq"]).reshape(B, cfg.n_heads, hd)
+    k = (x @ blk["wk"]).reshape(B, cfg.n_kv_heads, hd)
+    v = (x @ blk["wv"]).reshape(B, cfg.n_kv_heads, hd)
+    pos = jnp.full((B,), cur)
+    q = L.apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = L.apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    slot = cur % Sc
+    quant = k_scale is not None
+    if quant:
+        kq, ks = _quantize_kv(k.astype(jnp.float32))
+        vq, vs = _quantize_kv(v.astype(jnp.float32))
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq[:, None], slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq[:, None], slot, 1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks[:, None], slot, 1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs[:, None], slot, 1)
+        k_eff = k_cache.astype(jnp.float32) * k_scale.astype(jnp.float32)[..., None]
+        v_eff = v_cache.astype(jnp.float32) * v_scale.astype(jnp.float32)[..., None]
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k[:, None], slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v[:, None], slot, 1)
+        k_eff, v_eff = k_cache, v_cache
+    # ring buffer: number of valid slots
+    n_valid = jnp.minimum(cur + 1, Sc)
+    o = L.decode_attention(q, k_eff, v_eff, n_valid, window=0)
+    o = o.astype(x.dtype)
+    out = (o.reshape(B, cfg.n_heads * hd) @ blk["wo"])
+    if quant:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache
+
+
+def decode_step(params, cfg: ArchConfig, state: Dict[str, Any],
+                tokens: jnp.ndarray, ctx: Optional[MeshCtx] = None,
+                unroll: bool = False):
+    """One decode step. tokens: (B,) int32 (or (B, nq) for audio).
+    Returns (logits (B, V[, nq]), new_state)."""
+    x = _embed(params, cfg, tokens[:, None] if tokens.ndim == 1
+               else tokens[:, None, :])[:, 0]
+    B, d = x.shape
+    cur = state["cur"]
+
+    has_kv = cfg.n_heads > 0
+    has_ssm = cfg.family in ("ssm", "hybrid")
+
+    if cfg.cross_attn_every:
+        # unroll super-blocks: scan over self layers inside each group
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        new_k, new_v = [], []
+        for g in range(n_cross):
+            blks = jax.tree.map(lambda p: p[g], params["blocks"])
+            caches = (
+                jax.tree.map(lambda p: jax.lax.dynamic_slice_in_dim(
+                    p, g * cfg.cross_attn_every, cfg.cross_attn_every, 0),
+                    (state["k"], state["v"])))
+
+            def body(carry, xs):
+                h, = carry
+                blk, kc, vc = xs
+                hn = L.rms_norm(h, blk["ln1"], cfg.norm_eps)
+                o, kc, vc = _attn_decode(hn, blk, cfg, kc, vc, cur, ctx)
+                h = h + o
+                h2 = L.rms_norm(h, blk["ln2"], cfg.norm_eps)
+                y, _ = _ffn_forward(h2[:, None], blk, cfg, ctx)
+                return (h + y[:, 0],), (kc, vc)
+
+            (x,), (kcs, vcs) = jax.lax.scan(body, (x,), (blks, *caches))
+            new_k.append(kcs)
+            new_v.append(vcs)
+            cblk = jax.tree.map(lambda p: p[g], params["cross"])
+            q = (L.rms_norm(x, cblk["ln"], cfg.norm_eps) @ cblk["wq"]) \
+                .reshape(B, cfg.n_heads, cfg.resolved_head_dim)
+            ck, cv = state["cross_k"][g], state["cross_v"][g]
+            o = L.decode_attention(q, ck, cv, ck.shape[1])
+            x = x + jnp.tanh(cblk["gate"]) * (
+                o.reshape(B, -1) @ cblk["wo"])
+        new_state = dict(state)
+        new_state["k"] = jnp.concatenate(new_k, axis=0)
+        new_state["v"] = jnp.concatenate(new_v, axis=0)
+        new_state["cur"] = cur + 1
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return _unembed(params, cfg, x[:, None])[:, 0], new_state
+
+    def body(carry, xs):
+        (h,) = carry
+        blk = xs["blk"]
+        outs = {}
+        if cfg.family == "ssm":
+            hn = L.rms_norm(h, blk["ln1"], cfg.norm_eps)
+            y, new_ssm = ssd_decode_step(hn, xs["ssm"], blk["ssm"], cfg.ssm)
+            outs["ssm"] = new_ssm
+            return (h + y,), outs
+        hn = L.rms_norm(h, blk["ln1"], cfg.norm_eps)
+        quant = "k_scale" in xs
+        extra = ({"k_scale": xs["k_scale"], "v_scale": xs["v_scale"]}
+                 if quant else {})
+        if cfg.family == "hybrid":
+            res = _attn_decode(hn, blk, cfg, xs["k"], xs["v"], cur, ctx, **extra)
+            a, kc, vc = res[:3]
+            s, new_ssm = ssd_decode_step(hn, xs["ssm"], blk["ssm"], cfg.ssm)
+            outs["ssm"] = new_ssm
+            mixed = 0.5 * (L.rms_norm(a, blk["norm_attn"], cfg.norm_eps)
+                           + L.rms_norm(s, blk["norm_ssm"], cfg.norm_eps))
+            h = h + mixed
+        else:
+            res = _attn_decode(hn, blk, cfg, xs["k"], xs["v"], cur, ctx, **extra)
+            a, kc, vc = res[:3]
+            h = h + a
+        outs["k"], outs["v"] = kc, vc
+        if quant:
+            outs["k_scale"], outs["v_scale"] = res[3], res[4]
+        h2 = L.rms_norm(h, blk["ln2"], cfg.norm_eps)
+        y, _ = _ffn_forward(h2[:, None], blk, cfg, ctx)
+        return (h + y[:, 0],), outs
+
+    xs = {"blk": params["blocks"]}
+    if has_kv:
+        xs["k"], xs["v"] = state["k"], state["v"]
+        if "k_scale" in state:
+            xs["k_scale"], xs["v_scale"] = state["k_scale"], state["v_scale"]
+    if has_ssm:
+        xs["ssm"] = state["ssm"]
+    if unroll:
+        outs_list = []
+        for i in range(cfg.n_layers):
+            (x,), o = body((x,), jax.tree.map(lambda p: p[i], xs))
+            outs_list.append(o)
+        outs = jax.tree.map(lambda *ls: jnp.stack(ls), *outs_list)
+    else:
+        (x,), outs = jax.lax.scan(body, (x,), xs)
+
+    new_state = dict(state)
+    if has_kv:
+        new_state["k"], new_state["v"] = outs["k"], outs["v"]
+        if "k_scale" in outs:
+            new_state["k_scale"] = outs["k_scale"]
+            new_state["v_scale"] = outs["v_scale"]
+    if has_ssm:
+        new_state["ssm"] = outs["ssm"]
+    new_state["cur"] = cur + 1
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, None])[:, 0]
+    return logits, new_state

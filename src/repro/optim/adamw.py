@@ -1,0 +1,145 @@
+"""AdamW in pure JAX (pytree-native, no optax dependency).
+
+Supports bf16 parameters with f32 master moments, global-norm clipping and
+decoupled weight decay.  State layout mirrors the parameter pytree so the
+sharding rules (incl. ZeRO-1 over the data axis) apply leaf-for-leaf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # 'f32' | 'int8': 8-bit moments (Dettmers-style row-wise dynamic
+    # quantization) cut optimizer state 4x — what makes trillion-parameter
+    # training fit the 512-chip mesh (EXPERIMENTS.md §Dry-run).
+    moment_dtype: str = "f32"
+
+
+def _q8_init(p):
+    """(values int8/uint8, row scales f16) for a moment tensor."""
+    shape = p.shape if p.ndim else (1,)
+    return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape[:-1], jnp.float16))
+
+
+def _q8_encode_signed(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _q8_decode_signed(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def _q8_encode_unsigned(x):
+    """nu >= 0: use the int8 range as [0, 254] for extra resolution."""
+    scale = jnp.maximum(jnp.max(x, axis=-1), 1e-20) / 254.0
+    q = (jnp.clip(jnp.round(x / scale[..., None]), 0, 254) - 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _q8_decode_unsigned(q, scale):
+    return (q.astype(jnp.float32) + 127.0) * scale.astype(jnp.float32)[..., None]
+
+
+def adamw_init(params, moment_dtype: str = "f32") -> dict:
+    if moment_dtype == "int8":
+        qs = [(_q8_init(p)) for p in jax.tree.leaves(params)]
+        treedef = jax.tree.structure(params)
+        return {
+            "mu_q": jax.tree.unflatten(treedef, [q for q, _ in qs]),
+            "mu_s": jax.tree.unflatten(treedef, [s for _, s in qs]),
+            "nu_q": jax.tree.unflatten(treedef, [q for q, _ in
+                                                 [(_q8_init(p)) for p in
+                                                  jax.tree.leaves(params)]]),
+            "nu_s": jax.tree.unflatten(treedef, [s for _, s in
+                                                 [(_q8_init(p)) for p in
+                                                  jax.tree.leaves(params)]]),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adamw_update(grads, state, params, lr: jnp.ndarray,
+                 cfg: AdamWConfig = AdamWConfig()) -> Tuple[Any, dict]:
+    """Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    int8 = cfg.moment_dtype == "int8"
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), mu, nu
+
+    # explicit flatten/unflatten: NamedTuple subtrees (MoEParams, SSMParams)
+    # are tuples, so tuple-based unzipping via tree.map would corrupt them
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+
+    if int8:
+        mus = [_q8_decode_signed(q, s).reshape(p.shape) for p, q, s in
+               zip(leaves_p, jax.tree.leaves(state["mu_q"]),
+                   jax.tree.leaves(state["mu_s"]))]
+        nus = [_q8_decode_unsigned(q, s).reshape(p.shape) for p, q, s in
+               zip(leaves_p, jax.tree.leaves(state["nu_q"]),
+                   jax.tree.leaves(state["nu_s"]))]
+    else:
+        mus = jax.tree.leaves(state["mu"])
+        nus = jax.tree.leaves(state["nu"])
+
+    outs = [upd(p, g, m, n) for p, g, m, n in
+            zip(leaves_p, leaves_g, mus, nus)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    if int8:
+        mq, ms, nq, ns = [], [], [], []
+        for _, mu, nu in outs:
+            mu = mu if mu.ndim else mu[None]
+            nu = nu if nu.ndim else nu[None]
+            a, b = _q8_encode_signed(mu)
+            c, d = _q8_encode_unsigned(nu)
+            mq.append(a); ms.append(b); nq.append(c); ns.append(d)
+        return new_params, {
+            "mu_q": jax.tree.unflatten(treedef, mq),
+            "mu_s": jax.tree.unflatten(treedef, ms),
+            "nu_q": jax.tree.unflatten(treedef, nq),
+            "nu_s": jax.tree.unflatten(treedef, ns),
+            "count": count,
+        }
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

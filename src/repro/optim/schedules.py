@@ -1,0 +1,37 @@
+"""LR schedules.  WSD (Warmup-Stable-Decay) is MiniCPM's schedule
+(arXiv:2404.06395) — the assigned minicpm-2b config trains with it."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.1) -> Callable:
+    """Warmup -> Stable plateau -> exponential Decay (MiniCPM WSD)."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        in_decay = jnp.maximum(step - warmup_steps - stable_steps, 0.0)
+        decay_ratio = jnp.minimum(in_decay / jnp.maximum(decay_steps, 1), 1.0)
+        decay_mult = final_frac ** decay_ratio
+        return jnp.where(step < warmup_steps + stable_steps, warm,
+                         peak_lr * decay_mult)
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) /
+                     jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return lr

@@ -1,0 +1,3 @@
+from repro.serving.scheduler import BatchScheduler, Request, SchedulerConfig
+
+__all__ = ["BatchScheduler", "Request", "SchedulerConfig"]

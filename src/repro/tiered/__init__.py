@@ -1,0 +1,3 @@
+from repro.tiered.store import TieredStore, TieredStoreConfig
+
+__all__ = ["TieredStore", "TieredStoreConfig"]

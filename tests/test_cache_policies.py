@@ -1,0 +1,183 @@
+"""The five replacement policies: unit behavior + cross-validation of the
+vectorized lax.scan simulator against the Python object model (oracle)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache.policies import (
+    POLICIES,
+    DirectPolicy,
+    FIFOPolicy,
+    LFRUPolicy,
+    LRUPolicy,
+    TwoQPolicy,
+    make_policy,
+)
+from repro.core.cache.trace_sim import TraceCacheSim, simulate_trace
+
+
+class TestLRU:
+    def test_eviction_order(self):
+        p = LRUPolicy(2)
+        p.access(1); p.access(2)
+        p.access(1)               # 1 is now MRU
+        _, ev = p.access(3)       # evicts 2
+        assert ev.page == 2
+        assert p.resident_pages() == {1, 3}
+
+    def test_dirty_propagation(self):
+        p = LRUPolicy(1)
+        p.access(1, write=True)
+        _, ev = p.access(2)
+        assert ev.page == 1 and ev.dirty
+
+
+class TestFIFO:
+    def test_touch_does_not_promote(self):
+        p = FIFOPolicy(2)
+        p.access(1); p.access(2)
+        p.access(1)               # hit, but FIFO ignores recency
+        _, ev = p.access(3)       # evicts 1 (first in)
+        assert ev.page == 1
+
+    def test_differs_from_lru_on_temporal_locality(self):
+        trace = [1, 2, 1, 3, 1, 4, 1, 5, 1, 6, 1, 7]
+        lru, fifo = LRUPolicy(2), FIFOPolicy(2)
+        for pg in trace:
+            lru.access(pg); fifo.access(pg)
+        assert lru.hits > fifo.hits  # the paper's point (§III-C)
+
+
+class TestDirect:
+    def test_conflict_eviction(self):
+        p = DirectPolicy(4)
+        p.access(0)
+        _, ev = p.access(4)       # same frame (4 % 4 == 0)
+        assert ev.page == 0
+        hit, _ = p.access(1)      # different frame: no conflict
+        assert not hit and p.lookup(1) and p.lookup(4)
+
+    def test_no_eviction_on_refill_same_page(self):
+        p = DirectPolicy(2)
+        p.access(0)
+        hit, ev = p.access(0)
+        assert hit and ev is None
+
+
+class Test2Q:
+    def test_ghost_promotion(self):
+        p = TwoQPolicy(4, kin_frac=0.5, kout_frac=1.0)
+        # fill probation, evict 1 into ghost, re-access 1 -> goes to Am
+        p.access(1); p.access(2); p.access(3); p.access(4)
+        p.access(5)               # evicts 1 from A1in into A1out
+        assert not p.lookup(1)
+        p.access(1)               # ghost hit -> promote into Am
+        assert 1 in p._am
+
+    def test_capacity_respected(self):
+        p = TwoQPolicy(4)
+        for i in range(20):
+            p.access(i)
+        assert len(p) <= 4
+
+
+class TestLFRU:
+    def test_frequency_beats_recency(self):
+        p = LFRUPolicy(2)
+        for _ in range(5):
+            p.access(1)           # hot page
+        p.access(2)
+        _, ev = p.access(3)       # evicts 2 (freq 1) not 1 (freq 5)
+        assert ev.page == 2
+        assert p.lookup(1)
+
+    def test_aging_halves_frequencies(self):
+        p = LFRUPolicy(2, freq_cap=8)
+        for _ in range(10):
+            p.access(1)
+        freq_before = p._pages[1][0]
+        p.access(2)
+        p.access(3)               # eviction w/ high freq triggers aging sweep
+        assert p._pages[1][0] <= freq_before
+
+
+class TestFactory:
+    def test_all_five_constructible(self):
+        for name in POLICIES:
+            pol = make_policy(name, 8)
+            pol.access(1)
+            assert pol.lookup(1)
+
+    def test_unknown_rejected(self):
+        with pytest.raises(ValueError):
+            make_policy("mru", 8)
+
+    def test_hit_rate_math(self):
+        p = make_policy("lru", 4)
+        p.access(1); p.access(1); p.access(2)
+        assert p.hit_rate == pytest.approx(1 / 3)
+
+
+# --------------------------------------------------------------------------
+# Vectorized lax.scan simulator vs the Python object model (oracle).
+# Set-associative oracle: partition pages by set, one policy object per set.
+def _oracle_set_assoc(pages, writes, num_sets, ways, policy_cls):
+    sets = [policy_cls(ways) for _ in range(num_sets)]
+    hits, dirty_evicts = [], []
+    for pg, wr in zip(pages, writes):
+        hit, ev = sets[pg % num_sets].access(pg, write=wr)
+        hits.append(hit)
+        dirty_evicts.append(bool(ev and ev.dirty))
+    return np.array(hits), np.array(dirty_evicts)
+
+
+@pytest.mark.parametrize("policy,cls", [("lru", LRUPolicy), ("fifo", FIFOPolicy)])
+@pytest.mark.parametrize("num_sets,ways", [(1, 4), (4, 2), (8, 1), (16, 4)])
+def test_trace_sim_matches_oracle(policy, cls, num_sets, ways):
+    rng = np.random.default_rng(42)
+    n = 600
+    pages = rng.integers(0, num_sets * ways * 3, size=n).astype(np.int32)
+    writes = rng.random(n) < 0.3
+    res = simulate_trace(pages, writes, num_sets=num_sets, ways=ways, policy=policy)
+    oh, oe = _oracle_set_assoc(pages, writes, num_sets, ways, cls)
+    np.testing.assert_array_equal(res["hit_flags"], oh)
+    np.testing.assert_array_equal(res["dirty_evict_flags"], oe)
+
+
+def test_trace_sim_direct_matches_oracle():
+    rng = np.random.default_rng(1)
+    pages = rng.integers(0, 64, size=500).astype(np.int32)
+    writes = rng.random(500) < 0.5
+    res = simulate_trace(pages, writes, num_sets=16, ways=1, policy="direct")
+    oh, oe = _oracle_set_assoc(pages, writes, 16, 1, DirectPolicy)
+    np.testing.assert_array_equal(res["hit_flags"], oh)
+    np.testing.assert_array_equal(res["dirty_evict_flags"], oe)
+
+
+@given(
+    data=st.data(),
+    num_sets=st.sampled_from([1, 2, 4]),
+    ways=st.sampled_from([1, 2, 4]),
+    policy=st.sampled_from(["lru", "fifo"]),
+)
+@settings(max_examples=30, deadline=None)
+def test_trace_sim_property(data, num_sets, ways, policy):
+    n = data.draw(st.integers(min_value=1, max_value=120))
+    pages = np.array(
+        data.draw(st.lists(st.integers(0, num_sets * ways * 2),
+                           min_size=n, max_size=n)), dtype=np.int32)
+    writes = np.array(
+        data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    cls = LRUPolicy if policy == "lru" else FIFOPolicy
+    res = simulate_trace(pages, writes, num_sets=num_sets, ways=ways, policy=policy)
+    oh, oe = _oracle_set_assoc(pages, writes, num_sets, ways, cls)
+    np.testing.assert_array_equal(res["hit_flags"], oh)
+    np.testing.assert_array_equal(res["dirty_evict_flags"], oe)
+
+
+def test_trace_sim_rejects_bad_config():
+    with pytest.raises(ValueError):
+        TraceCacheSim(num_sets=4, ways=2, policy="direct")
+    with pytest.raises(ValueError):
+        TraceCacheSim(num_sets=4, ways=2, policy="2q")

@@ -1,0 +1,184 @@
+"""CXL.mem protocol layer: flit codec, MetaValue rules, HomeAgent routing."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cxl.flit import (
+    CXL_FLIT_BYTES,
+    CXLCommand,
+    CXLFlit,
+    MemCmd,
+    MetaValue,
+    Packet,
+    SnpType,
+    decode_flit,
+    encode_flit,
+    flit_to_response_packet,
+    meta_value_for,
+    packet_to_flit,
+)
+from repro.core.cxl.home_agent import AddressRange, HomeAgent
+from repro.core.engine import EventEngine
+from repro.core.devices import CXLDRAMDevice, DRAMDevice
+
+
+class TestFlitCodec:
+    def test_wire_size(self):
+        flit = CXLFlit(opcode=CXLCommand.M2SReq, addr=0x1000, tag=7)
+        assert len(encode_flit(flit)) == CXL_FLIT_BYTES == 64
+
+    def test_roundtrip_basic(self):
+        flit = CXLFlit(opcode=CXLCommand.M2SRwD, addr=0x40, tag=123,
+                       meta_value=MetaValue.Invalid, snp_type=SnpType.SnpInv,
+                       length_blocks=3, poison=True, data=b"hello world")
+        out = decode_flit(encode_flit(flit), data=flit.data)
+        assert out.opcode == flit.opcode
+        assert out.addr == flit.addr
+        assert out.tag == flit.tag
+        assert out.meta_value == flit.meta_value
+        assert out.snp_type == flit.snp_type
+        assert out.length_blocks == flit.length_blocks
+        assert out.poison and not out.dirty_evict
+        assert out.data == b"hello world"
+
+    @given(
+        op=st.sampled_from(list(CXLCommand)),
+        addr=st.integers(min_value=0, max_value=2**48 - 1).map(lambda a: a * 64),
+        tag=st.integers(min_value=0, max_value=2**16 - 1),
+        mv=st.sampled_from(list(MetaValue)),
+        nblk=st.integers(min_value=0, max_value=2**16 - 1),
+        poison=st.booleans(),
+        dirty=st.booleans(),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_property(self, op, addr, tag, mv, nblk, poison, dirty):
+        flit = CXLFlit(opcode=op, addr=addr, tag=tag, meta_value=mv,
+                       length_blocks=nblk, poison=poison, dirty_evict=dirty)
+        out = decode_flit(encode_flit(flit))
+        assert (out.opcode, out.addr, out.tag, out.meta_value,
+                out.length_blocks, out.poison, out.dirty_evict) == \
+               (op, addr, tag, mv, nblk, poison, dirty)
+
+    def test_unaligned_request_rejected(self):
+        with pytest.raises(ValueError):
+            encode_flit(CXLFlit(opcode=CXLCommand.M2SReq, addr=0x41, tag=0))
+
+    def test_bad_wire_length(self):
+        with pytest.raises(ValueError):
+            decode_flit(b"\x00" * 63)
+
+
+class TestMetaValueRules:
+    """Paper §II-B-3: MetaValue from invalidate/flush semantics."""
+
+    def test_plain_read_write_is_any(self):
+        assert meta_value_for(MemCmd.ReadReq) == MetaValue.Any
+        assert meta_value_for(MemCmd.WriteReq) == MetaValue.Any
+
+    def test_invalidate_is_invalid(self):
+        assert meta_value_for(MemCmd.InvalidateReq) == MetaValue.Invalid
+        assert meta_value_for(MemCmd.CleanEvict) == MetaValue.Invalid
+
+    def test_flush_keeps_shared(self):
+        assert meta_value_for(MemCmd.FlushReq) == MetaValue.Shared
+
+
+class TestPacketConversion:
+    """Paper §II-B-2: ReadReq→M2SReq, WriteReq→M2SRwD."""
+
+    def test_read_converts(self):
+        flit = packet_to_flit(Packet(cmd=MemCmd.ReadReq, addr=0x80), tag=1)
+        assert flit.opcode == CXLCommand.M2SReq
+        assert flit.meta_value == MetaValue.Any
+
+    def test_write_converts_with_data(self):
+        pkt = Packet(cmd=MemCmd.WriteReq, addr=0x80, data=b"\xab" * 64)
+        flit = packet_to_flit(pkt, tag=2)
+        assert flit.opcode == CXLCommand.M2SRwD
+        assert flit.data == b"\xab" * 64
+
+    def test_multiline_block_count(self):
+        flit = packet_to_flit(Packet(cmd=MemCmd.ReadReq, addr=0, size=4096), tag=0)
+        assert flit.length_blocks == 64  # 4 KB = 64 x 64 B logical blocks
+
+    def test_address_alignment(self):
+        flit = packet_to_flit(Packet(cmd=MemCmd.ReadReq, addr=0x8f), tag=0)
+        assert flit.addr == 0x80
+
+    def test_response_conversion(self):
+        req = Packet(cmd=MemCmd.ReadReq, addr=0x100, req_id=9)
+        drs = CXLFlit(opcode=CXLCommand.S2MDRS, addr=0x100, tag=0, data=b"x" * 64)
+        resp = flit_to_response_packet(drs, req)
+        assert resp.cmd == MemCmd.ReadResp and resp.req_id == 9
+        ndr = CXLFlit(opcode=CXLCommand.S2MNDR, addr=0x100, tag=0)
+        resp = flit_to_response_packet(ndr, req)
+        assert resp.cmd == MemCmd.WriteResp
+
+    def test_unconvertible_rejected(self):
+        with pytest.raises(ValueError):
+            packet_to_flit(Packet(cmd=MemCmd.ReadResp, addr=0), tag=0)
+
+
+class TestHomeAgent:
+    def _system(self):
+        eng = EventEngine()
+        ha = HomeAgent(eng)
+        local = DRAMDevice(eng)
+        cxl = CXLDRAMDevice(eng)
+        ha.attach(AddressRange(0, 1 << 20), local, is_cxl=False)
+        ha.attach(AddressRange(1 << 20, 1 << 20), cxl, is_cxl=True)
+        return eng, ha
+
+    def test_local_path_no_conversion(self):
+        eng, ha = self._system()
+        got = []
+        ha.send(Packet(cmd=MemCmd.ReadReq, addr=0x100), got.append)
+        eng.run()
+        assert len(got) == 1 and got[0].cmd == MemCmd.ReadResp
+        assert ha.stats["pkts_converted"] == 0
+
+    def test_cxl_path_converts_and_responds(self):
+        eng, ha = self._system()
+        got = []
+        ha.send(Packet(cmd=MemCmd.ReadReq, addr=(1 << 20) + 0x40), got.append)
+        t_end = eng.run()
+        assert len(got) == 1 and got[0].cmd == MemCmd.ReadResp
+        assert ha.stats["pkts_converted"] == 1
+        assert ha.stats["flit_bytes_m2s"] >= 64
+        # CXL round trip (50 ns) + DRAM access — strictly slower than local
+        assert t_end >= 50_000  # >= 50 ns in ticks
+
+    def test_cxl_write_path(self):
+        eng, ha = self._system()
+        got = []
+        ha.send(Packet(cmd=MemCmd.WriteReq, addr=(1 << 20), data=b"z" * 64), got.append)
+        eng.run()
+        assert got and got[0].cmd == MemCmd.WriteResp
+
+    def test_unmapped_address_raises(self):
+        _, ha = self._system()
+        with pytest.raises(ValueError):
+            ha.send(Packet(cmd=MemCmd.ReadReq, addr=1 << 30), lambda p: None)
+
+    def test_overlapping_range_rejected(self):
+        eng, ha = self._system()
+        with pytest.raises(ValueError):
+            ha.attach(AddressRange(0x1000, 0x1000), DRAMDevice(eng), is_cxl=False)
+
+    def test_unconvertible_command_warns(self):
+        eng, ha = self._system()
+        ha.send(Packet(cmd=MemCmd.M2SReq, addr=(1 << 20)), lambda p: None)
+        eng.run()
+        assert ha.stats["warnings"] == 1
+
+    def test_cxl_latency_exceeds_local(self):
+        eng, ha = self._system()
+        done = {}
+        ha.send(Packet(cmd=MemCmd.ReadReq, addr=0x40), lambda p: done.setdefault("local", eng.now))
+        eng.run()
+        local_t = done["local"]
+        eng2, ha2 = self._system()
+        ha2.send(Packet(cmd=MemCmd.ReadReq, addr=(1 << 20) + 0x40),
+                 lambda p: done.setdefault("cxl", eng2.now))
+        eng2.run()
+        assert done["cxl"] > local_t

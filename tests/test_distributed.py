@@ -1,0 +1,248 @@
+"""Multi-device distribution tests.
+
+These need >1 device, so each test launches a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main test
+process must keep seeing 1 CPU device for everything else).  Each
+subprocess asserts numerical equality between the sharded step (2x4 or
+2x2x2 mesh, shard_map MoE / flash-decode / pipeline) and the single-device
+reference.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    script = textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+assert jax.device_count() == 8, jax.device_count()
+from repro.configs import get_arch
+from repro.distributed.sharding import MeshAxes, param_specs, batch_spec, decode_state_specs
+from repro.distributed.step import make_train_step, make_serve_step, make_mesh_ctx
+from repro.models.transformer import init_params, init_decode_state, decode_step, forward
+from repro.launch.mesh import make_debug_mesh
+key = jax.random.PRNGKey(0)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_forward_matches_single_device():
+    _run(COMMON + """
+for arch in ("minicpm-2b", "mixtral-8x7b", "kimi-k2-1t-a32b", "mamba2-2_7b"):
+    cfg = get_arch(arch).reduced(n_kv_heads=4 if get_arch(arch).n_heads else 0)
+    if cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, n_experts=8, capacity_factor=8.0))
+    params = init_params(key, cfg)
+    B, S = 4, 16
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    ref, _ = forward(params, cfg, batch, ctx=None, remat=False)
+
+    mesh = make_debug_mesh(2, 4)
+    ax = MeshAxes.for_mesh(mesh)
+    pspecs = param_specs(params, cfg, mesh, ax)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    params_s = jax.tree.map(lambda x, sh: jax.device_put(x, sh), params, psh)
+    batch_s = {"tokens": jax.device_put(batch["tokens"],
+                                        NamedSharding(mesh, P(ax.dp, None)))}
+    ctx = make_mesh_ctx(mesh)
+    with mesh:
+        out, _ = jax.jit(lambda p, b: forward(p, cfg, b, ctx=ctx, remat=False))(
+            params_s, batch_s)
+    err = float(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+    scale = float(jnp.abs(ref).max())
+    assert err < 2e-2 * max(scale, 1.0), (arch, err, scale)
+    print(arch, "ok", err)
+""")
+
+
+@pytest.mark.slow
+def test_sharded_decode_matches_single_device():
+    _run(COMMON + """
+for arch in ("glm4-9b", "h2o-danube-3-4b"):
+    cfg = get_arch(arch).reduced()
+    params = init_params(key, cfg)
+    B, S = 4, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    # single-device decode reference
+    st = init_decode_state(params, cfg, B, context_len=16)
+    outs = []
+    for t in range(S):
+        lg, st = decode_step(params, cfg, st, toks[:, t])
+        outs.append(lg)
+    ref = jnp.stack(outs, 1)
+
+    mesh = make_debug_mesh(2, 4)
+    ax = MeshAxes.for_mesh(mesh)
+    pspecs = param_specs(params, cfg, mesh, ax)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    params_s = jax.tree.map(lambda x, sh: jax.device_put(x, sh), params, psh)
+    state = init_decode_state(params, cfg, B, context_len=16)
+    dspecs = decode_state_specs(state, cfg, mesh, ax)
+    dsh = jax.tree.map(lambda s: NamedSharding(mesh, s), dspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    state_s = jax.tree.map(lambda x, sh: jax.device_put(x, sh), state, dsh)
+    step = jax.jit(make_serve_step(cfg, mesh))
+    outs = []
+    with mesh:
+        for t in range(S):
+            lg, state_s = step(params_s, state_s,
+                               jax.device_put(toks[:, t],
+                                              NamedSharding(mesh, P(ax.dp))))
+            outs.append(lg)
+    got = jnp.stack(outs, 1)
+    err = float(jnp.abs(got.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+    assert err < 2e-2, (arch, err)
+    print(arch, "decode ok", err)
+""")
+
+
+@pytest.mark.slow
+def test_train_step_runs_on_multipod_debug_mesh():
+    _run(COMMON + """
+from repro.optim.adamw import adamw_init
+from repro.optim.schedules import wsd_schedule
+from repro.distributed.sharding import opt_state_specs
+cfg = get_arch("minicpm-2b").reduced()
+params = init_params(key, cfg)
+opt = adamw_init(params)
+mesh = make_debug_mesh(2, 2, n_pod=2)    # (pod, data, model) = 2x2x2
+ax = MeshAxes.for_mesh(mesh)
+assert ax.dp == ("pod", "data")
+pspecs = param_specs(params, cfg, mesh, ax)
+ospecs = opt_state_specs(opt, pspecs, mesh, ax)
+psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                   is_leaf=lambda x: isinstance(x, P))
+osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                   is_leaf=lambda x: isinstance(x, P))
+params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, psh)
+opt = jax.tree.map(lambda x, s: jax.device_put(x, s), opt, osh)
+step_fn = jax.jit(make_train_step(cfg, mesh, lr_fn=wsd_schedule(1e-3, 2, 5, 5)))
+batch = {"tokens": jax.device_put(
+    jax.random.randint(key, (8, 16), 0, cfg.vocab),
+    NamedSharding(mesh, P(ax.dp, None)))}
+with mesh:
+    losses = []
+    for s in range(3):
+        params, opt, loss = step_fn(params, opt, batch, jnp.asarray(s))
+        losses.append(float(loss))
+assert all(np.isfinite(losses)), losses
+assert losses[2] < losses[0]  # overfits one batch
+print("multipod train ok", losses)
+""")
+
+
+@pytest.mark.slow
+def test_elastic_remesh_restore():
+    _run(COMMON + """
+import tempfile
+from repro.checkpoint.manager import CheckpointManager
+cfg = get_arch("minicpm-2b").reduced()
+params = init_params(key, cfg)
+mesh_a = make_debug_mesh(2, 4)           # "big" mesh
+ax_a = MeshAxes.for_mesh(mesh_a)
+pspecs_a = param_specs(params, cfg, mesh_a, ax_a)
+psh_a = jax.tree.map(lambda s: NamedSharding(mesh_a, s), pspecs_a,
+                     is_leaf=lambda x: isinstance(x, P))
+params_a = jax.tree.map(lambda x, s: jax.device_put(x, s), params, psh_a)
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d)
+    mgr.save(1, params_a)
+    # restore onto a smaller mesh (node failure -> elastic downscale)
+    mesh_b = make_debug_mesh(2, 2)
+    ax_b = MeshAxes.for_mesh(mesh_b)
+    pspecs_b = param_specs(params, cfg, mesh_b, ax_b)
+    restored, _, _ = mgr.restore(params, mesh=mesh_b, specs=pspecs_b)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("elastic remesh ok")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_matches_sequential():
+    _run(COMMON + """
+from repro.distributed.pipeline import pipeline_forward
+mesh = jax.make_mesh((4,), ("pod",))
+D = 16
+n_layers = 8
+keys = jax.random.split(key, n_layers)
+blocks = {"w": jnp.stack([jax.random.normal(k, (D, D)) * 0.2 for k in keys])}
+def block_fn(h, blk):
+    return jnp.tanh(h @ blk["w"])
+x = jax.random.normal(key, (8, D))
+# sequential reference
+ref = x
+for i in range(n_layers):
+    ref = block_fn(ref, {"w": blocks["w"][i]})
+fn = pipeline_forward(block_fn, mesh, stage_axis="pod", microbatches=4)
+with mesh:
+    got = jax.jit(fn)(x, blocks)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+print("pipeline ok")
+""")
+
+
+@pytest.mark.slow
+def test_resident_expert_decode_matches_single_device():
+    """§Perf hillclimb B: resident-expert MoE decode layout is exact."""
+    _run(COMMON + """
+import dataclasses
+cfg = get_arch("kimi-k2-1t-a32b").reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, n_experts=8, capacity_factor=8.0))
+params = init_params(key, cfg)
+B = 4
+toks = jax.random.randint(key, (B, 6), 0, cfg.vocab)
+st = init_decode_state(params, cfg, B, 16)
+outs = []
+for t in range(6):
+    lg, st = decode_step(params, cfg, st, toks[:, t])
+    outs.append(lg)
+ref = jnp.stack(outs, 1)
+
+mesh = make_debug_mesh(2, 4)
+ax = MeshAxes.for_mesh(mesh)
+pspecs = param_specs(params, cfg, mesh, ax, kind="decode")
+psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                   is_leaf=lambda x: isinstance(x, P))
+params_s = jax.tree.map(lambda x, sh: jax.device_put(x, sh), params, psh)
+st = init_decode_state(params, cfg, B, 16)
+dspecs = decode_state_specs(st, cfg, mesh, ax)
+dsh = jax.tree.map(lambda s: NamedSharding(mesh, s), dspecs,
+                   is_leaf=lambda x: isinstance(x, P))
+st = jax.tree.map(lambda x, sh: jax.device_put(x, sh), st, dsh)
+step = jax.jit(make_serve_step(cfg, mesh, resident_experts=True))
+outs = []
+with mesh:
+    for t in range(6):
+        lg, st = step(params_s, st,
+                      jax.device_put(toks[:, t], NamedSharding(mesh, P(("data",)))))
+        outs.append(lg)
+got = jnp.stack(outs, 1)
+err = float(jnp.abs(got - ref).max())
+assert err < 2e-2, err
+print("resident-expert decode ok", err)
+""")

@@ -1,0 +1,112 @@
+"""DRAM cache layer: MSHR coalescing, write-back/write-allocate, virgin-page
+fill elision, writeback buffering (paper §II-C)."""
+
+import pytest
+
+from repro.core.cache.dram_cache import DRAMCache, DRAMCacheConfig, PAGE_BYTES
+from repro.core.engine import ns, us
+from repro.core.ssd.hil import HIL, SSDConfig
+
+
+def _cache(policy="lru", capacity_pages=8, mshr=4, wb=2):
+    cfg = DRAMCacheConfig(capacity_bytes=capacity_pages * PAGE_BYTES,
+                          policy=policy, mshr_entries=mshr, writeback_buffer=wb)
+    ssd = HIL(SSDConfig(capacity_bytes=1 << 22))
+    return DRAMCache(cfg, ssd), ssd
+
+
+def test_miss_then_hit_latency_ordering():
+    c, _ = _cache()
+    t_miss = c.access(0, 0x0, write=False)
+    t_hit = c.access(t_miss, 0x40, write=False) - t_miss
+    assert t_hit < t_miss  # hit serves at ~50 ns, miss pays flash
+    assert t_hit >= ns(c.cfg.hit_latency_ns)
+
+
+def test_mshr_coalesces_overlapping_lines():
+    """Two 64 B accesses to the same in-flight 4 KB page -> ONE flash read."""
+    c, ssd = _cache()
+    c.access(0, PAGE_BYTES + 0, write=False)     # written page? virgin: force write first
+    ssd_reads_before = ssd.stats["read_reqs"]
+    # make page 5 non-virgin so fills really hit flash
+    ssd.write(0, 5 * PAGE_BYTES, PAGE_BYTES)
+    c.access(0, 5 * PAGE_BYTES + 0, write=False)
+    c.access(ns(1), 5 * PAGE_BYTES + 64, write=False)   # still in flight
+    assert ssd.stats["read_reqs"] == ssd_reads_before + 1
+    assert c.stats["mshr_coalesced"] == 1
+
+
+def test_write_back_not_write_through():
+    c, ssd = _cache(capacity_pages=2)
+    writes_before = ssd.stats["write_reqs"]
+    c.access(0, 0, write=True)
+    assert ssd.stats["write_reqs"] == writes_before  # absorbed by the cache
+
+
+def test_dirty_eviction_writes_back():
+    c, ssd = _cache(capacity_pages=2)
+    t = c.access(0, 0 * PAGE_BYTES, write=True)
+    t = max(t, c.access(t, 1 * PAGE_BYTES, write=True))
+    before = c.stats["writebacks"]
+    t = c.access(t + us(100), 2 * PAGE_BYTES, write=False)  # evicts a dirty page
+    assert c.stats["writebacks"] == before + 1
+
+
+def test_clean_eviction_no_writeback():
+    c, ssd = _cache(capacity_pages=2)
+    t = c.access(0, 0 * PAGE_BYTES, write=False)
+    t = c.access(t + us(100), 1 * PAGE_BYTES, write=False)
+    before = c.stats["writebacks"]
+    c.access(t + us(100), 2 * PAGE_BYTES, write=False)
+    assert c.stats["writebacks"] == before
+
+
+def test_virgin_page_fill_skips_flash():
+    c, ssd = _cache()
+    reads_before = ssd.stats["read_reqs"]
+    c.access(0, 7 * PAGE_BYTES, write=False)  # page never written
+    assert ssd.stats["read_reqs"] == reads_before
+
+
+def test_write_acks_at_cache_latency_even_on_miss():
+    c, ssd = _cache()
+    ssd.write(0, 3 * PAGE_BYTES, PAGE_BYTES)  # page exists on flash
+    t0 = us(1000)
+    done = c.access(t0, 3 * PAGE_BYTES, write=True)
+    assert done - t0 <= ns(2 * c.cfg.hit_latency_ns)  # no flash wait for stores
+
+
+def test_read_miss_waits_for_flash():
+    c, ssd = _cache()
+    ssd.write(0, 3 * PAGE_BYTES, PAGE_BYTES)
+    t0 = us(2000)
+    done = c.access(t0, 3 * PAGE_BYTES, write=False)
+    assert done - t0 > us(1)  # flash read latency visible
+
+
+def test_mshr_full_backpressure():
+    c, ssd = _cache(mshr=1)
+    for pg in range(3):
+        ssd.write(0, pg * PAGE_BYTES, PAGE_BYTES)
+    c.access(0, 0 * PAGE_BYTES, write=False)
+    c.access(ns(1), 1 * PAGE_BYTES, write=False)   # MSHR (1 entry) full
+    assert c.stats["mshr_stalls"] >= 1
+
+
+def test_flush_writes_all_dirty():
+    c, ssd = _cache(capacity_pages=4)
+    t = 0
+    for pg in range(3):
+        t = max(t, c.access(t, pg * PAGE_BYTES, write=True))
+    before = ssd.stats["write_reqs"]
+    c.flush(t + us(10))
+    assert ssd.stats["write_reqs"] == before + 3
+
+
+def test_hit_rate_reporting():
+    c, _ = _cache()
+    t = c.access(0, 0, write=False)
+    for i in range(1, 10):
+        t = c.access(t + us(100), i % 2 * 64, write=False)
+    assert 0.0 < c.hit_rate <= 1.0
+    assert c.policy.hits + c.policy.misses == 10

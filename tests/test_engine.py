@@ -1,0 +1,76 @@
+"""Discrete-event engine semantics."""
+
+import pytest
+
+from repro.core.engine import EventEngine, ns, to_ns, us
+
+
+def test_fifo_order_for_simultaneous_events():
+    eng = EventEngine()
+    seen = []
+    for i in range(5):
+        eng.schedule(100, lambda i=i: seen.append(i))
+    eng.run()
+    assert seen == [0, 1, 2, 3, 4]
+
+
+def test_tick_ordering():
+    eng = EventEngine()
+    seen = []
+    eng.schedule(ns(30), lambda: seen.append("b"))
+    eng.schedule(ns(10), lambda: seen.append("a"))
+    eng.schedule(ns(50), lambda: seen.append("c"))
+    end = eng.run()
+    assert seen == ["a", "b", "c"]
+    assert end == ns(50)
+
+
+def test_nested_scheduling():
+    eng = EventEngine()
+    seen = []
+    def outer():
+        seen.append(("outer", eng.now))
+        eng.schedule(ns(5), lambda: seen.append(("inner", eng.now)))
+    eng.schedule(ns(10), outer)
+    eng.run()
+    assert seen == [("outer", ns(10)), ("inner", ns(15))]
+
+
+def test_cancel():
+    eng = EventEngine()
+    seen = []
+    ev = eng.schedule(ns(10), lambda: seen.append(1))
+    eng.cancel(ev)
+    eng.run()
+    assert seen == [] and eng.events_executed == 0
+
+
+def test_run_until():
+    eng = EventEngine()
+    seen = []
+    eng.schedule(ns(10), lambda: seen.append(1))
+    eng.schedule(us(10), lambda: seen.append(2))
+    eng.run(until=ns(100))
+    assert seen == [1]
+    assert eng.now == ns(100)
+    eng.run()
+    assert seen == [1, 2]
+
+
+def test_negative_delay_rejected():
+    with pytest.raises(ValueError):
+        EventEngine().schedule(-1, lambda: None)
+
+
+def test_schedule_in_past_rejected():
+    eng = EventEngine()
+    eng.schedule(ns(100), lambda: None)
+    eng.run()
+    with pytest.raises(ValueError):
+        eng.schedule_at(ns(50), lambda: None)
+
+
+def test_unit_helpers():
+    assert ns(1) == 1000
+    assert us(1) == 1_000_000
+    assert to_ns(ns(123.5)) == pytest.approx(123.5)

@@ -1,0 +1,242 @@
+"""Per-architecture smoke tests (reduced configs) + numerical parity tests.
+
+Each assigned architecture instantiates a REDUCED config of the same family
+and runs one forward + one train-style step + one decode step on CPU,
+asserting output shapes and no NaNs (deliverable f).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_archs, get_arch
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+from repro.models.ssm import (init_ssm_params, init_ssm_state,
+                              ssd_decode_step, ssd_forward)
+from repro.models.transformer import (decode_step, forward,
+                                      init_decode_state, init_params)
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = all_archs()
+
+
+def _batch(cfg, B=2, S=16):
+    batch = {}
+    if cfg.n_codebooks:
+        batch["tokens"] = jax.random.randint(KEY, (B, S, cfg.n_codebooks), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.cross_attn_every:
+        batch["frontend"] = jax.random.normal(
+            KEY, (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_decode(arch_id):
+    cfg = ARCHS[arch_id].reduced()
+    params = init_params(KEY, cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    logits, aux = forward(params, cfg, batch)
+    exp = (B, S, cfg.n_codebooks, cfg.vocab) if cfg.n_codebooks else (B, S, cfg.vocab)
+    assert logits.shape == exp
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+    state = init_decode_state(params, cfg, B, context_len=64,
+                              frontend=batch.get("frontend"))
+    tok = batch["tokens"][:, 0]
+    lg, state2 = decode_step(params, cfg, state, tok)
+    exp_d = (B, cfg.n_codebooks, cfg.vocab) if cfg.n_codebooks else (B, cfg.vocab)
+    assert lg.shape == exp_d
+    assert np.isfinite(np.asarray(lg)).all()
+    assert int(state2["cur"]) == 1
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_grad_step(arch_id):
+    """One loss+grad step: finite loss, finite grads, params update."""
+    cfg = ARCHS[arch_id].reduced()
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, B=2, S=8)
+
+    def loss_fn(p):
+        logits, aux = forward(p, cfg, batch, remat=True)
+        tgt = batch["tokens"]
+        if cfg.n_codebooks:
+            lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+            nll = -jnp.take_along_axis(lp, tgt[:, 1:, :, None], axis=-1).mean()
+        else:
+            lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+            nll = -jnp.take_along_axis(lp, tgt[:, 1:, None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch_id", ["minicpm-2b", "glm4-9b", "mamba2-2_7b",
+                                     "hymba-1_5b", "musicgen-large",
+                                     "mixtral-8x7b"])
+def test_prefill_decode_parity(arch_id):
+    """Decoding token-by-token must reproduce the full-sequence forward."""
+    cfg = ARCHS[arch_id].reduced()
+    params = init_params(KEY, cfg)
+    B, S = 2, 10
+    batch = _batch(cfg, B, S)
+    full_logits, _ = forward(params, cfg, batch, remat=False)
+
+    state = init_decode_state(params, cfg, B, context_len=S,
+                              frontend=batch.get("frontend"))
+    outs = []
+    for t in range(S):
+        tok = batch["tokens"][:, t]
+        lg, state = decode_step(params, cfg, state, tok)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_ring_buffer_decode_matches_windowed_forward():
+    """SWA arch with context > window: ring-buffer decode == windowed attn."""
+    cfg = ARCHS["h2o-danube-3-4b"].reduced(swa_window=6)
+    params = init_params(KEY, cfg)
+    B, S = 1, 12  # S > window
+    batch = _batch(cfg, B, S)
+    full_logits, _ = forward(params, cfg, batch, remat=False)
+    state = init_decode_state(params, cfg, B, context_len=S)
+    assert state["k"].shape[2] == 6  # ring limited to window
+    outs = []
+    for t in range(S):
+        lg, state = decode_step(params, cfg, state, batch["tokens"][:, t])
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_vs_reference_attention():
+    for (S, Skv, H, KV, hd, win) in [(33, 33, 8, 8, 16, 0), (64, 64, 8, 2, 32, 0),
+                                     (40, 40, 4, 4, 16, 8), (16, 48, 4, 2, 16, 0)]:
+        q = jax.random.normal(KEY, (2, S, H, hd))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, Skv, KV, hd))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, Skv, KV, hd))
+        causal = S == Skv
+        a = L.flash_attention(q, k, v, causal=causal, window=win,
+                              q_block=16, kv_block=8)
+        r = L.attention_ref(q, k, v, causal=causal, window=win) if causal else None
+        if r is None:
+            # cross-attention: compare against explicit softmax
+            qg = q.reshape(2, S, KV, H // KV, hd)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k) * hd ** -0.5
+            p = jax.nn.softmax(s, -1)
+            r = jnp.einsum("bkgqc,bckd->bqkgd", p, v).reshape(2, S, H, hd)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_equals_recurrence():
+    cfg = SSMConfig(d_state=8, head_dim=8, expand=2, chunk=8, conv_kernel=4)
+    D, S, B = 16, 21, 2
+    p = init_ssm_params(KEY, D, cfg)
+    u = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, D)) * 0.5
+    y_chunk = ssd_forward(u, p, cfg)
+    st = init_ssm_state(B, D, cfg)
+    ys = []
+    for t in range(S):
+        y, st = ssd_decode_step(u[:, t], st, p, cfg)
+        ys.append(y)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_param_counts_match_public_scale():
+    """Sanity: analytic N matches each model's public name/scale."""
+    expect = {
+        "minicpm-2b": (2.0e9, 4.0e9),
+        "codeqwen1_5-7b": (6.5e9, 9.0e9),
+        "glm4-9b": (8.5e9, 10.5e9),
+        "h2o-danube-3-4b": (3.2e9, 4.6e9),
+        "hymba-1_5b": (1.2e9, 2.0e9),
+        "llama-3_2-vision-90b": (80e9, 100e9),
+        "mamba2-2_7b": (2.4e9, 3.1e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.15e12),
+        "mixtral-8x7b": (44e9, 49e9),
+        "musicgen-large": (2.8e9, 3.6e9),
+    }
+    for aid, (lo, hi) in expect.items():
+        n = get_arch(aid).param_count()
+        assert lo <= n <= hi, f"{aid}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+    kimi = get_arch("kimi-k2-1t-a32b")
+    assert 28e9 <= kimi.active_param_count() <= 36e9
+    mix = get_arch("mixtral-8x7b")
+    assert 11e9 <= mix.active_param_count() <= 15e9
+
+
+def test_triangular_attention_matches_masked():
+    """§Perf hillclimb #1: triangular flash == masked flash (and ref)."""
+    import dataclasses
+    cfg = ARCHS["glm4-9b"].reduced()
+    cfg_tri = dataclasses.replace(cfg, attn_impl="triangular")
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, 2, 24)
+    a, _ = forward(params, cfg, batch, remat=False)
+    b, _ = forward(params, cfg_tri, batch, remat=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_triangular_attention_grads_match():
+    import dataclasses
+    from repro.distributed.step import make_loss_fn
+    cfg = ARCHS["h2o-danube-3-4b"].reduced(swa_window=8)
+    cfg_tri = dataclasses.replace(cfg, attn_impl="triangular")
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, 2, 16)
+    g1 = jax.grad(make_loss_fn(cfg, None, remat=True))(params, batch)
+    g2 = jax.grad(make_loss_fn(cfg_tri, None, remat=True))(params, batch)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_int8_kv_cache_decode_close():
+    """§Perf hillclimb: int8 KV cache stays within 5% of full precision."""
+    import dataclasses
+    cfg = ARCHS["glm4-9b"].reduced()
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    params = init_params(KEY, cfg)
+    B, S = 2, 10
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+
+    def run(c):
+        st = init_decode_state(params, c, B, context_len=16)
+        outs = []
+        for t in range(S):
+            lg, st = decode_step(params, c, st, toks[:, t])
+            outs.append(lg)
+        return jnp.stack(outs, 1)
+
+    ref, q8 = run(cfg), run(cfg8)
+    rel = float(jnp.abs(q8 - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.05, rel
+
+
+def test_int8_kv_state_is_half_size():
+    import dataclasses
+    cfg = ARCHS["glm4-9b"].reduced()
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    params = init_params(KEY, cfg)
+    st16 = init_decode_state(params, cfg, 2, 64, dtype=jnp.bfloat16)
+    st8 = init_decode_state(params, cfg8, 2, 64, dtype=jnp.bfloat16)
+    b16 = st16["k"].nbytes + st16["v"].nbytes
+    b8 = st8["k"].nbytes + st8["v"].nbytes + st8["k_scale"].nbytes \
+        + st8["v_scale"].nbytes
+    assert b8 < 0.6 * b16

@@ -1,0 +1,298 @@
+"""Optimizer, schedules, compression, data pipeline, checkpointing,
+straggler watchdog."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch
+from repro.data.pipeline import ShardedLoader
+from repro.distributed.straggler import StragglerConfig, StragglerWatchdog
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compression import compress_init, compressed_gradients
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+
+
+# ------------------------------------------------------------------- adamw
+class TestAdamW:
+    def _quadratic_converges(self, params):
+        state = adamw_init(params)
+        cfg = AdamWConfig(weight_decay=0.0)
+        target = jax.tree.map(jnp.zeros_like, params)
+
+        def loss(p):
+            return sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(p))
+
+        l0 = float(loss(params))
+        for i in range(60):
+            grads = jax.grad(loss)(params)
+            params, state = adamw_update(grads, state, params,
+                                         jnp.asarray(0.05), cfg)
+        assert float(loss(params)) < l0 * 0.1
+        return params
+
+    def test_converges_plain_tree(self):
+        self._quadratic_converges({"a": jnp.ones((4, 4)), "b": jnp.ones((3,))})
+
+    def test_converges_namedtuple_tree(self):
+        """Regression: NamedTuple subtrees must survive the update unzip."""
+        from repro.models.moe import MoEParams
+        params = {"moe": MoEParams(router=jnp.ones((2, 2)),
+                                   w_gate=jnp.ones((2, 2, 2)),
+                                   w_up=jnp.ones((2, 2, 2)),
+                                   w_down=jnp.ones((2, 2, 2)))}
+        out = self._quadratic_converges(params)
+        assert isinstance(out["moe"], MoEParams)
+
+    def test_grad_clip(self):
+        params = {"w": jnp.ones((4,))}
+        state = adamw_init(params)
+        huge = {"w": jnp.full((4,), 1e6)}
+        p1, _ = adamw_update(huge, state, params, jnp.asarray(0.1),
+                             AdamWConfig(grad_clip=1.0, weight_decay=0.0))
+        # with clipping the first step is bounded by ~lr
+        assert float(jnp.abs(p1["w"] - params["w"]).max()) < 0.2
+
+    def test_bf16_params_f32_moments(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = adamw_init(params)
+        assert state["mu"]["w"].dtype == jnp.float32
+        g = {"w": jnp.ones((4,), jnp.bfloat16)}
+        p1, s1 = adamw_update(g, state, params, jnp.asarray(0.01))
+        assert p1["w"].dtype == jnp.bfloat16
+        assert s1["count"] == 1
+
+
+class TestSchedules:
+    def test_wsd_phases(self):
+        lr = wsd_schedule(1.0, warmup_steps=10, stable_steps=50, decay_steps=20,
+                          final_frac=0.1)
+        assert float(lr(0)) == 0.0
+        assert float(lr(5)) == pytest.approx(0.5)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(40)) == pytest.approx(1.0)      # stable plateau
+        assert float(lr(60)) == pytest.approx(1.0)
+        assert 0.09 < float(lr(80)) < 0.11              # decayed to final
+        assert float(lr(200)) == pytest.approx(0.1)
+
+    def test_cosine(self):
+        lr = cosine_schedule(1.0, 10, 100)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)
+
+
+class TestCompression:
+    def test_error_feedback_unbiased(self):
+        """Accumulated compressed grads converge to accumulated true grads."""
+        g = {"w": jnp.asarray([0.3, -0.7, 0.001, 5.0])}
+        st = compress_init(g)
+        total = jnp.zeros(4)
+        for _ in range(50):
+            cg, st = compressed_gradients(g, st)
+            total = total + cg["w"]
+        np.testing.assert_allclose(np.asarray(total / 50),
+                                   np.asarray(g["w"]), rtol=0.02, atol=1e-3)
+
+    def test_quantization_bounded_error(self):
+        g = {"w": jnp.linspace(-1, 1, 256)}
+        st = compress_init(g)
+        cg, st = compressed_gradients(g, st)
+        assert float(jnp.abs(cg["w"] - g["w"]).max()) <= 1.0 / 127 + 1e-6
+
+
+# -------------------------------------------------------------------- data
+class TestData:
+    def test_deterministic_restart(self):
+        cfg = get_arch("minicpm-2b").reduced()
+        a = ShardedLoader(cfg, 32, 4, seed=7)
+        batches = [a.next() for _ in range(5)]
+        st = a.state()
+        more = [a.next() for _ in range(3)]
+        b = ShardedLoader(cfg, 32, 4, seed=7)
+        b.restore(st)
+        for want in more:
+            got = b.next()
+            np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+    def test_shards_differ(self):
+        cfg = get_arch("minicpm-2b").reduced()
+        a = ShardedLoader(cfg, 32, 4, shard=0, num_shards=2, seed=7).next()
+        b = ShardedLoader(cfg, 32, 4, shard=1, num_shards=2, seed=7).next()
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_learnable_structure(self):
+        """Markov stream has non-uniform bigram stats (lower entropy)."""
+        cfg = get_arch("minicpm-2b").reduced()
+        t = ShardedLoader(cfg, 512, 8, seed=3).next()["tokens"].ravel()
+        uniq = len(np.unique(t))
+        assert uniq < 300  # 64 states x 8 emissions, not full vocab
+
+    def test_vlm_frontend(self):
+        cfg = get_arch("llama-3_2-vision-90b").reduced()
+        b = ShardedLoader(cfg, 16, 2, seed=1).next()
+        assert "frontend" in b
+        assert b["frontend"].shape == (2, cfg.n_frontend_tokens, cfg.d_model)
+
+
+# -------------------------------------------------------------- checkpoint
+class TestCheckpoint:
+    def _tree(self):
+        return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                           "b": jnp.ones((5,), jnp.bfloat16)},
+                "count": jnp.asarray(3)}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        tree = self._tree()
+        mgr.save(7, tree, extra={"loader": {"step": 9}})
+        out, extra, step = mgr.restore(tree)
+        assert step == 7 and extra["loader"]["step"] == 9
+        np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                      np.asarray(tree["params"]["w"]))
+        assert out["params"]["b"].dtype == np.dtype("bfloat16") or \
+            str(out["params"]["b"].dtype) == "bfloat16"
+
+    def test_atomicity_no_tmp_left(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, self._tree())
+        assert not list(tmp_path.glob("*.tmp"))
+        assert (tmp_path / "step_00000001" / "manifest.json").exists()
+
+    def test_corruption_detected(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        tree = self._tree()
+        path = mgr.save(2, tree)
+        victim = next(path.glob("params__w.bin"))
+        data = bytearray(victim.read_bytes())
+        data[-1] ^= 0xFF
+        victim.write_bytes(bytes(data))
+        with pytest.raises(IOError):
+            mgr.restore(tree)
+
+    def test_keep_last(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree())
+        assert sorted(mgr.all_steps()) == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save_async(5, self._tree())
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+    def test_resume_training_loop(self, tmp_path):
+        """End-to-end: train, checkpoint, restart, identical continuation."""
+        from repro.distributed.step import make_train_step
+        from repro.models.transformer import init_params
+        from repro.optim.adamw import adamw_init
+        from repro.optim.schedules import wsd_schedule
+
+        cfg = get_arch("minicpm-2b").reduced()
+        key = jax.random.PRNGKey(0)
+        step_fn = jax.jit(make_train_step(
+            cfg, mesh=None, lr_fn=wsd_schedule(1e-3, 2, 10, 5)))
+        loader = ShardedLoader(cfg, 16, 2, seed=5)
+
+        params = init_params(key, cfg)
+        opt = adamw_init(params)
+        mgr = CheckpointManager(tmp_path)
+        for step in range(4):
+            batch = {k: jnp.asarray(v) for k, v in loader.next().items()}
+            params, opt, loss = step_fn(params, opt, batch,
+                                        jnp.asarray(step, jnp.int32))
+            if step == 1:
+                mgr.save(2, {"p": params, "o": opt},
+                         extra={"loader": loader.state()})
+        want = float(loss)
+
+        # restart from step 2
+        tmpl = {"p": init_params(key, cfg), "o": adamw_init(params)}
+        state, extra, start = mgr.restore(tmpl)
+        loader2 = ShardedLoader(cfg, 16, 2, seed=5)
+        loader2.restore(extra["loader"])
+        p2, o2 = state["p"], state["o"]
+        for step in range(start, 4):
+            batch = {k: jnp.asarray(v) for k, v in loader2.next().items()}
+            p2, o2, loss2 = step_fn(p2, o2, batch, jnp.asarray(step, jnp.int32))
+        assert float(loss2) == pytest.approx(want, rel=1e-5)
+
+
+# --------------------------------------------------------------- straggler
+class TestStraggler:
+    def test_flags_slow_steps(self):
+        wd = StragglerWatchdog(StragglerConfig(warmup_steps=2, threshold=2.0))
+        for _ in range(5):
+            wd.end_step(duration_s=1.0)
+        rep = wd.end_step(duration_s=3.0)
+        assert rep.flagged
+        rep = wd.end_step(duration_s=1.0)
+        assert not rep.flagged
+
+    def test_evict_advice_after_consecutive(self):
+        wd = StragglerWatchdog(StragglerConfig(warmup_steps=1, threshold=1.5,
+                                               evict_after=3))
+        wd.end_step(duration_s=1.0)
+        wd.end_step(duration_s=1.0)
+        reps = [wd.end_step(host=4, duration_s=5.0) for _ in range(3)]
+        assert reps[-1].evict_advised
+        assert wd.worst_hosts() == [4]
+
+    def test_straggler_does_not_poison_ewma(self):
+        wd = StragglerWatchdog(StragglerConfig(warmup_steps=1, threshold=2.0))
+        wd.end_step(duration_s=1.0)
+        wd.end_step(duration_s=1.0)
+        before = wd.ewma
+        wd.end_step(duration_s=10.0)   # flagged -> must not update ewma
+        assert wd.ewma == before
+
+
+class TestInt8Moments:
+    """8-bit Adam moments (the trillion-param capacity lever, §Dry-run)."""
+
+    def test_converges(self):
+        params = {"a": jnp.ones((8, 16)), "b": jnp.ones((5,))}
+        cfg = AdamWConfig(weight_decay=0.0, moment_dtype="int8")
+        state = adamw_init(params, "int8")
+
+        def loss(p):
+            return sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(p))
+
+        l0 = float(loss(params))
+        for _ in range(80):
+            g = jax.grad(loss)(params)
+            params, state = adamw_update(g, state, params, jnp.asarray(0.05),
+                                         cfg)
+        assert float(loss(params)) < l0 * 0.05
+
+    def test_optimizes_as_well_as_f32(self):
+        """Per the 8-bit-Adam literature: parameter trajectories diverge
+        under quantization noise, but the achieved LOSS matches f32."""
+        rng = jax.random.PRNGKey(3)
+        params = {"w": jax.random.normal(rng, (16, 16))}
+        tgt = jax.random.normal(jax.random.fold_in(rng, 1), (16, 16))
+
+        def loss(p):
+            return jnp.mean(jnp.square(p["w"] - tgt))
+
+        p32, s32 = dict(params), adamw_init(params)
+        p8, s8 = dict(params), adamw_init(params, "int8")
+        c32 = AdamWConfig(weight_decay=0.0)
+        c8 = AdamWConfig(weight_decay=0.0, moment_dtype="int8")
+        for _ in range(30):
+            g32 = jax.grad(loss)(p32)
+            p32, s32 = adamw_update(g32, s32, p32, jnp.asarray(0.02), c32)
+            g8 = jax.grad(loss)(p8)
+            p8, s8 = adamw_update(g8, s8, p8, jnp.asarray(0.02), c8)
+        l32, l8 = float(loss(p32)), float(loss(p8))
+        assert l8 < l32 * 1.1 + 1e-3, (l8, l32)
+
+    def test_state_is_4x_smaller(self):
+        params = {"w": jnp.ones((64, 256))}
+        s32 = adamw_init(params)
+        s8 = adamw_init(params, "int8")
+        b32 = sum(l.nbytes for l in jax.tree.leaves(s32))
+        b8 = sum(l.nbytes for l in jax.tree.leaves(s8))
+        assert b8 < 0.3 * b32

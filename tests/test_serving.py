@@ -1,0 +1,98 @@
+"""Continuous-batching scheduler over the real decode step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.transformer import decode_step, init_decode_state, init_params
+from repro.serving.scheduler import BatchScheduler, Request, SchedulerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_arch("minicpm-2b").reduced()
+    params = init_params(KEY, cfg)
+    step = jax.jit(lambda st, toks: decode_step(params, cfg, st, toks))
+
+    def init_state(batch):
+        return init_decode_state(params, cfg, batch, context_len=64)
+
+    return cfg, step, init_state
+
+
+def _mk(engine, slots=2):
+    cfg, step, init_state = engine
+    return cfg, BatchScheduler(step, init_state,
+                               SchedulerConfig(batch_slots=slots), cfg.vocab)
+
+
+def test_single_request_completes(engine):
+    cfg, sched = _mk(engine)
+    sched.submit(Request(rid=1, prompt=np.asarray([5, 6, 7], np.int32),
+                         max_new_tokens=4))
+    done = sched.run()
+    assert 1 in done
+    assert len(done[1].output) == 4
+    assert all(0 <= t < cfg.vocab for t in done[1].output)
+
+
+def test_more_requests_than_slots(engine):
+    cfg, sched = _mk(engine, slots=2)
+    for rid in range(5):
+        sched.submit(Request(rid=rid,
+                             prompt=np.asarray([rid + 1, rid + 2], np.int32),
+                             max_new_tokens=3))
+    done = sched.run()
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    assert all(len(r.output) == 3 for r in done.values())
+
+
+def test_mid_flight_join(engine):
+    """A request submitted after ticking starts still completes."""
+    cfg, sched = _mk(engine, slots=2)
+    sched.submit(Request(rid=1, prompt=np.asarray([3], np.int32),
+                         max_new_tokens=6))
+    # tick a few times manually, then add a second request
+    sched.run(max_ticks=3)
+    sched.submit(Request(rid=2, prompt=np.asarray([9, 9], np.int32),
+                         max_new_tokens=2))
+    done = sched.run()
+    assert sorted(done) == [1, 2]
+
+
+def test_eos_stops_early(engine):
+    cfg, sched = _mk(engine)
+    # greedy decode is deterministic: discover the first generated token,
+    # then use it as the EOS for a second identical request
+    sched.submit(Request(rid=1, prompt=np.asarray([5, 6, 7], np.int32),
+                         max_new_tokens=4))
+    done = sched.run()
+    first_tok = done[1].output[0]
+
+    cfg2, sched2 = _mk(engine)
+    sched2.submit(Request(rid=2, prompt=np.asarray([5, 6, 7], np.int32),
+                          max_new_tokens=8, eos_id=first_tok))
+    done2 = sched2.run()
+    assert done2[2].output[-1] == first_tok
+    assert len(done2[2].output) < 8
+
+
+def test_deterministic_vs_slot_assignment(engine):
+    """The same request produces the same tokens regardless of which other
+    requests share the batch (slot isolation)."""
+    cfg, sched_a = _mk(engine, slots=2)
+    sched_a.submit(Request(rid=1, prompt=np.asarray([11, 12], np.int32),
+                           max_new_tokens=3))
+    out_alone = sched_a.run()[1].output
+
+    cfg, sched_b = _mk(engine, slots=2)
+    sched_b.submit(Request(rid=1, prompt=np.asarray([11, 12], np.int32),
+                           max_new_tokens=3))
+    sched_b.submit(Request(rid=2, prompt=np.asarray([40, 41, 42], np.int32),
+                           max_new_tokens=3))
+    out_shared = sched_b.run()[1].output
+    assert out_alone == out_shared

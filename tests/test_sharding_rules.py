@@ -1,0 +1,190 @@
+"""Sharding rules, FSDP specs, optimizer-state specs, and the dry-run's
+HLO-collective parser / roofline analytics (pure logic — no mesh needed
+beyond a 1-device stand-in for divisibility checks uses a fake mesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.distributed.sharding import (MeshAxes, fsdp_param_specs,
+                                        opt_state_specs, param_specs)
+from repro.models.transformer import init_params
+from repro.optim.adamw import adamw_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+class _FakeMesh:
+    """Duck-typed mesh: just axis sizes + names (no devices needed)."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+AX = MeshAxes(dp=("data",), tp="model")
+
+
+def _specs(arch_id, kind="train"):
+    cfg = get_arch(arch_id)
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg, jnp.bfloat16), KEY)
+    return cfg, shapes, param_specs(shapes, cfg, MESH, AX, kind=kind)
+
+
+class TestParamSpecs:
+    def test_dense_attention_tp(self):
+        _, _, sp = _specs("glm4-9b")
+        assert sp["blocks"]["wq"] == P(None, None, "model")
+        assert sp["blocks"]["wo"] == P(None, "model", None)
+        assert sp["blocks"]["w_down"] == P(None, "model", None)
+        assert sp["embed"] == P("model", None)
+        assert sp["blocks"]["ln1"] == P()
+
+    def test_moe_ep_fsdp_train(self):
+        _, _, sp = _specs("kimi-k2-1t-a32b")
+        moe = sp["blocks"]["moe"]
+        assert moe.w_gate == P(None, "model", ("data",), None)
+        assert moe.router == P(None, None, None)
+
+    def test_moe_resident_decode_layout(self):
+        _, _, sp = _specs("kimi-k2-1t-a32b", kind="decode")
+        moe = sp["blocks"]["moe"]
+        assert moe.w_gate == P(None, "model", None, ("data",))
+        assert moe.w_down == P(None, "model", ("data",), None)
+
+    def test_mixtral_tp_in_expert(self):
+        _, _, sp = _specs("mixtral-8x7b")
+        moe = sp["blocks"]["moe"]
+        # (L, E, D, F): F over model, D over data (FSDP)
+        assert moe.w_gate == P(None, None, ("data",), "model")
+
+    def test_ssm_sharded_for_mamba_replicated_for_hybrid(self):
+        _, _, sp = _specs("mamba2-2_7b")
+        assert sp["blocks"]["ssm"].in_x == P(None, None, "model")
+        assert sp["blocks"]["ssm"].in_B == P()
+        _, _, sp = _specs("hymba-1_5b")
+        assert sp["blocks"]["ssm"].in_x == P()  # 50 heads % 16 != 0
+
+    def test_indivisible_falls_back_to_replicate(self):
+        # hand-built leaf whose rule-assigned axis does not divide 16
+        cfg = get_arch("glm4-9b")
+        tree = {"blocks": {"wq": jax.ShapeDtypeStruct((2, 30, 30), jnp.float32)}}
+        sp = param_specs(tree, cfg, MESH, AX)
+        assert sp["blocks"]["wq"] == P()  # 30 % 16 != 0 -> replicate
+
+    def test_vlm_superblock_lead_axes(self):
+        _, _, sp = _specs("llama-3_2-vision-90b")
+        # blocks stacked (n_cross, cross_every, ...) -> two leading Nones
+        assert sp["blocks"]["wq"] == P(None, None, None, "model")
+        assert sp["cross"]["wq"] == P(None, None, "model")
+
+
+class TestFSDPSpecs:
+    def test_largest_dim_sharded_over_all_axes(self):
+        cfg, shapes, _ = _specs("glm4-9b")
+        sp = fsdp_param_specs(shapes, cfg, MESH, AX)
+        # (L=40, 4096, 4096): largest divisible dim shards over 256
+        assert sp["blocks"]["wq"] == P(None, ("data", "model"), None)
+        assert sp["embed"] == P(("data", "model"), None)
+
+    def test_axes_subset(self):
+        cfg, shapes, _ = _specs("glm4-9b")
+        sp = fsdp_param_specs(shapes, cfg, MESH, AX, axes=("model",))
+        assert sp["blocks"]["wq"] == P(None, ("model",), None)
+
+
+class TestOptStateSpecs:
+    def test_zero1_adds_dp_axis(self):
+        cfg, shapes, sp = _specs("glm4-9b")
+        opt = jax.eval_shape(adamw_init, shapes)
+        osp = opt_state_specs(opt, sp, MESH, AX)
+        # wq param spec (None,None,model) -> moments add data on a free dim
+        assert "data" in str(osp["mu"]["blocks"]["wq"])
+
+    def test_zero1_skips_already_dp_sharded(self):
+        cfg, shapes, sp = _specs("kimi-k2-1t-a32b")
+        opt = jax.eval_shape(adamw_init, shapes)
+        osp = opt_state_specs(opt, sp, MESH, AX)
+        assert osp["mu"]["blocks"]["moe"].w_gate == sp["blocks"]["moe"].w_gate
+
+    def test_int8_moment_specs(self):
+        cfg, shapes, sp = _specs("glm4-9b")
+        opt = jax.eval_shape(lambda p: adamw_init(p, "int8"), shapes)
+        osp = opt_state_specs(opt, sp, MESH, AX)
+        assert "mu_q" in osp and "mu_s" in osp
+        # scale spec = value spec minus the quantized last axis
+        vq = tuple(osp["mu_q"]["blocks"]["wq"])
+        vs = tuple(osp["mu_s"]["blocks"]["wq"])
+        assert len(vs) <= max(len(vq) - 1, 0) or vs == ()
+
+
+class TestCollectiveParser:
+    def test_parse_and_ring_costs(self):
+        from repro.launch.dryrun import parse_collectives
+        hlo = """
+  %ar = bf16[16,4096] all-reduce(bf16[16,4096] %x), replica_groups={{0,1,2,3}}
+  %ag = f32[1024] all-gather(f32[256] %y), replica_groups=[2,8]<=[16]
+  %cp = f32[128] collective-permute(f32[128] %z)
+"""
+        st = parse_collectives(hlo, default_group=16)
+        ar = st["all-reduce"]
+        assert ar["count"] == 1
+        assert ar["result_bytes"] == 16 * 4096 * 2
+        assert ar["wire_bytes"] == pytest.approx(2 * 3 / 4 * 16 * 4096 * 2)
+        ag = st["all-gather"]
+        assert ag["wire_bytes"] == pytest.approx(7 / 8 * 1024 * 4)
+        assert st["collective-permute"]["wire_bytes"] == 128 * 4
+        assert st["total_wire_bytes"] > 0
+
+    def test_start_done_not_double_counted(self):
+        from repro.launch.dryrun import parse_collectives
+        hlo = """
+  %s = bf16[64] all-reduce-start(bf16[64] %x), replica_groups={{0,1}}
+  %d = bf16[64] all-reduce-done(bf16[64] %s)
+"""
+        st = parse_collectives(hlo, 2)
+        assert st["all-reduce"]["count"] == 1
+
+
+class TestRooflineAnalytics:
+    def test_decode_memory_equals_state(self):
+        from repro.launch.roofline import analytic_memory_bytes
+        rec = {"arch": "glm4-9b", "shape": "decode_32k", "chips": 256,
+               "analytic_state_bytes_per_device": 123456}
+        assert analytic_memory_bytes(rec) == 123456
+
+    def test_train_memory_exceeds_prefill(self):
+        from repro.launch.roofline import analytic_memory_bytes
+        tr = analytic_memory_bytes({"arch": "glm4-9b", "shape": "train_4k",
+                                    "chips": 256,
+                                    "analytic_state_bytes_per_device": 0})
+        pf = analytic_memory_bytes({"arch": "glm4-9b", "shape": "prefill_32k",
+                                    "chips": 256,
+                                    "analytic_state_bytes_per_device": 0})
+        assert tr > 0 and pf > 0
+        # train re-reads weights (remat) + writes grads/moments; per token it
+        # moves far more than inference
+        tr_tok = tr / (256 * 4096 / 16)
+        pf_tok = pf / (32 * 32768 / 16)
+        assert tr_tok > pf_tok
+
+    def test_model_flops_train_vs_decode(self):
+        from repro.configs.base import SHAPES
+        from repro.launch.dryrun import model_flops
+        cfg = get_arch("glm4-9b")
+        tr = model_flops(cfg, SHAPES["train_4k"])
+        de = model_flops(cfg, SHAPES["decode_32k"])
+        assert tr > 1000 * de
+        # 6*N*D should dominate the train estimate
+        assert tr == pytest.approx(
+            6 * cfg.active_param_count() * 256 * 4096, rel=0.2)
+
+    def test_variants_registry(self):
+        from repro.launch.dryrun import VARIANTS
+        for v in ("baseline", "tri", "fsdp", "kvq8", "repx", "opt8",
+                  "compress", "mb4"):
+            assert v in VARIANTS
