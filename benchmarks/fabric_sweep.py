@@ -1,0 +1,106 @@
+"""Fabric congestion / pooling sweep: per-host bandwidth across topologies
+and host counts, plus the vectorized congestion estimator's throughput.
+
+Rows follow the harness convention ``(name, us_per_call, derived)``:
+``us_per_call`` is simulator wall-clock per datapoint, ``derived`` the
+simulated metric.  The headline result: on any shared-bottleneck topology,
+per-host bandwidth drops measurably as hosts are added, while a ``direct``
+private-link configuration scales flat — the fabric's reason to exist.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.devices import DRAMDevice
+from repro.core.fabric import Fabric, MemoryPool, build_topology
+from repro.core.workloads.driver import MultiHostDriver
+
+Row = Tuple[str, float, str]
+
+ACCESSES_PER_HOST = 20_000
+LINE = 64
+
+# (tag, topology kind, kwargs builder) — every fabric shape the subsystem
+# supports, each sharing one pooled device unless noted.
+SWEEP = [
+    ("direct", "direct", lambda nh: dict(num_pairs=nh)),
+    ("star", "single_switch", lambda nh: dict(num_hosts=nh, num_devices=1)),
+    ("tree2", "two_level", lambda nh: dict(num_hosts=nh, num_devices=1,
+                                           num_leaves=max(1, nh // 2))),
+    ("mesh", "mesh", lambda nh: dict(num_hosts=nh, num_devices=1,
+                                     rows=2, cols=2)),
+]
+HOST_COUNTS = [1, 2, 4]
+
+
+def _stream_trace(host: int, n: int = ACCESSES_PER_HOST):
+    base = host << 30
+    return [(base + i * LINE, LINE, i % 4 == 0) for i in range(n)]
+
+
+def bench_fabric_sweep() -> List[Row]:
+    """Per-host bandwidth for every topology x host count."""
+    rows: List[Row] = []
+    for tag, kind, kw in SWEEP:
+        for nh in HOST_COUNTS:
+            fab = Fabric.build(kind, **kw(nh))
+            t0 = time.perf_counter()
+            if tag == "direct":
+                # Private link per host: one device per pair, no sharing.
+                views = [fab.mount(f"h{i}", f"d{i}", DRAMDevice())
+                         for i in range(nh)]
+            else:
+                pool = MemoryPool(fab, {"d0": DRAMDevice()})
+                views = pool.views([f"h{i}" for i in range(nh)])
+            res = MultiHostDriver(views).run(
+                [_stream_trace(h) for h in range(nh)])
+            wall = (time.perf_counter() - t0) * 1e6
+            per_host = res.min_host_bandwidth_gbps
+            rows.append((
+                f"fabric/{tag}/hosts{nh}",
+                wall / (nh * ACCESSES_PER_HOST),
+                f"{per_host:.2f}GB/s/host,agg={res.aggregate_bandwidth_gbps:.2f}GB/s",
+            ))
+    return rows
+
+
+def bench_congestion_estimator(n: int = 200_000) -> List[Row]:
+    """Vectorized (JAX) congestion estimate vs the exact busy-until replay."""
+    from repro.core.fabric.link_sim import LinkCongestionSim
+
+    fab = Fabric.build("two_level", num_hosts=4, num_devices=2, num_leaves=2)
+    sim = LinkCongestionSim(fab, fab.topology.hosts, fab.topology.devices)
+    rng = np.random.default_rng(7)
+    hi = rng.integers(0, 4, n)
+    di = rng.integers(0, 2, n)
+    nb = np.full(n, LINE)
+
+    out = sim.estimate(hi, di, nb, window_s=1e-4)    # compile + warm
+    t0 = time.perf_counter()
+    out = sim.estimate(hi, di, nb, window_s=1e-4)
+    jax_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    what_if = sim.what_if_bandwidth(hi, di, nb, 1e-4, [0.5, 1.0, 2.0, 4.0])
+    sweep_s = time.perf_counter() - t0
+
+    return [
+        ("fabric/estimator/segment_sum", jax_s * 1e6 / n,
+         f"{n / jax_s / 1e6:.1f}Macc/s,bottleneck={out['bottleneck_link']}"),
+        ("fabric/estimator/what_if_x4", sweep_s * 1e6 / n,
+         f"maxutil@1x={what_if['max_link_utilization'][1]:.2f}"),
+    ]
+
+
+ALL = [bench_fabric_sweep, bench_congestion_estimator]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us_per_call, derived in fn():
+            print(f"{name},{us_per_call:.2f},{derived}")

@@ -15,6 +15,7 @@ import sys
 MODULES = [
     "benchmarks.paper_figures",
     "benchmarks.trace_sim_speed",
+    "benchmarks.fabric_sweep",
     "benchmarks.kernel_bench",
     "benchmarks.ablations",
     "benchmarks.roofline_report",

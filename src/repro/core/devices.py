@@ -55,6 +55,16 @@ class MemDevice:
         self.stats["writes" if write else "reads"] += 1
         self.stats["bytes"] += size
 
+    # fabric mount hook ----------------------------------------------------
+    def detach_link(self) -> "MemDevice":
+        """Replace this device's private point-to-point CXL link (if any)
+        with a :class:`NullLink`, so a switch fabric can own transport
+        instead.  No-op for devices without a ``link`` (dram, pmem).
+        Returns ``self`` for chaining."""
+        if hasattr(self, "link"):
+            self.link = NullLink()
+        return self
+
     # event-driven path ------------------------------------------------------
     def access(self, pkt: Packet, cb: Callable[[Packet], None]) -> None:
         done = self.service(self.engine.now, pkt.addr, pkt.size, pkt.is_write())
@@ -115,6 +125,21 @@ class CXLLink:
         start = max(now, self._busy)
         self._busy = start + occ
         return start + occ + ns(self.rt_extra_ns)
+
+
+class NullLink(CXLLink):
+    """Zero-cost link: transport is modeled elsewhere (the fabric layer).
+
+    Used by :class:`repro.core.fabric.FabricAttachedDevice` to neutralize a
+    CXL device's private point-to-point link so the switch fabric owns the
+    full transport path and link latency is not double-counted.
+    """
+
+    def __init__(self) -> None:
+        super().__init__(bw_gbps=float("inf"), rt_extra_ns=0.0)
+
+    def traverse(self, now: int, nbytes: int) -> int:
+        return now
 
 
 class CXLDRAMDevice(MemDevice):
@@ -276,6 +301,9 @@ def make_device(name: str, engine: Optional[EventEngine] = None,
         "cxl-ssd-cache": CachedCXLSSDDevice,
     }
     try:
-        return table[name](engine, **kwargs)
+        cls = table[name]
     except KeyError:
         raise ValueError(f"unknown device {name!r}; choose from {DEVICE_NAMES}") from None
+    # Constructor errors (e.g. bad kwargs) propagate with their real message —
+    # only the name lookup is guarded.
+    return cls(engine, **kwargs)

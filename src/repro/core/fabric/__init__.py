@@ -1,0 +1,33 @@
+"""repro.core.fabric — CXL switch-fabric subsystem.
+
+Multi-host switch topologies (direct / single-switch / two-level tree /
+mesh), deterministic shortest-path routing, per-port bandwidth occupancy,
+and pooled-memory scenarios.  ``Fabric.traverse`` mirrors
+``CXLLink.traverse`` so every existing ``MemDevice`` mounts behind the
+fabric unchanged via ``FabricAttachedDevice`` / ``MemoryPool``.
+
+The vectorized congestion estimator lives in
+:mod:`repro.core.fabric.link_sim` (imported lazily — it pulls in JAX).
+"""
+
+from repro.core.fabric.fabric import Fabric, FabricAttachedDevice
+from repro.core.fabric.pool import HostPortView, MemoryPool, PoolAddressMapper
+from repro.core.fabric.routing import RoutingTable
+from repro.core.fabric.switch import SwitchPort
+from repro.core.fabric.topology import (
+    TOPOLOGY_BUILDERS,
+    Topology,
+    build_topology,
+    direct,
+    mesh,
+    single_switch,
+    two_level,
+)
+
+__all__ = [
+    "Fabric", "FabricAttachedDevice",
+    "MemoryPool", "HostPortView", "PoolAddressMapper",
+    "RoutingTable", "SwitchPort",
+    "Topology", "build_topology", "TOPOLOGY_BUILDERS",
+    "direct", "single_switch", "two_level", "mesh",
+]

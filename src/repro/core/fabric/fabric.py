@@ -1,0 +1,138 @@
+"""The fabric proper: routed, contended transport between endpoints.
+
+:meth:`Fabric.traverse` mirrors :meth:`repro.core.devices.CXLLink.traverse`
+— same analytic busy-until fast path, same return convention (arrival tick
+including the CXL.mem round-trip extra) — but walks a routed multi-hop path
+with per-port occupancy and per-switch store-and-forward latency.  On a
+``direct`` topology with matching parameters it reproduces ``CXLLink``
+timing *exactly* (tested), so mounting a device behind the fabric is a
+strict generalization of the paper's point-to-point configuration.
+
+:class:`FabricAttachedDevice` composes the fabric with any existing
+:class:`~repro.core.devices.MemDevice` unchanged: fabric transport first,
+then the device's own media timing.  Devices that embed a private
+``CXLLink`` (cxl-dram, cxl-ssd, cxl-ssd-cache) are neutralized via
+:meth:`~repro.core.devices.MemDevice.detach_link` so link latency is not
+double-counted.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.devices import MemDevice
+from repro.core.engine import ns
+from repro.core.fabric.routing import RoutingTable
+from repro.core.fabric.switch import SwitchPort
+from repro.core.fabric.topology import SWITCH, Topology, build_topology
+
+DEFAULT_FORWARD_NS = 35.0    # per-switch store-and-forward latency
+DEFAULT_RT_EXTRA_NS = 50.0   # Table I: total CXL.mem network round-trip extra
+
+
+class Fabric:
+    """A switch fabric instantiated from a static :class:`Topology`."""
+
+    def __init__(self, topology: Topology,
+                 forward_ns: float = DEFAULT_FORWARD_NS,
+                 rt_extra_ns: float = DEFAULT_RT_EXTRA_NS) -> None:
+        topology.validate()
+        self.topology = topology
+        self.routing = RoutingTable(topology)
+        self.forward_ns = forward_ns
+        self.rt_extra_ns = rt_extra_ns
+        self.ports: Dict[Tuple[str, str], SwitchPort] = {
+            (u, v): SwitchPort(u, v, spec.bw_gbps, spec.prop_ns)
+            for (u, v), spec in topology.links.items()
+        }
+        self.stats = {"transfers": 0, "bytes": 0}
+
+    @classmethod
+    def build(cls, kind: str, *, forward_ns: float = DEFAULT_FORWARD_NS,
+              rt_extra_ns: float = DEFAULT_RT_EXTRA_NS, **topo_kwargs) -> "Fabric":
+        return cls(build_topology(kind, **topo_kwargs),
+                   forward_ns=forward_ns, rt_extra_ns=rt_extra_ns)
+
+    # ------------------------------------------------------------ transport
+    def path(self, src: str, dst: str) -> List[str]:
+        return self.routing.path(src, dst)
+
+    def traverse(self, now: int, src: str, dst: str, nbytes: int) -> int:
+        """Carry ``nbytes`` from ``src`` to ``dst``; returns the completion
+        tick (arrival + round-trip extra), queueing on every port's
+        busy-until along the route."""
+        path = self.routing.path(src, dst)
+        t = now
+        for u, v in zip(path, path[1:]):
+            t = self.ports[(u, v)].transmit(t, nbytes)
+            if self.topology.kind(v) == SWITCH:
+                t += ns(self.forward_ns)
+        self.stats["transfers"] += 1
+        self.stats["bytes"] += nbytes
+        return t + ns(self.rt_extra_ns)
+
+    # ------------------------------------------------------------ mounting
+    def mount(self, host: str, device_node: str, device: MemDevice,
+              detach_link: bool = True) -> "FabricAttachedDevice":
+        """Attach ``device`` at ``device_node`` as seen from ``host``."""
+        return FabricAttachedDevice(self, host, device_node, device,
+                                    detach_link=detach_link)
+
+    # -------------------------------------------------------------- reports
+    def port_report(self, elapsed_ticks: int) -> List[dict]:
+        """Per-port traffic/occupancy summary, sorted by bytes desc then name
+        (deterministic)."""
+        rows = [{
+            "port": f"{p.src}->{p.dst}",
+            "bytes": p.bytes,
+            "packets": p.packets,
+            "utilization": p.utilization(elapsed_ticks),
+            "achieved_gbps": p.achieved_gbps(elapsed_ticks),
+            "queued_ticks": p.queued_ticks,
+        } for p in self.ports.values() if p.packets]
+        rows.sort(key=lambda r: (-r["bytes"], r["port"]))
+        return rows
+
+    def bottleneck_port(self, src: str, dst: str) -> SwitchPort:
+        """The minimum-bandwidth port along the route (first on ties)."""
+        path = self.routing.path(src, dst)
+        hops = [self.ports[(u, v)] for u, v in zip(path, path[1:])]
+        return min(hops, key=lambda p: p.bw_gbps)
+
+    def reset(self) -> None:
+        for p in self.ports.values():
+            p.reset()
+        self.stats = {"transfers": 0, "bytes": 0}
+
+
+class FabricAttachedDevice(MemDevice):
+    """Any :class:`MemDevice` mounted behind the fabric, unchanged.
+
+    ``service`` = fabric transport (routed, contended) + the inner device's
+    own media timing.  Presents the standard ``MemDevice`` interface so
+    :class:`~repro.core.workloads.driver.TraceDriver` and the event-driven
+    path both work against fabric-attached memory.
+    """
+
+    is_cxl = True
+
+    def __init__(self, fabric: Fabric, host: str, device_node: str,
+                 inner: MemDevice, detach_link: bool = True) -> None:
+        super().__init__(inner.engine)
+        for node, kind in ((host, "host"), (device_node, "device")):
+            if node not in fabric.topology.kinds:
+                raise ValueError(f"unknown {kind} node {node!r}")
+        fabric.routing.path(host, device_node)  # fail fast if unroutable
+        self.fabric = fabric
+        self.host = host
+        self.device_node = device_node
+        # Detach only after validation: a failed mount must not leave the
+        # caller's device silently mutated (NullLink'd).
+        self.inner = inner.detach_link() if detach_link else inner
+        self.name = f"fabric:{inner.name}@{device_node}"
+
+    def service(self, now: int, addr: int, size: int, write: bool,
+                posted: bool = False) -> int:
+        self._count(size, write)
+        t = self.fabric.traverse(now, self.host, self.device_node, size)
+        return self.inner.service(t, addr, size, write, posted)

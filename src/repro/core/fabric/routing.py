@@ -1,0 +1,64 @@
+"""Shortest-path routing over a fabric topology.
+
+Paths are computed by Dijkstra over hop count with *deterministic
+tie-breaking*: among equal-length paths the lexicographically smallest node
+sequence wins (the heap orders candidates by ``(hops, path_tuple)``).  Two
+runs of the same scenario therefore route identically — a property the
+equivalence tests and the vectorized congestion estimator both rely on.
+
+Only switches relay traffic; hosts and devices are endpoints.  Routes are
+cached per ``(src, dst)`` under the assumption that the topology is static
+once a :class:`~repro.core.fabric.fabric.Fabric` is built.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Tuple
+
+from repro.core.fabric.topology import SWITCH, Topology
+
+
+class RoutingTable:
+    def __init__(self, topology: Topology) -> None:
+        self.topology = topology
+        self._cache: Dict[Tuple[str, str], List[str]] = {}
+
+    def path(self, src: str, dst: str) -> List[str]:
+        """Node sequence ``[src, ..., dst]``; raises if unreachable."""
+        key = (src, dst)
+        cached = self._cache.get(key)
+        if cached is None:
+            cached = self._cache[key] = _shortest_path(self.topology, src, dst)
+        return cached
+
+    def hops(self, src: str, dst: str) -> int:
+        return len(self.path(src, dst)) - 1
+
+
+def _shortest_path(topo: Topology, src: str, dst: str) -> List[str]:
+    if src == dst:
+        raise ValueError(f"src == dst ({src!r})")
+    for node in (src, dst):
+        if node not in topo.kinds:
+            raise ValueError(f"unknown node {node!r}")
+    # (hops, path) heap: equal hop counts resolve to the lexicographically
+    # smallest path, making routing deterministic across runs.
+    heap: List[Tuple[int, Tuple[str, ...]]] = [(0, (src,))]
+    settled = set()
+    while heap:
+        hops, path = heapq.heappop(heap)
+        node = path[-1]
+        if node == dst:
+            return list(path)
+        if node in settled:
+            continue
+        settled.add(node)
+        for nxt in topo.neighbors(node):
+            if nxt in settled:
+                continue
+            # Endpoints never relay: expand through switches, or stop at dst.
+            if nxt != dst and topo.kind(nxt) != SWITCH:
+                continue
+            heapq.heappush(heap, (hops + 1, path + (nxt,)))
+    raise ValueError(f"no path from {src!r} to {dst!r}")

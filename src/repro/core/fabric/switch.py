@@ -1,0 +1,58 @@
+"""Switch-port timing: per-port serialization occupancy (busy-until).
+
+A :class:`SwitchPort` is one *directed* egress port of the fabric — the unit
+of bandwidth contention.  It uses the same analytic busy-until discipline as
+:class:`repro.core.devices.CXLLink.traverse`: a transfer occupies the port
+for ``nbytes / bw`` and later arrivals queue behind it.  Store-and-forward
+means a packet is fully serialized onto a link before the next hop begins,
+so multi-hop paths pay serialization once per hop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.engine import ns, to_s
+
+
+@dataclass
+class SwitchPort:
+    """Directed egress port ``src -> dst`` with busy-until occupancy."""
+
+    src: str
+    dst: str
+    bw_gbps: float
+    prop_ns: float = 0.0
+
+    busy_until: int = 0
+    packets: int = 0
+    bytes: int = 0
+    queued_ticks: int = 0     # total ticks transfers waited for the port
+    occupied_ticks: int = 0   # total ticks the port was serializing
+
+    def transmit(self, now: int, nbytes: int) -> int:
+        """Serialize ``nbytes`` onto this port starting no earlier than
+        ``now``; returns the tick the last byte arrives at ``dst``."""
+        occ = ns(nbytes / self.bw_gbps)   # bytes / (GB/s) == ns
+        start = max(now, self.busy_until)
+        self.queued_ticks += start - now
+        self.busy_until = start + occ
+        self.packets += 1
+        self.bytes += nbytes
+        self.occupied_ticks += occ
+        return start + occ + ns(self.prop_ns)
+
+    def utilization(self, elapsed_ticks: int) -> float:
+        """Fraction of ``elapsed_ticks`` the port spent serializing."""
+        return self.occupied_ticks / elapsed_ticks if elapsed_ticks else 0.0
+
+    def achieved_gbps(self, elapsed_ticks: int) -> float:
+        sec = to_s(elapsed_ticks)
+        return self.bytes / sec / 1e9 if sec else 0.0
+
+    def reset(self) -> None:
+        self.busy_until = 0
+        self.packets = 0
+        self.bytes = 0
+        self.queued_ticks = 0
+        self.occupied_ticks = 0

@@ -1,7 +1,12 @@
-from repro.core.workloads.driver import TraceDriver, TraceResult
+from repro.core.workloads.driver import (
+    MultiHostDriver,
+    MultiHostResult,
+    TraceDriver,
+    TraceResult,
+)
 from repro.core.workloads.stream import run_stream
 from repro.core.workloads.membench import run_membench
 from repro.core.workloads.viper import ViperConfig, run_viper
 
-__all__ = ["TraceDriver", "TraceResult", "run_stream", "run_membench",
-           "ViperConfig", "run_viper"]
+__all__ = ["TraceDriver", "TraceResult", "MultiHostDriver", "MultiHostResult",
+           "run_stream", "run_membench", "ViperConfig", "run_viper"]

@@ -1,15 +1,22 @@
-"""Trace driver: a CPU issue model with bounded outstanding requests.
+"""Trace drivers: CPU issue models with bounded outstanding requests.
 
-Models the core's load/store unit: ``outstanding`` line-fill-buffer slots.
-Dependent chains (membench pointer chasing) use ``outstanding=1``; streaming
-kernels use the full LFB depth so bandwidth saturates by Little's law.
+:class:`TraceDriver` models one core's load/store unit: ``outstanding``
+line-fill-buffer slots.  Dependent chains (membench pointer chasing) use
+``outstanding=1``; streaming kernels use the full LFB depth so bandwidth
+saturates by Little's law.
+
+:class:`MultiHostDriver` interleaves N such hosts onto *shared* targets
+(fabric-attached devices or pool views): accesses are issued in global
+issue-time order with deterministic host-index tie-breaking, so contention
+on shared switch ports and device media emerges from the targets' busy-until
+state rather than from run ordering.
 """
 
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Iterable, Tuple
+from typing import Iterable, List, Sequence, Tuple
 
 from repro.core.devices import MemDevice
 from repro.core.engine import to_ns, to_s
@@ -50,35 +57,138 @@ class TraceDriver:
         self.posted_writes = posted_writes
 
     def run(self, trace: Iterable[Access], start_tick: int = 0) -> TraceResult:
+        # One-host case of the interleaved driver: a single shared issue
+        # model keeps the two from drifting.
+        multi = MultiHostDriver([self.device], outstanding=self.outstanding,
+                                issue_overhead_ns=self.issue_overhead_ns,
+                                posted_writes=self.posted_writes)
+        return multi.run([trace], start_tick=start_tick).per_host[0]
+
+
+# ----------------------------------------------------------- multi-host
+@dataclass
+class MultiHostResult:
+    """Per-host :class:`TraceResult`\\ s plus cluster-level aggregates."""
+
+    per_host: List[TraceResult]
+    elapsed_ticks: int      # global span: first issue to last completion
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self.per_host)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.bytes_moved for r in self.per_host)
+
+    @property
+    def aggregate_bandwidth_gbps(self) -> float:
+        sec = to_s(self.elapsed_ticks)
+        return self.total_bytes / sec / 1e9 if sec else 0.0
+
+    @property
+    def per_host_bandwidth_gbps(self) -> List[float]:
+        """Each host's bytes over the *global* span — the fair-share number a
+        tenant actually experiences while the others are active."""
+        sec = to_s(self.elapsed_ticks)
+        return [r.bytes_moved / sec / 1e9 if sec else 0.0
+                for r in self.per_host]
+
+    @property
+    def min_host_bandwidth_gbps(self) -> float:
+        return min(self.per_host_bandwidth_gbps) if self.per_host else 0.0
+
+
+class _HostState:
+    """Issue-side state of one host inside the interleaved replay."""
+
+    __slots__ = ("target", "slots", "now", "trace", "pending", "n", "bytes",
+                 "sum_lat", "first_issue", "last_done")
+
+    def __init__(self, target: MemDevice, outstanding: int, start_tick: int,
+                 trace: Iterable[Access]) -> None:
+        self.target = target
+        self.slots = [start_tick] * outstanding
+        heapq.heapify(self.slots)
+        self.now = start_tick
+        self.trace = iter(trace)
+        self.pending = next(self.trace, None)
+        self.n = 0
+        self.bytes = 0
+        self.sum_lat = 0
+        self.first_issue: int | None = None
+        self.last_done = start_tick
+
+    def next_issue_tick(self) -> int:
+        return max(self.now, self.slots[0])
+
+
+class MultiHostDriver:
+    """Replay one trace per host against shared targets, interleaved.
+
+    Each host keeps its own LFB slots and issue clock (exactly
+    :class:`TraceDriver` semantics); globally, the host with the earliest
+    next issue tick goes first (ties break on host index).  Running host
+    traces back-to-back instead would serialize them through the shared
+    busy-until state and hide all contention — the interleave is the point.
+    """
+
+    def __init__(self, targets: Sequence[MemDevice], outstanding: int = 32,
+                 issue_overhead_ns: float = 0.5,
+                 posted_writes: bool = True) -> None:
+        if not targets:
+            raise ValueError("need at least one host target")
+        self.targets = list(targets)
+        self.outstanding = max(1, outstanding)
+        self.issue_overhead_ns = issue_overhead_ns
+        self.posted_writes = posted_writes
+
+    def run(self, traces: Sequence[Iterable[Access]],
+            start_tick: int = 0) -> MultiHostResult:
         from repro.core.engine import ns
 
-        slots: list[int] = [start_tick] * self.outstanding  # min-heap of free times
-        heapq.heapify(slots)
-        now = start_tick
-        n = 0
-        total_bytes = 0
-        sum_lat = 0
-        first_issue = None
-        last_done = start_tick
+        if len(traces) != len(self.targets):
+            raise ValueError(f"{len(traces)} traces for "
+                             f"{len(self.targets)} host targets")
         issue_ov = ns(self.issue_overhead_ns)
+        hosts = [_HostState(t, self.outstanding, start_tick, tr)
+                 for t, tr in zip(self.targets, traces)]
 
-        for addr, size, write in trace:
-            slot_free = heapq.heappop(slots)
-            issue = max(now, slot_free)
-            if first_issue is None:
-                first_issue = issue
-            done = self.device.service(issue, addr, size, write,
-                                       posted=write and self.posted_writes)
-            heapq.heappush(slots, done)
-            sum_lat += done - issue
-            last_done = max(last_done, done)
-            now = issue + issue_ov  # next access can issue after decode/AGU
-            n += 1
-            total_bytes += size
+        # Global issue queue: (candidate issue tick, host index), one entry
+        # per host with a pending access.  A host's candidate tick depends
+        # only on its own slots/clock — other hosts move shared busy-until
+        # state inside the targets, never this heap — so entries are always
+        # current and ties resolve on host index, deterministically.
+        ready = [(h.next_issue_tick(), i) for i, h in enumerate(hosts)
+                 if h.pending is not None]
+        heapq.heapify(ready)
+        while ready:
+            _, i = heapq.heappop(ready)
+            h = hosts[i]
+            addr, size, write = h.pending
+            slot_free = heapq.heappop(h.slots)
+            issue = max(h.now, slot_free)
+            if h.first_issue is None:
+                h.first_issue = issue
+            done = h.target.service(issue, addr, size, write,
+                                    posted=write and self.posted_writes)
+            heapq.heappush(h.slots, done)
+            h.sum_lat += done - issue
+            h.last_done = max(h.last_done, done)
+            h.now = issue + issue_ov
+            h.n += 1
+            h.bytes += size
+            h.pending = next(h.trace, None)
+            if h.pending is not None:
+                heapq.heappush(ready, (h.next_issue_tick(), i))
 
-        if first_issue is None:
-            first_issue = start_tick
-        return TraceResult(accesses=n, bytes_moved=total_bytes,
-                           elapsed_ticks=last_done - first_issue,
-                           sum_latency_ticks=sum_lat,
-                           end_tick=last_done)
+        first = min((h.first_issue for h in hosts
+                     if h.first_issue is not None), default=start_tick)
+        last = max(h.last_done for h in hosts)
+        per_host = [TraceResult(accesses=h.n, bytes_moved=h.bytes,
+                                elapsed_ticks=(h.last_done - h.first_issue
+                                               if h.first_issue is not None else 0),
+                                sum_latency_ticks=h.sum_lat,
+                                end_tick=h.last_done)
+                    for h in hosts]
+        return MultiHostResult(per_host=per_host, elapsed_ticks=last - first)

@@ -3,7 +3,14 @@ vectorized lax.scan simulator against the Python object model (oracle)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Property tests need hypothesis (a dev extra); everything else below runs
+# without it, so only the property tests skip on a bare checkout.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.cache.policies import (
     POLICIES,
@@ -155,25 +162,29 @@ def test_trace_sim_direct_matches_oracle():
     np.testing.assert_array_equal(res["dirty_evict_flags"], oe)
 
 
-@given(
-    data=st.data(),
-    num_sets=st.sampled_from([1, 2, 4]),
-    ways=st.sampled_from([1, 2, 4]),
-    policy=st.sampled_from(["lru", "fifo"]),
-)
-@settings(max_examples=30, deadline=None)
-def test_trace_sim_property(data, num_sets, ways, policy):
-    n = data.draw(st.integers(min_value=1, max_value=120))
-    pages = np.array(
-        data.draw(st.lists(st.integers(0, num_sets * ways * 2),
-                           min_size=n, max_size=n)), dtype=np.int32)
-    writes = np.array(
-        data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
-    cls = LRUPolicy if policy == "lru" else FIFOPolicy
-    res = simulate_trace(pages, writes, num_sets=num_sets, ways=ways, policy=policy)
-    oh, oe = _oracle_set_assoc(pages, writes, num_sets, ways, cls)
-    np.testing.assert_array_equal(res["hit_flags"], oh)
-    np.testing.assert_array_equal(res["dirty_evict_flags"], oe)
+if HAVE_HYPOTHESIS:
+    @given(
+        data=st.data(),
+        num_sets=st.sampled_from([1, 2, 4]),
+        ways=st.sampled_from([1, 2, 4]),
+        policy=st.sampled_from(["lru", "fifo"]),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_trace_sim_property(data, num_sets, ways, policy):
+        n = data.draw(st.integers(min_value=1, max_value=120))
+        pages = np.array(
+            data.draw(st.lists(st.integers(0, num_sets * ways * 2),
+                               min_size=n, max_size=n)), dtype=np.int32)
+        writes = np.array(
+            data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+        cls = LRUPolicy if policy == "lru" else FIFOPolicy
+        res = simulate_trace(pages, writes, num_sets=num_sets, ways=ways, policy=policy)
+        oh, oe = _oracle_set_assoc(pages, writes, num_sets, ways, cls)
+        np.testing.assert_array_equal(res["hit_flags"], oh)
+        np.testing.assert_array_equal(res["dirty_evict_flags"], oe)
+else:
+    def test_trace_sim_property():
+        pytest.importorskip("hypothesis")
 
 
 def test_trace_sim_rejects_bad_config():

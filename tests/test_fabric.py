@@ -1,0 +1,294 @@
+"""CXL fabric subsystem: topology builders, deterministic routing, CXLLink
+equivalence on the direct topology, shared-bottleneck contention, pooled
+address mapping, the multi-host driver, and the vectorized congestion
+estimator."""
+
+import numpy as np
+import pytest
+
+from repro.core.devices import CXLDRAMDevice, CXLLink, DRAMDevice, NullLink
+from repro.core.fabric import (
+    Fabric,
+    FabricAttachedDevice,
+    MemoryPool,
+    PoolAddressMapper,
+    Topology,
+    build_topology,
+    direct,
+    mesh,
+    single_switch,
+    two_level,
+)
+from repro.core.workloads.driver import MultiHostDriver, TraceDriver
+
+LINE = 64
+
+
+def stream_trace(n, base=0, write_every=4):
+    return [(base + i * LINE, LINE, i % write_every == 0) for i in range(n)]
+
+
+# ------------------------------------------------------------------ topology
+class TestTopology:
+    def test_builders_produce_expected_shapes(self):
+        t = single_switch(3, 2)
+        assert t.hosts == ["h0", "h1", "h2"]
+        assert t.devices == ["d0", "d1"]
+        assert t.switches == ["s0"]
+        t = two_level(4, 2, num_leaves=2)
+        assert len(t.switches) == 3
+        t = mesh(2, 2, rows=2, cols=2)
+        assert len(t.switches) == 4
+
+    def test_factory_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            build_topology("torus")
+
+    def test_duplicate_node_and_link_rejected(self):
+        t = Topology()
+        t.add_host("h0")
+        with pytest.raises(ValueError):
+            t.add_switch("h0")
+        t.add_device("d0")
+        t.connect("h0", "d0")
+        with pytest.raises(ValueError):
+            t.connect("d0", "h0")
+
+    def test_disconnected_node_rejected(self):
+        t = Topology()
+        t.add_host("h0")
+        t.add_device("d0")
+        with pytest.raises(ValueError):
+            t.validate()
+
+
+# ------------------------------------------------------------------- routing
+class TestRouting:
+    def test_shortest_and_deterministic(self):
+        fab = Fabric(mesh(1, 1, rows=3, cols=3))
+        p1 = fab.path("h0", "d0")
+        p2 = fab.path("h0", "d0")
+        assert p1 is p2  # cached
+        # h0 at s0_0, d0 at s2_2: 4 switch hops + 2 edge hops.
+        assert len(p1) - 1 == 6
+        # Deterministic lexicographic tie-break among equal-cost grid paths.
+        assert p1 == ["h0", "s0_0", "s0_1", "s0_2", "s1_2", "s2_2", "d0"]
+
+    def test_hosts_never_relay(self):
+        # Two hosts on one switch: route must go h0->s0->d0, never via h1.
+        fab = Fabric(single_switch(2, 1))
+        assert fab.path("h0", "d0") == ["h0", "s0", "d0"]
+
+    def test_unroutable_raises(self):
+        # Two disconnected islands: h0-s0-d0 and h1-s1-d1.
+        t = Topology()
+        for i in range(2):
+            t.add_host(f"h{i}")
+            t.add_switch(f"s{i}")
+            t.add_device(f"d{i}")
+            t.connect(f"h{i}", f"s{i}")
+            t.connect(f"s{i}", f"d{i}")
+        fab = Fabric(t)
+        assert fab.path("h0", "d0") == ["h0", "s0", "d0"]
+        with pytest.raises(ValueError):
+            fab.path("h0", "d1")
+
+
+# -------------------------------------------------- equivalence (satellite)
+class TestCXLLinkEquivalence:
+    """Direct topology + fabric must reproduce bare CXLLink exactly."""
+
+    def test_single_access_matches(self):
+        fab = Fabric(direct(1))
+        fd = fab.mount("h0", "d0", DRAMDevice())
+        bare = CXLDRAMDevice()
+        for now, size, write in [(0, 64, False), (10_000, 4096, True),
+                                 (10_500, 64, False)]:
+            assert fd.service(now, 0x40, size, write) == \
+                bare.service(now, 0x40, size, write)
+
+    def test_trace_timing_matches_exactly(self):
+        rng = np.random.default_rng(0)
+        trace = [(int(a) * LINE, LINE, bool(w))
+                 for a, w in zip(rng.integers(0, 1 << 14, 3000),
+                                 rng.random(3000) < 0.3)]
+        fab = Fabric(direct(1))
+        r_fab = TraceDriver(fab.mount("h0", "d0", DRAMDevice())).run(trace)
+        r_bare = TraceDriver(CXLDRAMDevice()).run(trace)
+        assert r_fab.elapsed_ticks == r_bare.elapsed_ticks
+        assert r_fab.sum_latency_ticks == r_bare.sum_latency_ticks
+        assert r_fab.end_tick == r_bare.end_tick
+
+    def test_detach_link_prevents_double_count(self):
+        fab = Fabric(direct(1))
+        inner = CXLDRAMDevice()
+        fd = fab.mount("h0", "d0", inner)  # detaches by default
+        assert isinstance(inner.link, NullLink)
+        # With the private link neutralized, timing equals DRAM-behind-fabric.
+        fab2 = Fabric(direct(1))
+        fd2 = fab2.mount("h0", "d0", DRAMDevice())
+        assert fd.service(0, 0, LINE, False) == fd2.service(0, 0, LINE, False)
+
+    def test_mount_validates_nodes(self):
+        fab = Fabric(direct(1))
+        with pytest.raises(ValueError):
+            fab.mount("h9", "d0", DRAMDevice())
+
+
+# ------------------------------------------------- contention (satellite)
+class TestSharedBottleneck:
+    def _run(self, num_hosts, accesses=8000):
+        fab = Fabric(single_switch(num_hosts, 1))
+        pool = MemoryPool(fab, {"d0": DRAMDevice()})
+        drv = MultiHostDriver(pool.views(fab.topology.hosts), outstanding=64)
+        res = drv.run([stream_trace(accesses, base=h << 30)
+                       for h in range(num_hosts)])
+        return fab, res
+
+    def test_two_hosts_split_the_bottleneck_port(self):
+        _, r1 = self._run(1)
+        fab, r2 = self._run(2)
+        bw1 = r1.per_host_bandwidth_gbps[0]
+        # Aggregate is capped by the s0->d0 egress port (16 GB/s)...
+        assert r2.aggregate_bandwidth_gbps <= 16.0 * 1.01
+        # ...so each of two hosts gets measurably less than a lone host.
+        for bw in r2.per_host_bandwidth_gbps:
+            assert bw < bw1 * 0.75
+        # Symmetric traffic splits the port roughly evenly.
+        lo, hi = sorted(r2.per_host_bandwidth_gbps)
+        assert hi - lo < 0.1 * hi
+
+    def test_port_queueing_visible_in_stats(self):
+        fab, res = self._run(2)
+        shared = fab.ports[("s0", "d0")]
+        assert shared.packets == 2 * 8000
+        assert shared.queued_ticks > 0
+        assert 0.9 < shared.utilization(res.elapsed_ticks) <= 1.0
+
+    def test_private_links_do_not_contend(self):
+        fab = Fabric(direct(2))
+        views = [fab.mount(f"h{i}", f"d{i}", DRAMDevice()) for i in range(2)]
+        res = MultiHostDriver(views, outstanding=64).run(
+            [stream_trace(4000, base=h << 30) for h in range(2)])
+        lone = Fabric(direct(1))
+        r1 = MultiHostDriver([lone.mount("h0", "d0", DRAMDevice())],
+                             outstanding=64).run([stream_trace(4000)])
+        for bw in res.per_host_bandwidth_gbps:
+            assert bw == pytest.approx(r1.per_host_bandwidth_gbps[0], rel=0.02)
+
+
+# ----------------------------------------------------------------- pooling
+class TestPool:
+    def test_interleave_mapper_partitions_address_space(self):
+        m = PoolAddressMapper(num_devices=3, granularity=4096)
+        seen = {}
+        for frame in range(30):
+            dev, local = m.map(frame * 4096 + 17)
+            assert dev == frame % 3
+            assert local % 4096 == 17
+            # Local frames are dense per device.
+            assert local // 4096 == frame // 3
+            seen.setdefault(dev, []).append(local)
+        assert set(seen) == {0, 1, 2}
+
+    def test_segment_mapper_and_capacity(self):
+        m = PoolAddressMapper(num_devices=2, mode="segment",
+                              segment_bytes=1 << 20)
+        assert m.map(0) == (0, 0)
+        assert m.map((1 << 20) + 5) == (1, 5)
+        with pytest.raises(ValueError):
+            m.map(2 << 20)
+
+    def test_bad_configs_rejected(self):
+        with pytest.raises(ValueError):
+            PoolAddressMapper(num_devices=0)
+        with pytest.raises(ValueError):
+            PoolAddressMapper(num_devices=1, mode="hash")
+        fab = Fabric(single_switch(1, 2))
+        with pytest.raises(ValueError):
+            MemoryPool(fab, {"d0": DRAMDevice()},
+                       mapper=PoolAddressMapper(num_devices=2))
+
+    def test_per_host_stats_accumulate_on_views(self):
+        fab = Fabric(single_switch(2, 2))
+        pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+        v0, v1 = pool.views(["h0", "h1"])
+        MultiHostDriver([v0, v1]).run([stream_trace(100),
+                                      stream_trace(50, base=1 << 30)])
+        assert v0.stats["reads"] + v0.stats["writes"] == 100
+        assert v1.stats["reads"] + v1.stats["writes"] == 50
+        # Interleaved mapping actually spread traffic over both devices.
+        assert all(d.stats["bytes"] > 0 for d in pool.devices)
+
+
+# ------------------------------------------------------- multi-host driver
+class TestMultiHostDriver:
+    def test_single_host_matches_trace_driver(self):
+        trace = stream_trace(2000)
+        dev1, dev2 = DRAMDevice(), DRAMDevice()
+        r_multi = MultiHostDriver([dev1]).run([trace])
+        r_single = TraceDriver(dev2).run(trace)
+        host = r_multi.per_host[0]
+        assert host.elapsed_ticks == r_single.elapsed_ticks
+        assert host.sum_latency_ticks == r_single.sum_latency_ticks
+
+    def test_mismatched_traces_rejected(self):
+        with pytest.raises(ValueError):
+            MultiHostDriver([DRAMDevice()]).run([[], []])
+        with pytest.raises(ValueError):
+            MultiHostDriver([])
+
+    def test_deterministic_across_runs(self):
+        def go():
+            fab = Fabric(single_switch(2, 1))
+            pool = MemoryPool(fab, {"d0": DRAMDevice()})
+            res = MultiHostDriver(pool.views(["h0", "h1"])).run(
+                [stream_trace(500), stream_trace(500, base=1 << 30)])
+            return [(r.elapsed_ticks, r.sum_latency_ticks)
+                    for r in res.per_host]
+        assert go() == go()
+
+
+# --------------------------------------------------- congestion estimator
+class TestLinkCongestionSim:
+    def _sim(self):
+        pytest.importorskip("jax")
+        from repro.core.fabric.link_sim import LinkCongestionSim
+        fab = Fabric(two_level(2, 1, num_leaves=2))
+        return fab, LinkCongestionSim(fab, fab.topology.hosts,
+                                      fab.topology.devices)
+
+    def test_bytes_conserved_and_bottleneck_found(self):
+        fab, sim = self._sim()
+        n = 10_000
+        hi = np.zeros(n, np.int32)          # all traffic from h0
+        di = np.zeros(n, np.int32)
+        nb = np.full(n, LINE)
+        out = sim.estimate(hi, di, nb, window_s=1e-5)
+        assert out["pair_bytes"].sum() == n * LINE
+        # Every link on the h0->d0 route carries all bytes; others are idle.
+        path = fab.path("h0", "d0")
+        hot = {f"{u}->{v}" for u, v in zip(path, path[1:])}
+        for name, util in zip(out["link_names"], out["link_utilization"]):
+            assert (util > 0) == (name in hot)
+        assert out["bottleneck_link"] in hot
+
+    def test_slowdown_scales_with_load(self):
+        _, sim = self._sim()
+        nb = np.full(10_000, LINE)
+        zeros = np.zeros(10_000, np.int32)
+        light = sim.estimate(zeros, zeros, nb, window_s=1.0)
+        heavy = sim.estimate(zeros, zeros, nb, window_s=1e-7)
+        assert light["pair_slowdown"].max() == pytest.approx(1.0)
+        assert heavy["pair_slowdown"].max() > 1.0
+
+    def test_what_if_sweep_monotone(self):
+        _, sim = self._sim()
+        n = 50_000
+        rng = np.random.default_rng(1)
+        hi = rng.integers(0, 2, n)
+        di = np.zeros(n, np.int32)
+        out = sim.what_if_bandwidth(hi, di, np.full(n, LINE), 1e-5,
+                                    [0.5, 1.0, 2.0, 4.0])
+        util = out["max_link_utilization"]
+        assert np.all(np.diff(util) < 0)  # faster links -> lower utilization
