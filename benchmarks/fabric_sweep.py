@@ -96,7 +96,42 @@ def bench_congestion_estimator(n: int = 200_000) -> List[Row]:
     ]
 
 
-ALL = [bench_fabric_sweep, bench_congestion_estimator]
+def bench_fabric_fused_host_sweep() -> List[Row]:
+    """The same star-topology host-count sweep as ``bench_fabric_sweep``,
+    but replayed by the fused multi-host engine: one compiled vmapped call
+    covers every host count, and each lane is tick-identical to the
+    interpreted ``MultiHostDriver`` (asserted on the 1-host lane)."""
+    from repro.core.replay.sweep import host_count_sweep
+
+    def mk():
+        fab = Fabric.build("single_switch", num_hosts=max(HOST_COUNTS),
+                           num_devices=1)
+        pool = MemoryPool(fab, {"d0": DRAMDevice()})
+        return pool.views([f"h{i}" for i in range(max(HOST_COUNTS))])
+
+    traces = [_stream_trace(h) for h in range(max(HOST_COUNTS))]
+    host_count_sweep(mk(), traces, HOST_COUNTS)     # compile + warm
+    t0 = time.perf_counter()
+    lanes = host_count_sweep(mk(), traces, HOST_COUNTS)
+    wall = time.perf_counter() - t0
+
+    ref = MultiHostDriver(mk()[:1]).run(traces[:1])
+    lane0 = lanes[HOST_COUNTS.index(1)]
+    exact = ref.elapsed_ticks == lane0.elapsed_ticks
+
+    total = sum(h * ACCESSES_PER_HOST for h in HOST_COUNTS)
+    # lanes keep max(HOST_COUNTS) per-host slots; inactive hosts trail with
+    # zero accesses, so the fair-share min is over the first h entries only
+    rows = [(f"fabric/fused/star/hosts{h}", wall * 1e6 / total,
+             f"{min(r.per_host_bandwidth_gbps[:h]):.2f}GB/s/host,"
+             f"agg={r.aggregate_bandwidth_gbps:.2f}GB/s")
+            for h, r in zip(HOST_COUNTS, lanes)]
+    rows.append(("fabric/fused/one_call", wall * 1e6 / total,
+                 f"{len(HOST_COUNTS)}lanes,exact={exact}"))
+    return rows
+
+
+ALL = [bench_fabric_sweep, bench_congestion_estimator, bench_fabric_fused_host_sweep]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,122 @@
+"""Fused-replay throughput: python vs scan vs pallas on a 200k-access trace.
+
+The headline perf row of the fused replay engine (repro.core.replay): one
+cached-CXL-SSD stack, one 200k-access mixed trace, replayed by all three
+:class:`TraceDriver` engines.  Emits the harness CSV rows *and* writes
+``results/BENCH_replay.json`` — machine-readable accesses/sec per engine,
+speedups, and the tick-equivalence bit — so the perf trajectory is tracked
+across PRs.
+
+Engine semantics differ by design (see the driver docstring): scan is
+tick-identical to python (asserted here on the full trace); pallas is the
+analytic cache+latency kernel, run in interpret mode on CPU (interpret
+lowers the kernel to plain XLA ops, so its wall time measures the simulated
+path, not accelerator throughput).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.cache.dram_cache import DRAMCacheConfig
+from repro.core.devices import make_device
+from repro.core.workloads.driver import TraceDriver
+
+Row = Tuple[str, float, str]
+
+N = 200_000
+PALLAS_N = N                # interpret mode compiles to XLA ops: full trace is fine
+CACHE_FRAMES = 256          # 1 MB DRAM cache
+FOOTPRINT_PAGES = 1024      # 4 MB working set -> ~45% hit rate
+TARGET_SPEEDUP = 20.0
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                        "BENCH_replay.json")
+
+
+def _mk_device():
+    return make_device("cxl-ssd-cache", cache_cfg=DRAMCacheConfig(
+        capacity_bytes=CACHE_FRAMES * 4096))
+
+
+def _trace(n: int):
+    rng = np.random.default_rng(3)
+    pages = rng.integers(0, FOOTPRINT_PAGES, n)
+    addrs = pages * 4096 + rng.integers(0, 64, n) * 64
+    writes = rng.random(n) < 0.3
+    return [(int(a), 64, bool(w)) for a, w in zip(addrs, writes)]
+
+
+def bench_replay() -> List[Row]:
+    trace = _trace(N)
+
+    t0 = time.perf_counter()
+    py = TraceDriver(_mk_device()).run(trace)
+    py_s = time.perf_counter() - t0
+
+    drv = TraceDriver(_mk_device(), engine="scan")
+    drv.run(trace)                               # compile + warm
+    t0 = time.perf_counter()
+    sc = TraceDriver(_mk_device(), engine="scan").run(trace)
+    scan_s = time.perf_counter() - t0
+
+    exact = (py.sum_latency_ticks == sc.sum_latency_ticks
+             and py.elapsed_ticks == sc.elapsed_ticks
+             and py.end_tick == sc.end_tick)
+
+    sub = trace[:PALLAS_N]
+    drv_p = TraceDriver(_mk_device(), engine="pallas")
+    drv_p.run(sub)                               # compile + warm
+    t0 = time.perf_counter()
+    drv_p.run(sub)
+    pallas_s = time.perf_counter() - t0
+
+    report = {
+        "n_accesses": N,
+        "config": {
+            "device": "cxl-ssd-cache",
+            "cache_frames": CACHE_FRAMES,
+            "footprint_pages": FOOTPRINT_PAGES,
+            "write_frac": 0.3,
+        },
+        "engines": {
+            "python": {"seconds": py_s, "acc_per_sec": N / py_s},
+            "scan": {"seconds": scan_s, "acc_per_sec": N / scan_s,
+                     "tick_exact_vs_python": bool(exact)},
+            "pallas": {"seconds": pallas_s, "n_accesses": PALLAS_N,
+                       "acc_per_sec": PALLAS_N / pallas_s,
+                       "note": "interpret mode (op-level TPU emulation)"},
+        },
+        "speedup_scan_vs_python": py_s / scan_s,
+        "speedup_pallas_vs_python": (py_s / N) / (pallas_s / PALLAS_N),
+        "target_speedup": TARGET_SPEEDUP,
+        "meets_target": py_s / scan_s >= TARGET_SPEEDUP,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(OUT_JSON)), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        ("replay/python", py_s * 1e6 / N, f"{N / py_s / 1e3:.0f}kacc/s"),
+        ("replay/scan", scan_s * 1e6 / N,
+         f"{N / scan_s / 1e3:.0f}kacc/s,exact={exact}"),
+        ("replay/pallas_interp", pallas_s * 1e6 / PALLAS_N,
+         f"{PALLAS_N / pallas_s / 1e3:.1f}kacc/s,n={PALLAS_N}"),
+        ("replay/speedup_scan", 0.0,
+         f"{py_s / scan_s:.1f}x(target{TARGET_SPEEDUP:.0f}x)"),
+    ]
+
+
+ALL = [bench_replay]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us_per_call, derived in fn():
+            print(f"{name},{us_per_call:.2f},{derived}")
+    print(f"# wrote {os.path.abspath(OUT_JSON)}")

@@ -15,6 +15,7 @@ import sys
 MODULES = [
     "benchmarks.paper_figures",
     "benchmarks.trace_sim_speed",
+    "benchmarks.replay_bench",       # also writes results/BENCH_replay.json
     "benchmarks.fabric_sweep",
     "benchmarks.kernel_bench",
     "benchmarks.ablations",

@@ -1,5 +1,15 @@
 """Simulator-throughput benchmark: vectorized lax.scan cache replay vs the
-pure-Python policy objects (the compute hot-spot the Pallas kernel targets)."""
+pure-Python policy objects (the compute hot-spot the Pallas kernel targets).
+
+The Python oracle is timed over the *simulation only*: the ndarray->list
+conversion and (page, write) pairing are hoisted out of the timed region so
+the comparison measures cache-replay work, not trace marshalling.  Both
+rows report per-access nanoseconds.  Fair timing makes the verdict honest:
+on XLA:CPU the bare per-set dict oracle can beat the scan (per-step thunk
+dispatch dominates); the scan's payoff is vmap-batched sweeps and
+accelerator backends, and the *full-stack* comparison lives in
+benchmarks/replay_bench.py where the interpreted path carries the whole
+device model, not just one cache."""
 
 from __future__ import annotations
 
@@ -29,19 +39,21 @@ def bench_trace_sim_speed(n: int = 200_000, num_sets: int = 256,
     hits.block_until_ready()
     jax_s = time.perf_counter() - t0
 
-    # Python object-model oracle (per-set LRU dicts)
+    # Python object-model oracle (per-set LRU dicts).  Hoist trace
+    # marshalling out of the timed region.
+    pairs = list(zip(pages.tolist(), writes.tolist()))
     sets = [LRUPolicy(ways) for _ in range(num_sets)]
     t0 = time.perf_counter()
-    for pg, wr in zip(pages.tolist(), writes.tolist()):
+    for pg, wr in pairs:
         sets[pg % num_sets].access(pg, write=wr)
     py_s = time.perf_counter() - t0
 
     jhit = float(np.asarray(hits).mean())
     return [
         ("trace_sim/jax_scan", jax_s * 1e6 / n,
-         f"{n / jax_s / 1e6:.2f}Macc/s,hit={jhit:.3f}"),
+         f"{jax_s / n * 1e9:.0f}ns/acc,{n / jax_s / 1e6:.2f}Macc/s,hit={jhit:.3f}"),
         ("trace_sim/python_oracle", py_s * 1e6 / n,
-         f"{n / py_s / 1e6:.2f}Macc/s"),
+         f"{py_s / n * 1e9:.0f}ns/acc,{n / py_s / 1e6:.2f}Macc/s"),
         ("trace_sim/speedup", 0.0, f"{py_s / jax_s:.1f}x"),
     ]
 

@@ -57,6 +57,25 @@ class Fabric:
     def path(self, src: str, dst: str) -> List[str]:
         return self.routing.path(src, dst)
 
+    def route_occupancy(self, src: str, dst: str,
+                        nbytes: int) -> List[Tuple[Tuple[str, str], int, int]]:
+        """Tensor export of :meth:`traverse`'s per-hop timing for ``nbytes``:
+        one ``(port_key, occ_ticks, after_ticks)`` triple per hop, where
+        ``after`` folds propagation plus the per-switch store-and-forward
+        latency, each rounded separately with ``ns()`` exactly as
+        :meth:`traverse` does.  The fused replay engines build their route
+        tensors from this single definition so the busy-until rule cannot
+        drift between the interpreted and vectorized paths."""
+        path = self.routing.path(src, dst)
+        hops = []
+        for u, v in zip(path, path[1:]):
+            port = self.ports[(u, v)]
+            after = ns(port.prop_ns)
+            if self.topology.kind(v) == SWITCH:
+                after += ns(self.forward_ns)
+            hops.append(((u, v), port.occ_ticks(nbytes), after))
+        return hops
+
     def traverse(self, now: int, src: str, dst: str, nbytes: int) -> int:
         """Carry ``nbytes`` from ``src`` to ``dst``; returns the completion
         tick (arrival + round-trip extra), queueing on every port's
@@ -64,7 +83,7 @@ class Fabric:
         path = self.routing.path(src, dst)
         t = now
         for u, v in zip(path, path[1:]):
-            t = self.ports[(u, v)].transmit(t, nbytes)
+            t = self.ports[(u, v)].transmit(t, nbytes, origin=src)
             if self.topology.kind(v) == SWITCH:
                 t += ns(self.forward_ns)
         self.stats["transfers"] += 1
@@ -81,7 +100,10 @@ class Fabric:
     # -------------------------------------------------------------- reports
     def port_report(self, elapsed_ticks: int) -> List[dict]:
         """Per-port traffic/occupancy summary, sorted by bytes desc then name
-        (deterministic)."""
+        (deterministic).  ``utilization`` is the fraction of the elapsed
+        window the port spent serializing; ``bytes_by_host`` attributes the
+        port's traffic to the originating endpoints (QoS groundwork — the
+        scheduling itself stays FCFS)."""
         rows = [{
             "port": f"{p.src}->{p.dst}",
             "bytes": p.bytes,
@@ -89,6 +111,7 @@ class Fabric:
             "utilization": p.utilization(elapsed_ticks),
             "achieved_gbps": p.achieved_gbps(elapsed_ticks),
             "queued_ticks": p.queued_ticks,
+            "bytes_by_host": dict(sorted(p.bytes_by_origin.items())),
         } for p in self.ports.values() if p.packets]
         rows.sort(key=lambda r: (-r["bytes"], r["port"]))
         return rows

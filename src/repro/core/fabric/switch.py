@@ -11,6 +11,7 @@ so multi-hop paths pay serialization once per hop.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Dict, Optional
 
 from repro.core.engine import ns, to_s
 
@@ -29,17 +30,33 @@ class SwitchPort:
     bytes: int = 0
     queued_ticks: int = 0     # total ticks transfers waited for the port
     occupied_ticks: int = 0   # total ticks the port was serializing
+    # traffic attribution: originating endpoint -> bytes carried for it
+    # (QoS groundwork: scheduling stays FCFS, this is accounting only)
+    bytes_by_origin: Dict[str, int] = field(default_factory=dict)
 
-    def transmit(self, now: int, nbytes: int) -> int:
+    def occ_ticks(self, nbytes: int) -> int:
+        """Serialization occupancy for ``nbytes`` — THE definition of this
+        port's busy-until increment.  Both the interpreted path
+        (:meth:`transmit`) and the fused replay's route-tensor export
+        (:meth:`Fabric.route_occupancy`) call this, so the rule cannot
+        drift between them."""
+        return ns(nbytes / self.bw_gbps)   # bytes / (GB/s) == ns
+
+    def transmit(self, now: int, nbytes: int,
+                 origin: Optional[str] = None) -> int:
         """Serialize ``nbytes`` onto this port starting no earlier than
-        ``now``; returns the tick the last byte arrives at ``dst``."""
-        occ = ns(nbytes / self.bw_gbps)   # bytes / (GB/s) == ns
+        ``now``; returns the tick the last byte arrives at ``dst``.
+        ``origin`` attributes the traffic to its source endpoint."""
+        occ = self.occ_ticks(nbytes)
         start = max(now, self.busy_until)
         self.queued_ticks += start - now
         self.busy_until = start + occ
         self.packets += 1
         self.bytes += nbytes
         self.occupied_ticks += occ
+        if origin is not None:
+            self.bytes_by_origin[origin] = \
+                self.bytes_by_origin.get(origin, 0) + nbytes
         return start + occ + ns(self.prop_ns)
 
     def utilization(self, elapsed_ticks: int) -> float:
@@ -56,3 +73,4 @@ class SwitchPort:
         self.bytes = 0
         self.queued_ticks = 0
         self.occupied_ticks = 0
+        self.bytes_by_origin = {}

@@ -1,0 +1,31 @@
+"""Fused, vectorized device-stack trace replay.
+
+The hot path of trace-driven evaluation, collapsed into one compiled
+program: DRAM-cache decisions, CXL link/fabric occupancy, and SSD channel
+service times all advance inside a single :func:`jax.lax.scan` (one step
+per access), tick-identical to the interpreted
+:class:`~repro.core.workloads.driver.TraceDriver` path.
+
+* :class:`ReplayEngine` — single host, any of the five paper devices,
+  directly attached or fabric-mounted.
+* :class:`MultiHostReplay` — N hosts interleaved onto shared fabric ports
+  and pooled DRAM media (the :class:`MultiHostDriver` fast path).
+* :mod:`repro.core.replay.sweep` — vmap-batched design-space sweeps over
+  timing parameters, replacement policy, capacity, and topology.
+"""
+
+from repro.core.replay.engine import ReplayEngine, ReplayResult
+from repro.core.replay.multihost import MultiHostReplay
+from repro.core.replay.spec import ReplayUnsupported, StackConfig, build_stack
+from repro.core.replay.sweep import cache_design_sweep, host_count_sweep
+
+__all__ = [
+    "ReplayEngine",
+    "ReplayResult",
+    "MultiHostReplay",
+    "ReplayUnsupported",
+    "StackConfig",
+    "build_stack",
+    "cache_design_sweep",
+    "host_count_sweep",
+]

@@ -1,0 +1,302 @@
+"""Fused multi-host replay: N hosts interleaved in one :func:`jax.lax.scan`.
+
+The scan reproduces :class:`repro.core.workloads.driver.MultiHostDriver`'s
+global issue ordering exactly: each step selects the host with the earliest
+candidate issue tick (``max(own clock, own oldest LFB slot)``, ties to the
+lowest host index — the heap's ``(tick, index)`` order), pops that host's
+next access, walks its precomputed route over the *shared* per-port
+busy-until vector, and serializes on the target device's media occupancy.
+Contention between hosts therefore emerges from the same shared state as in
+the interpreted driver, tick for tick.
+
+Supported targets (homogeneous): :class:`FabricAttachedDevice` mounts and
+:class:`HostPortView` pool views whose inner media is DRAM-class
+(``DRAMDevice``, or ``CXLDRAMDevice`` with its private link detached by the
+fabric mount).  The pool's address mapper is applied host-side (it is a pure
+function of the address), so interleave and segment modes cost nothing in
+the scan.  Anything else raises :class:`ReplayUnsupported` — callers fall
+back to the Python driver.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.devices import CXLDRAMDevice, DRAMDevice, NullLink, POSTED_ACK_NS
+from repro.core.engine import ns
+from repro.core.fabric.fabric import Fabric, FabricAttachedDevice
+from repro.core.fabric.pool import HostPortView
+from repro.core.replay.spec import ReplayUnsupported, trace_to_arrays
+from repro.core.workloads.driver import MultiHostResult, TraceResult
+
+BIG = 1 << 62
+
+
+def _i64(x):
+    return jnp.asarray(x, jnp.int64)
+
+
+@dataclass(frozen=True)
+class MultiCfg:
+    num_hosts: int
+    outstanding: int
+    posted_writes: bool
+    num_ports: int
+    max_hops: int
+    num_devs: int
+
+
+def _unwrap_dram(dev) -> DRAMDevice:
+    """Accept DRAM-class media: bare DRAM, or CXL-DRAM whose private link
+    was neutralized by the fabric mount."""
+    if isinstance(dev, DRAMDevice):
+        return dev
+    if isinstance(dev, CXLDRAMDevice) and isinstance(dev.link, NullLink):
+        return dev.dram
+    raise ReplayUnsupported(
+        f"multi-host fused replay supports DRAM-class media, got "
+        f"{type(dev).__name__}")
+
+
+def _port_index(fabric: Fabric) -> Dict[Tuple[str, str], int]:
+    return {key: i for i, key in enumerate(sorted(fabric.ports))}
+
+def _route_rows(fabric: Fabric, host: str, node: str, size: int,
+                pidx: Dict[Tuple[str, str], int], max_hops: int):
+    hops = fabric.route_occupancy(host, node, size)
+    if len(hops) > max_hops:
+        raise AssertionError("max_hops underestimated")
+    port = np.zeros(max_hops, np.int32)
+    occ = np.zeros(max_hops, np.int64)
+    after = np.zeros(max_hops, np.int64)
+    on = np.zeros(max_hops, bool)
+    for h, (key, occ_h, after_h) in enumerate(hops):
+        port[h] = pidx[key]
+        occ[h] = occ_h
+        after[h] = after_h
+        on[h] = True
+    return port, occ, after, on
+
+
+def _extract_targets(targets: Sequence, size: int):
+    """Shared fabric + route/device tensors for mounts or pool views."""
+    first = targets[0]
+    if isinstance(first, FabricAttachedDevice):
+        fabric = first.fabric
+        if not all(isinstance(t, FabricAttachedDevice)
+                   and t.fabric is fabric for t in targets):
+            raise ReplayUnsupported("hosts must share one fabric")
+        hosts = [t.host for t in targets]
+        nodes = [t.device_node for t in targets]
+        drams = [_unwrap_dram(t.inner) for t in targets]
+        dev_of = {n: i for i, n in enumerate(nodes)}
+        if len(dev_of) != len(nodes):
+            raise ReplayUnsupported(
+                "fused mount mode needs one private device per host "
+                "(share devices through a MemoryPool instead)")
+        mapper = None
+    elif isinstance(first, HostPortView):
+        pool = first.pool
+        if not all(isinstance(t, HostPortView) and t.pool is pool
+                   for t in targets):
+            raise ReplayUnsupported("pool views must share one MemoryPool")
+        fabric = pool.fabric
+        hosts = [t.host for t in targets]
+        nodes = pool.device_nodes
+        drams = [_unwrap_dram(d) for d in pool.devices]
+        mapper = pool.mapper
+    else:
+        raise ReplayUnsupported(
+            f"multi-host fused replay supports FabricAttachedDevice / "
+            f"HostPortView targets, got {type(first).__name__}")
+    inner_devs = ([t.inner for t in targets]
+                  if isinstance(first, FabricAttachedDevice)
+                  else list(first.pool.devices))
+    for t in list(targets) + inner_devs:
+        if t.stats.get("bytes", 0):
+            raise ReplayUnsupported("targets must be fresh (no prior traffic)")
+    if fabric.stats.get("transfers", 0):
+        raise ReplayUnsupported(
+            "fabric has prior traffic; replay snapshots a fresh fabric "
+            "(Fabric.reset() or re-build it, or use engine='python')")
+
+    pidx = _port_index(fabric)
+    pairs = ([(i, i) for i in range(len(hosts))] if mapper is None else
+             [(i, d) for i in range(len(hosts)) for d in range(len(nodes))])
+    max_hops = max(fabric.routing.hops(hosts[i], nodes[d]) for i, d in pairs)
+    H, NDEV = len(hosts), len(nodes)
+    hop_port = np.zeros((H, NDEV, max_hops), np.int32)
+    hop_occ = np.zeros((H, NDEV, max_hops), np.int64)
+    hop_after = np.zeros((H, NDEV, max_hops), np.int64)
+    hop_on = np.zeros((H, NDEV, max_hops), bool)
+    for i, h in enumerate(hosts):
+        for d, n in enumerate(nodes):
+            if mapper is None and d != i:
+                continue        # mount mode: host i only reaches device i
+            hop_port[i, d], hop_occ[i, d], hop_after[i, d], hop_on[i, d] = \
+                _route_rows(fabric, h, n, size, pidx, max_hops)
+    params = {
+        "hop_port": hop_port, "hop_occ": hop_occ, "hop_after": hop_after,
+        "hop_on": hop_on,
+        "rt_extra": ns(fabric.rt_extra_ns),
+        "dev_occ": np.asarray([ns(size / d.t.bw_gbps) for d in drams],
+                              np.int64),
+        "dev_load": np.asarray([ns(d.t.load_ns) for d in drams], np.int64),
+        "dev_pack": np.asarray([ns(POSTED_ACK_NS)] * NDEV, np.int64),
+    }
+    return fabric, mapper, params, len(pidx), max_hops, NDEV
+
+
+def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
+    """Host-side pool address mapping (pure per-address arithmetic)."""
+    if mapper is None:
+        return np.full(addrs.shape, host_idx, np.int32), addrs
+    if mapper.mode == "interleave":
+        frame, off = np.divmod(addrs, mapper.granularity)
+        dev = (frame % mapper.num_devices).astype(np.int32)
+        local = (frame // mapper.num_devices) * mapper.granularity + off
+        return dev, local
+    dev64, local = np.divmod(addrs, mapper.segment_bytes)
+    if (dev64 >= mapper.num_devices).any():
+        raise ReplayUnsupported("address beyond pool capacity")
+    return dev64.astype(np.int32), local
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick):
+    H, O = cfg.num_hosts, cfg.outstanding
+    init = (jnp.full((H, O), start_tick, jnp.int64),   # per-host LFB slots
+            jnp.full(H, start_tick, jnp.int64),        # per-host issue clock
+            jnp.zeros(H, jnp.int64),                   # per-host trace index
+            jnp.zeros(cfg.num_ports, jnp.int64),       # shared port busy
+            jnp.zeros(cfg.num_devs, jnp.int64))        # shared media busy
+
+    def step(carry, _):
+        slots, now, idx, port_busy, dev_busy = carry
+        cand = jnp.where(idx < lens,
+                         jnp.maximum(now, jnp.min(slots, axis=1)), BIG)
+        i = jnp.argmin(cand)                 # ties -> lowest host index
+        row = slots[i]
+        k = jnp.argmin(row)
+        issue = jnp.maximum(now[i], row[k])
+        a = addrs[i, idx[i]]
+        wr = writes[i, idx[i]]
+        dev = devs[i, idx[i]]
+        posted = wr if cfg.posted_writes else jnp.zeros((), bool)
+        t = issue
+        for h in range(cfg.max_hops):
+            on = p["hop_on"][i, dev, h]
+            pi = p["hop_port"][i, dev, h]
+            start = jnp.maximum(t, port_busy[pi])
+            done_h = start + p["hop_occ"][i, dev, h]
+            port_busy = port_busy.at[pi].set(
+                jnp.where(on, done_h, port_busy[pi]))
+            t = jnp.where(on, done_h + p["hop_after"][i, dev, h], t)
+        t = t + p["rt_extra"]
+        start = jnp.maximum(t, dev_busy[dev])
+        occ_done = start + p["dev_occ"][dev]
+        dev_busy = dev_busy.at[dev].set(occ_done)
+        done = occ_done + jnp.where(posted, p["dev_pack"][dev],
+                                    p["dev_load"][dev])
+        slots = slots.at[i, k].set(done)
+        now = now.at[i].set(issue + p["issue_ov"])
+        idx = idx.at[i].set(idx[i] + 1)
+        return (slots, now, idx, port_busy, dev_busy), (i, issue, done)
+
+    n_total = addrs.shape[0] * addrs.shape[1]
+    carry, (who, issues, dones) = jax.lax.scan(
+        step, init, None, length=n_total)
+    return who, issues, dones
+
+
+class MultiHostReplay:
+    """Fused, vectorized stand-in for :class:`MultiHostDriver` (DRAM-class
+    pooled or per-host fabric targets).  ``run`` is tick-identical to the
+    interpreted driver for supported shapes."""
+
+    def __init__(self, targets: Sequence, outstanding: int = 32,
+                 issue_overhead_ns: float = 0.5,
+                 posted_writes: bool = True) -> None:
+        if not targets:
+            raise ReplayUnsupported("need at least one host target")
+        self.targets = list(targets)
+        self.outstanding = max(1, outstanding)
+        self.issue_overhead_ns = issue_overhead_ns
+        self.posted_writes = posted_writes
+
+    def prepare(self, traces: Sequence):
+        """Extract (cfg, params, devs, addrs, writes, lens, size) tensors —
+        the compiled program's inputs.  Exposed so sweeps can batch them."""
+        if len(traces) != len(self.targets):
+            raise ValueError(f"{len(traces)} traces for "
+                             f"{len(self.targets)} host targets")
+        parsed = [trace_to_arrays(tr) for tr in traces]
+        size = parsed[0][2]
+        if any(pz != size for _, _, pz in parsed):
+            raise ReplayUnsupported("hosts must share one access size")
+        fabric, mapper, params, P, max_hops, NDEV = _extract_targets(
+            self.targets, size)
+        H = len(self.targets)
+        L = max(a.size for a, _, _ in parsed)
+        addrs = np.zeros((H, L), np.int64)
+        writes = np.zeros((H, L), bool)
+        devs = np.zeros((H, L), np.int32)
+        lens = np.asarray([a.size for a, _, _ in parsed], np.int64)
+        for i, (a, w, _) in enumerate(parsed):
+            dev, local = _map_addrs(mapper, i, a)
+            addrs[i, :a.size] = local
+            writes[i, :a.size] = w
+            devs[i, :a.size] = dev
+        params["issue_ov"] = ns(self.issue_overhead_ns)
+        cfg = MultiCfg(num_hosts=H, outstanding=self.outstanding,
+                       posted_writes=self.posted_writes, num_ports=P,
+                       max_hops=max_hops, num_devs=NDEV)
+        return cfg, params, devs, addrs, writes, lens, size
+
+    @staticmethod
+    def aggregate(who, issues, dones, lens, size: int,
+                  start_tick: int = 0) -> MultiHostResult:
+        """Fold per-step (host, issue, done) streams into per-host results.
+
+        Padded steps beyond sum(lens) pick exhausted hosts (cand == BIG);
+        they replay "past the end" deterministically but must be dropped."""
+        who = np.asarray(who)
+        issues = np.asarray(issues)
+        dones = np.asarray(dones)
+        lens = np.asarray(lens)
+        valid = np.arange(who.size) < int(lens.sum())
+        per_host: List[TraceResult] = []
+        firsts, lasts = [], []
+        for i in range(lens.size):
+            m = valid & (who == i)
+            iss, dn = issues[m], dones[m]
+            n = int(m.sum())
+            first = int(iss[0]) if n else None
+            last = max(int(dn.max(initial=0)), start_tick) if n else start_tick
+            per_host.append(TraceResult(
+                accesses=n, bytes_moved=n * size,
+                elapsed_ticks=(last - first) if first is not None else 0,
+                sum_latency_ticks=int((dn - iss).sum()),
+                end_tick=last))
+            if first is not None:
+                firsts.append(first)
+            lasts.append(last)
+        first_all = min(firsts, default=start_tick)
+        return MultiHostResult(per_host=per_host,
+                               elapsed_ticks=max(lasts) - first_all)
+
+    def run(self, traces: Sequence, start_tick: int = 0) -> MultiHostResult:
+        cfg, params, devs, addrs, writes, lens, size = self.prepare(traces)
+        with enable_x64():
+            pj = jax.tree.map(jnp.asarray, params)
+            who, issues, dones = _run_multi(
+                cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
+                jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick))
+        return self.aggregate(who, issues, dones, lens, size, start_tick)

@@ -1,0 +1,285 @@
+"""Device-stack extraction: turn a live :class:`~repro.core.devices.MemDevice`
+into tensors the fused replay scan can consume.
+
+The split mirrors JAX's static/traced divide:
+
+* :class:`StackConfig` — hashable statics that shape the compiled program
+  (device kind, array sizes, policy branch, hop count).  One compilation per
+  distinct config.
+* params dict — numpy scalars/arrays of *timing constants* (occupancies,
+  latencies, all pre-converted to ticks with the exact same ``ns()``
+  arithmetic the Python devices use) plus route tensors.  These are traced,
+  so :func:`jax.vmap` can batch over them (what-if timing sweeps, topology
+  sweeps) without recompiling.
+
+Every tick constant here is computed by the *identical* float expression the
+corresponding device method evaluates (``ns(size / bw)``, ``ns(nbytes *
+(1.0 / bw))``, ...) so rounding agrees bit-for-bit and the fused replay stays
+tick-identical to the interpreted path.
+
+Unsupported shapes (2Q/LFRU policies, multi-line accesses, traces long
+enough to trigger FTL garbage collection) raise :class:`ReplayUnsupported`
+— the driver falls back to the Python path instead of silently diverging.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.devices import (
+    CachedCXLSSDDevice,
+    CXLDRAMDevice,
+    CXLLink,
+    CXLSSDDevice,
+    DRAMDevice,
+    MemDevice,
+    NullLink,
+    PMEMDevice,
+    POSTED_ACK_NS,
+)
+from repro.core.engine import ns, us
+from repro.core.fabric.fabric import FabricAttachedDevice
+from repro.core.fabric.topology import SWITCH
+from repro.core.ssd.hil import HIL
+
+
+class ReplayUnsupported(ValueError):
+    """The device/trace combination has no exact fused fast path."""
+
+
+# media kinds the fused step function branches on (static)
+DRAM = "dram"
+PMEM = "pmem"
+SSD_BUF = "ssd-buf"        # cxl-ssd: page-register buffer straight to flash
+SSD_CACHE = "ssd-cache"    # cxl-ssd-cache: DRAM cache + MSHR + writeback
+
+
+@dataclass(frozen=True)
+class StackConfig:
+    """Static (hashable) shape of one host->device stack."""
+
+    kind: str                    # DRAM | PMEM | SSD_BUF | SSD_CACHE
+    outstanding: int
+    posted_writes: bool
+    num_hops: int                # transport hops (0 = directly attached)
+    num_ports: int               # busy-until vector length (>= 1)
+    page_bytes: int = 4096
+    # cache layer (SSD_CACHE)
+    cache_frames: int = 0
+    cache_assoc: bool = True     # True: lru/fifo (is_lru param); False: direct
+    mshr_entries: int = 0
+    wb_slots: int = 0
+    # flash backend (SSD_BUF / SSD_CACHE)
+    channels: int = 0
+    dies_per_channel: int = 0
+    pages_per_block: int = 0
+    buf_entries: int = 0         # SSD_BUF page registers
+    num_pages: int = 0           # l2p table size (trace footprint, pow2)
+
+
+def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
+    """A private point-to-point link as a 1-hop route (NullLink: 0 hops)."""
+    if isinstance(link, NullLink):
+        return [], 0
+    return [(0, ns(size / link.bw_gbps), 0)], ns(link.rt_extra_ns)
+
+
+def _fabric_hops(dev: FabricAttachedDevice, size: int) -> Tuple[list, int]:
+    """Route tensor export: one (port_index, occ_ticks, after_ticks) per hop,
+    from :meth:`Fabric.route_occupancy` (the single definition of the
+    per-hop busy-until rule)."""
+    fab = dev.fabric
+    hops = [(i, occ, after) for i, (_, occ, after) in enumerate(
+        fab.route_occupancy(dev.host, dev.device_node, size))]
+    return hops, ns(fab.rt_extra_ns)
+
+
+def _require_fresh(dev: MemDevice) -> None:
+    if dev.stats.get("bytes", 0):
+        raise ReplayUnsupported(
+            f"device {dev.name!r} has prior traffic; the fused replay "
+            "snapshots a fresh device (re-create it or use engine='python')")
+
+
+def _ssd_params(hil: HIL) -> Dict[str, int]:
+    t = hil.cfg.timing
+    return {
+        "hil_ov": ns(hil.cfg.hil_overhead_ns),
+        "xfer_page": t.xfer_ticks(hil.cfg.page_bytes),
+        "read_t": t.read_ticks,
+        "prog_t": t.prog_ticks,
+        "sus_t": us(t.t_suspend_us),
+    }
+
+
+def _check_gc_headroom(hil: HIL, n_accesses: int) -> None:
+    """The fused FTL is log-append only; refuse traces that could trigger GC
+    (each access causes at most one flash program)."""
+    ftl = hil.ftl
+    blocks_needed = ftl.write_ptr_block + n_accesses // ftl.pages_per_block + 2
+    if blocks_needed >= ftl.num_blocks - ftl.gc_watermark_blocks:
+        raise ReplayUnsupported(
+            f"trace of {n_accesses} accesses could trigger FTL GC "
+            f"({ftl.num_blocks} blocks, watermark "
+            f"{ftl.gc_watermark_blocks}); use engine='python'")
+
+
+def build_stack(device: MemDevice, *, size: int, outstanding: int,
+                issue_overhead_ns: float, posted_writes: bool,
+                n_accesses: int, max_addr: int) -> Tuple[StackConfig, Dict]:
+    """Extract (static config, params dict) for one host->device stack."""
+    _require_fresh(device)
+    inner = device
+    if isinstance(device, FabricAttachedDevice):
+        if device.fabric.stats.get("transfers", 0):
+            # shared ports may hold busy-until state from other mounts;
+            # a zeroed replay would silently diverge from the python path
+            raise ReplayUnsupported(
+                "fabric has prior traffic; replay snapshots a fresh fabric "
+                "(Fabric.reset() or re-build it, or use engine='python')")
+        hops, rt = _fabric_hops(device, size)
+        inner = device.inner
+        _require_fresh(inner)
+    elif isinstance(device, (CXLDRAMDevice, CXLSSDDevice, CachedCXLSSDDevice)):
+        hops, rt = _link_hops(device.link, size)
+    elif isinstance(device, (DRAMDevice, PMEMDevice)):
+        hops, rt = [], 0
+    else:
+        raise ReplayUnsupported(f"no fused model for {type(device).__name__}")
+
+    params: Dict = {
+        "issue_ov": ns(issue_overhead_ns),
+        # hop h is port h on a single-host route: positional arrays suffice
+        "hop_occ": np.asarray([h[1] for h in hops], np.int64),
+        "hop_after": np.asarray([h[2] for h in hops], np.int64),
+        "rt_extra": rt,
+    }
+    common = dict(outstanding=max(1, outstanding), posted_writes=posted_writes,
+                  num_hops=len(hops), num_ports=max(1, len(hops)))
+
+    if isinstance(inner, (DRAMDevice, CXLDRAMDevice)):
+        dram = inner.dram if isinstance(inner, CXLDRAMDevice) else inner
+        if isinstance(inner, CXLDRAMDevice) and inner is not device:
+            # Mounted behind a fabric with detach_link=False: the private
+            # link is a second transport stage after the fabric.
+            ih, irt = _link_hops(inner.link, size)
+            if ih:
+                base = len(hops)
+                params["hop_occ"] = np.concatenate(
+                    [params["hop_occ"], [ih[0][1]]]).astype(np.int64)
+                params["hop_after"] = np.concatenate(
+                    [params["hop_after"], [ih[0][2]]]).astype(np.int64)
+                params["rt_extra"] = rt + irt
+                common.update(num_hops=base + 1, num_ports=base + 1)
+        params.update({
+            "occ": ns(size / dram.t.bw_gbps),
+            "load": ns(dram.t.load_ns),
+            "pack": ns(POSTED_ACK_NS),
+        })
+        return StackConfig(kind=DRAM, **common), params
+
+    if isinstance(inner, PMEMDevice):
+        t = inner.t
+        lat = np.zeros((2, 2), np.int64)        # [write][row_hit]
+        lat[0, 0] = ns(t.read_ns)
+        lat[0, 1] = ns(t.read_ns * t.row_hit_factor)
+        lat[1, 0] = ns(t.write_ns)
+        lat[1, 1] = ns(t.write_ns * t.row_hit_factor)
+        params.update({
+            "occ": ns(size / t.bw_gbps),
+            "lat": lat,
+            "pack": ns(POSTED_ACK_NS),
+            "row_bytes": np.int64(t.row_bytes),
+        })
+        return StackConfig(kind=PMEM, **common), params
+
+    page_bytes = 4096
+    if max_addr // page_bytes >= (1 << 38) - 1:
+        raise ReplayUnsupported(
+            "page id exceeds the packed-frame field (addr >= 2^50)")
+    if hasattr(inner, "hil"):
+        ftl = inner.hil.ftl
+        if ftl.num_blocks * ftl.pages_per_block >= (1 << 31):
+            raise ReplayUnsupported("physical page numbers overflow int32")
+    n_pages = max(1, max_addr // page_bytes + 1)
+    n_pages = 1 << (n_pages - 1).bit_length()   # pow2: stable compilations
+
+    if inner is not device and hasattr(inner, "link") \
+            and not isinstance(inner, CXLDRAMDevice) \
+            and not isinstance(inner.link, NullLink):
+        raise ReplayUnsupported(
+            "fabric-mounted SSD device keeps a live private link "
+            "(detach_link=False); use engine='python'")
+
+    if isinstance(inner, CXLSSDDevice):
+        from repro.core.cache.policies import LRUPolicy
+        if not isinstance(inner._buf, LRUPolicy):
+            raise ReplayUnsupported("cxl-ssd page-register buffer must be LRU")
+        _check_gc_headroom(inner.hil, n_accesses)
+        params.update(_ssd_params(inner.hil))
+        params["internal"] = ns(inner.internal_latency_ns)
+        return StackConfig(
+            kind=SSD_BUF, page_bytes=inner.hil.cfg.page_bytes,
+            channels=inner.hil.cfg.channels,
+            dies_per_channel=inner.hil.cfg.dies_per_channel,
+            pages_per_block=inner.hil.ftl.pages_per_block,
+            buf_entries=inner._buf.capacity, num_pages=n_pages,
+            **common), params
+
+    if isinstance(inner, CachedCXLSSDDevice):
+        cache = inner.cache
+        pol = cache.policy.name
+        if pol not in ("lru", "fifo", "direct"):
+            raise ReplayUnsupported(
+                f"fused replay supports lru/fifo/direct, got {pol!r}")
+        if cache.cfg.mshr_entries < 1 or cache.cfg.writeback_buffer < 1:
+            raise ReplayUnsupported("cache needs >= 1 MSHR and wb slot")
+        _check_gc_headroom(inner.hil, n_accesses)
+        frames = cache.cfg.capacity_pages
+        params.update(_ssd_params(inner.hil))
+        per_byte_ns = 1.0 / cache.cfg.dram_bw_gbps
+        params.update({
+            "hit_lat": ns(cache.cfg.hit_latency_ns),
+            "line_xfer": ns(64 * per_byte_ns),
+            "page_xfer": ns(page_bytes * per_byte_ns),
+            "pack10": ns(10.0),
+            "is_lru": np.bool_(pol == "lru"),
+            "cap": np.int64(frames),
+        })
+        return StackConfig(
+            kind=SSD_CACHE, page_bytes=page_bytes,
+            cache_frames=frames, cache_assoc=(pol != "direct"),
+            mshr_entries=cache.cfg.mshr_entries,
+            wb_slots=cache.cfg.writeback_buffer,
+            channels=inner.hil.cfg.channels,
+            dies_per_channel=inner.hil.cfg.dies_per_channel,
+            pages_per_block=inner.hil.ftl.pages_per_block,
+            num_pages=n_pages, **common), params
+
+    raise ReplayUnsupported(f"no fused model for {type(inner).__name__}")
+
+
+def trace_to_arrays(trace, *, line: int = 64) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Validate a ``[(addr, size, write)]`` trace for the fused fast path.
+
+    Returns ``(addrs int64, writes bool, size)``.  Requires a uniform access
+    size that stays inside one 64 B line (the vectorized step services
+    exactly one cache line per access, like the drivers' typical traces)."""
+    rows = list(trace)
+    if not rows:
+        raise ReplayUnsupported("empty trace")
+    addrs = np.asarray([r[0] for r in rows], np.int64)
+    sizes = np.asarray([r[1] for r in rows], np.int64)
+    writes = np.asarray([r[2] for r in rows], bool)
+    size = int(sizes[0])
+    if not (sizes == size).all():
+        raise ReplayUnsupported("fused replay needs a uniform access size")
+    if size < 1 or ((addrs % line) + size > line).any():
+        raise ReplayUnsupported(
+            "fused replay needs accesses contained in one 64 B line")
+    if (addrs < 0).any():
+        raise ReplayUnsupported("negative addresses")
+    return addrs, writes, size

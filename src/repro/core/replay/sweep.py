@@ -1,0 +1,177 @@
+"""vmap-batched design-space sweeps over the fused replay engine.
+
+One compiled call evaluates a whole batch of simulator configurations
+against the same (or per-lane) traces:
+
+* :func:`cache_design_sweep` — batch over DRAM-cache **capacity**
+  (disabled-frame masking inside a fixed frame array), **policy**
+  (LRU/FIFO via the traced ``is_lru`` flag), and any **timing constant**
+  (hit latency, link occupancy, flash timing, ...), on the full
+  cached-CXL-SSD stack.  Each lane runs the same tick-exact step function
+  the single-config engine runs, so lane *k* of the batch equals a
+  standalone :class:`~repro.core.replay.engine.ReplayEngine` run with that
+  config (tested).
+* :func:`host_count_sweep` — batch over **host count** on the fused
+  multi-host replay: one compiled program, one vmap lane per host count,
+  inactive hosts masked out of the issue race by zero-length traces.
+
+On CPU these amortize compile time and per-step dispatch; on TPU/GPU the
+lanes vectorize across the batch dimension, which is where the
+design-space throughput multiplier comes from.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.replay.engine import (
+    MAX_ACCESSES,
+    PAGE_FIELD,
+    _i64,
+    _media_init,
+    _scan_stack,
+)
+from repro.core.replay.multihost import MultiHostReplay, _run_multi
+from repro.core.replay.spec import SSD_CACHE, ReplayUnsupported, build_stack
+from repro.core.workloads.driver import MultiHostResult
+
+# A disabled frame: never matches (page field all-ones is reserved) and is
+# never chosen as victim (above every valid packed value and every -1).
+DISABLED = (1 << 62) | PAGE_FIELD
+
+
+# Module-level jitted runners (like engine._run_stack / multihost._run_multi)
+# so repeated sweep calls with the same static shape hit the compile cache.
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _run_cache_lanes(cfg, pj: Dict, trace_args, batched: frozenset,
+                     trace_ax):
+    axes = {k: (0 if k in batched else None) for k in pj}
+    a, w = trace_args
+
+    def one(p1, a1, w1):
+        media = _media_init(cfg)
+        frames = jnp.where(
+            jnp.arange(cfg.cache_frames) < p1["cap"],
+            jnp.asarray(-1, jnp.int64),
+            jnp.asarray(DISABLED, jnp.int64))
+        return _scan_stack(cfg, p1, {**media, "frames": frames},
+                           a1, w1, _i64(0))
+
+    return jax.vmap(one, in_axes=(axes, trace_ax, trace_ax))(pj, a, w)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_multi_lanes(cfg, pj: Dict, devs, addrs, writes, lane_lens):
+    return jax.vmap(
+        lambda lens_k: _run_multi(cfg, pj, devs, addrs, writes, lens_k,
+                                  _i64(0)))(lane_lens)
+
+
+def cache_design_sweep(device, addrs, writes, *,
+                       capacity_frames: Sequence[int],
+                       is_lru: Sequence[bool],
+                       timing_overrides: Optional[Dict[str, Sequence]] = None,
+                       outstanding: int = 32,
+                       issue_overhead_ns: float = 0.5,
+                       posted_writes: bool = True) -> Dict[str, np.ndarray]:
+    """Replay a trace under B cached-device configs in one compiled call.
+
+    ``capacity_frames[k]`` / ``is_lru[k]`` / ``timing_overrides[name][k]``
+    describe lane k; all sequences must share length B.  ``device`` provides
+    the base config and must have ``capacity_pages >= max(capacity_frames)``.
+    ``addrs``/``writes`` may be (N,) — shared by every lane — or (B, N) for
+    per-lane traces.  Returns stacked per-lane arrays (``latency_ticks``,
+    ``hit_flags`` of shape (B, N)) plus derived (B,) summaries.
+    """
+    addrs = np.asarray(addrs, np.int64)
+    writes = np.asarray(writes, bool)
+    caps = np.asarray(capacity_frames, np.int64)
+    lru = np.asarray(is_lru, bool)
+    B = caps.size
+    if lru.size != B:
+        raise ValueError("capacity_frames and is_lru must share a length")
+    if addrs.shape[-1] > MAX_ACCESSES:
+        raise ReplayUnsupported(
+            f"trace longer than {MAX_ACCESSES} accesses (packed-stamp "
+            "budget); split the trace")
+    cfg, params = build_stack(
+        device, size=64, outstanding=outstanding,
+        issue_overhead_ns=issue_overhead_ns, posted_writes=posted_writes,
+        n_accesses=addrs.shape[-1], max_addr=int(addrs.max(initial=0)))
+    if cfg.kind != SSD_CACHE:
+        raise ReplayUnsupported("cache_design_sweep needs a cached CXL-SSD")
+    if not cfg.cache_assoc:
+        raise ReplayUnsupported(
+            "the policy axis covers lru/fifo; sweep direct-mapped separately")
+    if caps.max() > cfg.cache_frames or caps.min() < 1:
+        raise ReplayUnsupported("capacity lane exceeds the device's frames")
+    params["is_lru"] = lru
+    params["cap"] = caps
+    batched = {"is_lru", "cap"}
+    for name, vals in (timing_overrides or {}).items():
+        if name not in params:
+            raise ValueError(f"unknown timing parameter {name!r}")
+        vals = np.asarray(vals)
+        if vals.shape[0] != B:
+            raise ValueError(f"override {name!r} must have {B} lanes")
+        params[name] = vals
+        batched.add(name)
+
+    trace_ax = 0 if addrs.ndim == 2 else None
+    with enable_x64():
+        pj = {k: jnp.asarray(v) for k, v in params.items()}
+        issues, dones, flags, _ = _run_cache_lanes(
+            cfg, pj, (jnp.asarray(addrs), jnp.asarray(writes)),
+            frozenset(batched), trace_ax)
+        issues = np.asarray(issues)
+        dones = np.asarray(dones)
+        flags = np.asarray(flags)
+    lat = dones - issues
+    return {
+        "latency_ticks": lat,
+        "hit_flags": (flags & 1).astype(bool),
+        "evict_flags": (flags & 2).astype(bool),
+        "sum_latency_ticks": lat.sum(axis=1),
+        "hit_rate": (flags & 1).mean(axis=1),
+        "elapsed_ticks": dones.max(axis=1) - issues[:, 0],
+    }
+
+
+def host_count_sweep(targets: Sequence, traces: Sequence,
+                     host_counts: Sequence[int],
+                     outstanding: int = 32,
+                     issue_overhead_ns: float = 0.5,
+                     posted_writes: bool = True) -> List[MultiHostResult]:
+    """Replay the same multi-host scenario at several host counts in ONE
+    compiled vmapped call.
+
+    ``targets``/``traces`` describe the largest configuration; lane k keeps
+    the first ``host_counts[k]`` hosts and masks the rest out with
+    zero-length traces (an absent host issues nothing, so the shared-port
+    and media contention it would have caused never happens — identical to
+    running the smaller scenario).  Lane k is tick-identical to
+    ``MultiHostReplay(targets[:k]).run(traces[:k])`` over the *same shared
+    fabric* (tested against :class:`MultiHostDriver`).
+    """
+    eng = MultiHostReplay(targets, outstanding=outstanding,
+                          issue_overhead_ns=issue_overhead_ns,
+                          posted_writes=posted_writes)
+    cfg, params, devs, addrs, writes, lens, size = eng.prepare(traces)
+    lane_lens = np.stack([
+        np.where(np.arange(lens.size) < h, lens, 0) for h in host_counts])
+    with enable_x64():
+        pj = jax.tree.map(jnp.asarray, params)
+        who, issues, dones = _run_multi_lanes(
+            cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
+            jnp.asarray(writes), jnp.asarray(lane_lens))
+        who = np.asarray(who)
+        issues = np.asarray(issues)
+        dones = np.asarray(dones)
+    return [eng.aggregate(who[k], issues[k], dones[k], lane_lens[k], size)
+            for k in range(len(host_counts))]

@@ -45,24 +45,78 @@ class TraceResult:
         return self.bytes_moved / self.elapsed_s / 1e9 if self.elapsed_ticks else 0.0
 
 
+ENGINES = ("python", "scan", "pallas")
+
+
 class TraceDriver:
     """``outstanding≈32`` models LFBs + hardware prefetch streams; real cores
-    need ~latency/occupancy (~24 for DDR4) in flight to reach media bandwidth."""
+    need ~latency/occupancy (~24 for DDR4) in flight to reach media bandwidth.
+
+    ``engine`` selects the replay backend:
+
+    ``python``   interpret every access through the device objects (the
+                 reference semantics; always available);
+    ``scan``     the fused :mod:`repro.core.replay` lax.scan — one compiled
+                 program for the whole stack, tick-identical to ``python``
+                 for supported shapes (raises
+                 :class:`~repro.core.replay.ReplayUnsupported` otherwise);
+    ``pallas``   the fused Pallas cache+latency kernel — bit-identical
+                 hit/evict decisions, analytic open-loop latency (see
+                 :mod:`repro.core.replay.pallas_engine`).
+    """
 
     def __init__(self, device: MemDevice, outstanding: int = 32,
-                 issue_overhead_ns: float = 0.5, posted_writes: bool = True) -> None:
+                 issue_overhead_ns: float = 0.5, posted_writes: bool = True,
+                 engine: str = "python") -> None:
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
         self.device = device
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
+        self.engine = engine
 
     def run(self, trace: Iterable[Access], start_tick: int = 0) -> TraceResult:
+        rows = list(trace) if self.engine != "python" else trace
+        if self.engine != "python" and rows:
+            return self._run_fast(rows, start_tick)
         # One-host case of the interleaved driver: a single shared issue
         # model keeps the two from drifting.
         multi = MultiHostDriver([self.device], outstanding=self.outstanding,
                                 issue_overhead_ns=self.issue_overhead_ns,
                                 posted_writes=self.posted_writes)
-        return multi.run([trace], start_tick=start_tick).per_host[0]
+        return multi.run([rows], start_tick=start_tick).per_host[0]
+
+    def _run_fast(self, rows, start_tick: int) -> TraceResult:
+        from repro.core.replay import (MultiHostReplay, ReplayEngine,
+                                       ReplayUnsupported)
+
+        if self.engine == "pallas":
+            from repro.core.replay.pallas_engine import run_pallas
+            from repro.core.replay.spec import trace_to_arrays
+            addrs, writes, size = trace_to_arrays(rows)
+            return run_pallas(self.device, addrs, writes, size=size,
+                              outstanding=self.outstanding,
+                              issue_overhead_ns=self.issue_overhead_ns,
+                              start_tick=start_tick)
+        try:
+            return ReplayEngine(
+                self.device, outstanding=self.outstanding,
+                issue_overhead_ns=self.issue_overhead_ns,
+                posted_writes=self.posted_writes).run(rows, start_tick)
+        except ReplayUnsupported as single_host_reason:
+            # pool views and shared-fabric targets live in the multi-host
+            # engine; a single host is its degenerate case
+            try:
+                return MultiHostReplay(
+                    [self.device], outstanding=self.outstanding,
+                    issue_overhead_ns=self.issue_overhead_ns,
+                    posted_writes=self.posted_writes).run(
+                        [rows], start_tick).per_host[0]
+            except ReplayUnsupported:
+                # the single-host diagnosis (e.g. an unsupported policy) is
+                # the actionable one; don't mask it with the retry's
+                raise single_host_reason from None
 
 
 # ----------------------------------------------------------- multi-host
@@ -135,17 +189,29 @@ class MultiHostDriver:
 
     def __init__(self, targets: Sequence[MemDevice], outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
-                 posted_writes: bool = True) -> None:
+                 posted_writes: bool = True, engine: str = "python") -> None:
         if not targets:
             raise ValueError("need at least one host target")
+        if engine not in ("python", "scan"):
+            raise ValueError(f"multi-host engine must be python|scan, "
+                             f"got {engine!r}")
         self.targets = list(targets)
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
+        self.engine = engine
 
     def run(self, traces: Sequence[Iterable[Access]],
             start_tick: int = 0) -> MultiHostResult:
         from repro.core.engine import ns
+
+        if self.engine == "scan":
+            from repro.core.replay import MultiHostReplay
+            return MultiHostReplay(
+                self.targets, outstanding=self.outstanding,
+                issue_overhead_ns=self.issue_overhead_ns,
+                posted_writes=self.posted_writes).run(
+                    [list(t) for t in traces], start_tick)
 
         if len(traces) != len(self.targets):
             raise ValueError(f"{len(traces)} traces for "

@@ -133,3 +133,150 @@ def _vmem(shape):
     """VMEM scratch allocation (int32)."""
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, jnp.int32)
+
+
+# ------------------------------------------------------------------- fused
+def _cache_sim_fused_kernel(pages_ref, writes_ref, hits_ref, evicts_ref,
+                            lat_ref, arr_ref, tags_ref, meta_ref, dirty_ref,
+                            busy_ref, ring_ref, *, num_sets: int, ways: int,
+                            chunk: int,
+                            is_lru: bool, outstanding: int, issue_ns: int,
+                            hit_ns: int, miss_ns: int, miss_occ_ns: int,
+                            wb_ns: int):
+    """Fused variant: the cache update rule of :func:`_cache_sim_kernel`
+    plus per-access latency, emitted in the same sequential pass.
+
+    Latency model (analytic, all in **nanoseconds**; int32 cursors hold
+    ~2.1 s of simulated time — callers bound the trace accordingly, see
+    :func:`repro.core.replay.pallas_engine.run_pallas`): closed-loop issue
+    with ``outstanding`` slots — access
+    *i* arrives ``issue_ns`` after its predecessor, but no earlier than
+    completion *i - outstanding* (a ring buffer of the last K completion
+    times, i.e. the driver's line-fill-buffer rule under in-order
+    completion).  A hit costs ``hit_ns``; a miss queues on the fill path's
+    busy-until scalar (``miss_occ_ns`` occupancy per fill — the 4 KB
+    cache-DRAM transfer), then costs ``miss_ns`` service, plus ``wb_ns``
+    when it also evicts a dirty page.  All latency state lives in VMEM
+    scratch next to the cache state, so trace -> hit/evict/latency is one
+    kernel."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        tags_ref[...] = jnp.full((ways, num_sets), -1, jnp.int32)
+        meta_ref[...] = jnp.zeros((ways, num_sets), jnp.int32)
+        dirty_ref[...] = jnp.zeros((ways, num_sets), jnp.int32)
+        busy_ref[...] = jnp.zeros((1, 2), jnp.int32)     # [fill busy, prev arr]
+        ring_ref[...] = jnp.zeros((1, outstanding), jnp.int32)
+
+    base_t = step * chunk
+
+    def body(i, _):
+        page = pages_ref[0, i]
+        wr = writes_ref[0, i]
+        t = base_t + i + 1
+        s = jax.lax.rem(page, num_sets)
+
+        line_tags = tags_ref[:, pl.ds(s, 1)][:, 0]    # (W,)
+        line_meta = meta_ref[:, pl.ds(s, 1)][:, 0]
+        line_dirty = dirty_ref[:, pl.ds(s, 1)][:, 0]
+
+        match = line_tags == page
+        hit = jnp.any(match)
+        hit_way = jnp.argmax(match)
+
+        valid = line_tags >= 0
+        victim_key = jnp.where(valid, line_meta, NEG)
+        victim_way = jnp.argmin(victim_key)
+        way = jnp.where(hit, hit_way, victim_way).astype(jnp.int32)
+
+        dirty_evict = jnp.logical_and(
+            jnp.logical_and(~hit, valid[victim_way]),
+            line_dirty[victim_way] > 0)
+
+        new_tag = jnp.where(hit, line_tags[way], page)
+        stamp = jnp.where(hit,
+                          jnp.where(is_lru, t, line_meta[way]),
+                          t).astype(jnp.int32)
+        new_dirty = jnp.where(hit, line_dirty[way] | wr, wr).astype(jnp.int32)
+
+        line_tags = line_tags.at[way].set(new_tag)
+        line_meta = line_meta.at[way].set(stamp)
+        line_dirty = line_dirty.at[way].set(new_dirty)
+        tags_ref[:, pl.ds(s, 1)] = line_tags[:, None]
+        meta_ref[:, pl.ds(s, 1)] = line_meta[:, None]
+        dirty_ref[:, pl.ds(s, 1)] = line_dirty[:, None]
+
+        # latency: closed-loop arrival (LFB ring), then busy-until queueing
+        # on the miss fill path
+        slot = jax.lax.rem(base_t + i, outstanding)
+        t_arr = jnp.maximum(busy_ref[0, 1] + issue_ns, ring_ref[0, slot])
+        busy = busy_ref[0, 0]
+        start = jnp.maximum(t_arr, busy)
+        done = jnp.where(hit, t_arr + hit_ns,
+                         start + miss_ns
+                         + jnp.where(dirty_evict, wb_ns, 0)).astype(jnp.int32)
+        busy_ref[0, 0] = jnp.where(hit, busy, start + miss_occ_ns)
+        busy_ref[0, 1] = t_arr.astype(jnp.int32)
+        ring_ref[0, slot] = done
+
+        hits_ref[0, i] = hit.astype(jnp.int32)
+        evicts_ref[0, i] = dirty_evict.astype(jnp.int32)
+        lat_ref[0, i] = done - t_arr
+        arr_ref[0, i] = t_arr.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_sets", "ways", "policy", "chunk", "interpret", "outstanding",
+    "issue_ns", "hit_ns", "miss_ns", "miss_occ_ns", "wb_ns"))
+def cache_sim_fused(pages: jnp.ndarray, writes: jnp.ndarray, *, num_sets: int,
+                    ways: int, policy: str = "lru", outstanding: int = 32,
+                    issue_ns: int = 1, hit_ns: int = 50, miss_ns: int = 5000,
+                    miss_occ_ns: int = 213, wb_ns: int = 0, chunk: int = 512,
+                    interpret: bool = True):
+    """Fused trace replay: one kernel emits (hits, dirty_evicts, latency_ns,
+    arrival_ns).
+
+    Hit/evict decisions are bit-identical to :func:`cache_sim` (and so to
+    the lax.scan oracle and the Python policy objects); the latency stream
+    follows the analytic closed-loop model documented on the kernel,
+    validated against :func:`repro.kernels.ref.cache_sim_fused_ref`."""
+    if policy not in ("lru", "fifo", "direct"):
+        raise ValueError(f"kernel supports lru/fifo/direct, got {policy!r}")
+    if policy == "direct" and ways != 1:
+        raise ValueError("direct-mapped requires ways == 1")
+    n = pages.shape[0]
+    pad = (-n) % chunk
+    pages = jnp.pad(pages.astype(jnp.int32), (0, pad))
+    writes = jnp.pad(writes.astype(jnp.int32), (0, pad))
+    c = (n + pad) // chunk
+    pages2 = pages.reshape(c, chunk)
+    writes2 = writes.reshape(c, chunk)
+
+    kern = functools.partial(
+        _cache_sim_fused_kernel, num_sets=num_sets, ways=ways, chunk=chunk,
+        is_lru=(policy == "lru"), outstanding=max(1, outstanding),
+        issue_ns=issue_ns, hit_ns=hit_ns, miss_ns=miss_ns,
+        miss_occ_ns=miss_occ_ns, wb_ns=wb_ns)
+    hits, evicts, lat, arr = pl.pallas_call(
+        kern,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, chunk), lambda i: (i, 0))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((c, chunk), jnp.int32)
+                   for _ in range(4)],
+        scratch_shapes=[_vmem((ways, num_sets)) for _ in range(3)]
+        + [_vmem((1, 2)), _vmem((1, max(1, outstanding)))],
+        interpret=interpret,
+    )(pages2, writes2)
+    return (hits.reshape(-1)[:n].astype(bool),
+            evicts.reshape(-1)[:n].astype(bool),
+            lat.reshape(-1)[:n],
+            arr.reshape(-1)[:n])

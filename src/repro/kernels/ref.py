@@ -18,6 +18,39 @@ def cache_sim_ref(pages, writes, *, num_sets: int, ways: int,
     return hits, evicts
 
 
+def cache_sim_fused_ref(pages, writes, *, num_sets: int, ways: int,
+                        policy: str = "lru", outstanding: int = 32,
+                        issue_ns: int = 1, hit_ns: int = 50,
+                        miss_ns: int = 5000, miss_occ_ns: int = 213,
+                        wb_ns: int = 0):
+    """Oracle for :func:`repro.kernels.cache_sim.cache_sim_fused`: the scan
+    cache replay plus the same closed-loop (LFB-ring) busy-until latency
+    recurrence (all in int32 nanoseconds)."""
+    hits, evicts, _ = _run_trace(jnp.asarray(pages, jnp.int32),
+                                 jnp.asarray(writes, bool),
+                                 num_sets, ways, policy == "lru")
+    K = max(1, outstanding)
+
+    def step(carry, x):
+        busy, prev, ring = carry
+        i, hit, ev = x
+        slot = jax.lax.rem(i, K)
+        t = jnp.maximum(prev + issue_ns, ring[slot])
+        start = jnp.maximum(t, busy)
+        done = jnp.where(hit, t + hit_ns,
+                         start + miss_ns + jnp.where(ev, wb_ns, 0))
+        busy = jnp.where(hit, busy, start + miss_occ_ns)
+        return (busy, t, ring.at[slot].set(done)), (done - t).astype(jnp.int32)
+
+    n = hits.shape[0]
+    # prev-arrival starts at 0, like the kernel's scratch init: the first
+    # access arrives at issue_ns.
+    _, lat = jax.lax.scan(
+        step, (jnp.int32(0), jnp.int32(0), jnp.zeros(K, jnp.int32)),
+        (jnp.arange(n, dtype=jnp.int32), hits, evicts))
+    return hits, evicts, lat
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """O(S^2) full-softmax attention (supports GQA + SWA + cross lengths)."""
     if q.shape[1] == k.shape[1] or causal:

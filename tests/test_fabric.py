@@ -165,6 +165,20 @@ class TestSharedBottleneck:
         assert shared.queued_ticks > 0
         assert 0.9 < shared.utilization(res.elapsed_ticks) <= 1.0
 
+    def test_port_report_utilization_and_bytes_by_host(self):
+        fab, res = self._run(2)
+        rows = {r["port"]: r for r in fab.port_report(res.elapsed_ticks)}
+        shared = rows["s0->d0"]
+        # both hosts' traffic is attributed on the shared egress port
+        assert shared["bytes_by_host"] == {"h0": 8000 * 64, "h1": 8000 * 64}
+        assert sum(shared["bytes_by_host"].values()) == shared["bytes"]
+        assert 0.9 < shared["utilization"] <= 1.0
+        # host->switch ingress ports carry exactly one host each
+        assert rows["h0->s0"]["bytes_by_host"] == {"h0": 8000 * 64}
+        # reset clears the attribution
+        fab.reset()
+        assert fab.ports[("s0", "d0")].bytes_by_origin == {}
+
     def test_private_links_do_not_contend(self):
         fab = Fabric(direct(2))
         views = [fab.mount(f"h{i}", f"d{i}", DRAMDevice()) for i in range(2)]

@@ -1,0 +1,314 @@
+"""Fused replay engine: tick-equivalence with the interpreted drivers.
+
+The contract under test: for every supported stack, the single
+``jax.lax.scan`` replay (`repro.core.replay`) produces *exactly* the same
+ticks as `TraceDriver`/`MultiHostDriver` interpreting the same trace access
+by access — elapsed, per-access latency sum, and completion tick all equal.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cache.dram_cache import DRAMCacheConfig
+from repro.core.devices import DRAMDevice, make_device
+from repro.core.fabric import Fabric, MemoryPool
+from repro.core.replay import MultiHostReplay, ReplayEngine, ReplayUnsupported
+from repro.core.workloads.driver import MultiHostDriver, TraceDriver
+
+# One cache geometry reused everywhere so the jitted replay program is
+# compiled once per policy, not once per test.
+CACHE_KW = dict(capacity_bytes=16 * 4096, mshr_entries=4, writeback_buffer=2)
+N = 1500
+
+
+def _mk(name, policy="lru"):
+    if name == "cxl-ssd-cache":
+        return make_device(name, cache_cfg=DRAMCacheConfig(
+            policy=policy, **CACHE_KW))
+    return make_device(name)
+
+
+def _trace(seed, n=N, pages=48, write_frac=0.3):
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, pages, n) * 4096 + rng.integers(0, 64, n) * 64
+    writes = rng.random(n) < write_frac
+    return [(int(a), 64, bool(w)) for a, w in zip(addrs, writes)]
+
+
+def _assert_equal(py, rp):
+    assert py.accesses == rp.accesses
+    assert py.bytes_moved == rp.bytes_moved
+    assert py.elapsed_ticks == rp.elapsed_ticks
+    assert py.sum_latency_ticks == rp.sum_latency_ticks
+    assert py.end_tick == rp.end_tick
+
+
+# ------------------------------------------------------------ single host
+@pytest.mark.parametrize("name", ["dram", "cxl-dram", "pmem", "cxl-ssd",
+                                  "cxl-ssd-cache"])
+def test_scan_matches_python_all_devices(name):
+    trace = _trace(1)
+    py = TraceDriver(_mk(name), outstanding=8).run(trace)
+    rp = ReplayEngine(_mk(name), outstanding=8).run(trace)
+    _assert_equal(py, rp)
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo", "direct"])
+def test_cached_policies_exact(policy):
+    trace = _trace(2, write_frac=0.5)
+    py = TraceDriver(_mk("cxl-ssd-cache", policy), outstanding=8).run(trace)
+    rp = ReplayEngine(_mk("cxl-ssd-cache", policy), outstanding=8).run(trace)
+    _assert_equal(py, rp)
+    # hit accounting agrees with the policy objects
+    dev = _mk("cxl-ssd-cache", policy)
+    TraceDriver(dev, outstanding=8).run(trace)
+    assert rp.hits == dev.cache.policy.hits
+
+
+def test_cached_stress_minimal_buffers():
+    """mshr=1 / wb=1 maximizes stall interleavings; posted_writes=False and
+    outstanding=1 exercise the other driver branches."""
+    cfg = DRAMCacheConfig(capacity_bytes=8 * 4096, policy="lru",
+                          mshr_entries=1, writeback_buffer=1)
+    trace = _trace(3, write_frac=0.6)
+    for kw in (dict(posted_writes=False), dict(outstanding=1)):
+        py = TraceDriver(make_device("cxl-ssd-cache", cache_cfg=cfg),
+                         **kw).run(trace)
+        rp = ReplayEngine(make_device("cxl-ssd-cache", cache_cfg=cfg),
+                          **kw).run(trace)
+        _assert_equal(py, rp)
+
+
+def test_start_tick_offset():
+    trace = _trace(4)
+    py = TraceDriver(_mk("cxl-dram"), outstanding=8).run(trace, start_tick=12345)
+    rp = ReplayEngine(_mk("cxl-dram"), outstanding=8).run(trace, start_tick=12345)
+    _assert_equal(py, rp)
+
+
+# ----------------------------------------------------------------- fabric
+@pytest.mark.parametrize("name", ["dram", "cxl-ssd-cache"])
+def test_fabric_mounted_exact(name):
+    trace = _trace(5)
+
+    def mk():
+        fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
+                           num_leaves=2)
+        return fab.mount("h1", "d1", _mk(name))
+
+    py = TraceDriver(mk(), outstanding=8).run(trace)
+    rp = ReplayEngine(mk(), outstanding=8).run(trace)
+    _assert_equal(py, rp)
+
+
+def _pool_views(nh=4):
+    fab = Fabric.build("single_switch", num_hosts=4, num_devices=1)
+    pool = MemoryPool(fab, {"d0": DRAMDevice()})
+    return pool.views([f"h{i}" for i in range(nh)])
+
+
+def test_multihost_exact_pooled():
+    traces = [_trace(10 + h, n=1000) for h in range(4)]
+    py = MultiHostDriver(_pool_views()).run(traces)
+    rp = MultiHostReplay(_pool_views()).run(traces)
+    assert py.elapsed_ticks == rp.elapsed_ticks
+    for a, b in zip(py.per_host, rp.per_host):
+        _assert_equal(a, b)
+
+
+def test_multihost_exact_private_mounts():
+    def mk():
+        fab = Fabric.build("direct", num_pairs=2)
+        return [fab.mount(f"h{i}", f"d{i}", DRAMDevice()) for i in range(2)]
+
+    traces = [_trace(20, n=800), _trace(21, n=600)]
+    py = MultiHostDriver(mk()).run(traces)
+    rp = MultiHostReplay(mk()).run(traces)
+    assert py.elapsed_ticks == rp.elapsed_ticks
+    for a, b in zip(py.per_host, rp.per_host):
+        _assert_equal(a, b)
+
+
+# --------------------------------------------------------------- dispatch
+def test_driver_engine_dispatch():
+    trace = _trace(6)
+    py = TraceDriver(_mk("cxl-ssd-cache")).run(trace)
+    sc = TraceDriver(_mk("cxl-ssd-cache"), engine="scan").run(trace)
+    _assert_equal(py, sc)
+    with pytest.raises(ValueError):
+        TraceDriver(_mk("dram"), engine="warp")
+
+
+def test_driver_scan_falls_back_to_multihost_for_pool_views():
+    trace = _trace(7, n=800)
+    py = TraceDriver(_pool_views(1)[0]).run(trace)
+    rp = TraceDriver(_pool_views(1)[0], engine="scan").run(trace)
+    _assert_equal(py, rp)
+
+
+def test_multihost_driver_scan_engine():
+    traces = [_trace(30 + h, n=700) for h in range(4)]
+    py = MultiHostDriver(_pool_views()).run(traces)
+    rp = MultiHostDriver(_pool_views(), engine="scan").run(traces)
+    assert py.elapsed_ticks == rp.elapsed_ticks
+
+
+def test_unsupported_shapes_raise():
+    # 2Q policy has no vectorized form
+    dev = make_device("cxl-ssd-cache",
+                      cache_cfg=DRAMCacheConfig(policy="2q", **{
+                          k: v for k, v in CACHE_KW.items()}))
+    with pytest.raises(ReplayUnsupported):
+        ReplayEngine(dev).run(_trace(8, n=64))
+    # non-uniform access size
+    with pytest.raises(ReplayUnsupported):
+        ReplayEngine(_mk("dram")).run([(0, 64, False), (64, 128, False)])
+    # line-crossing access
+    with pytest.raises(ReplayUnsupported):
+        ReplayEngine(_mk("dram")).run([(32, 64, False)])
+    # used device (state would not match a fresh snapshot)
+    dev = _mk("dram")
+    dev.service(0, 0, 64, False)
+    with pytest.raises(ReplayUnsupported):
+        ReplayEngine(dev).run(_trace(8, n=64))
+
+
+def test_fabric_with_prior_traffic_raises():
+    """Shared ports carry busy-until state from other mounts; a zeroed
+    replay would silently diverge, so it must refuse instead."""
+    fab = Fabric.build("two_level", num_hosts=2, num_devices=2, num_leaves=1)
+    other = fab.mount("h0", "d0", DRAMDevice())
+    target = fab.mount("h1", "d1", DRAMDevice())
+    TraceDriver(other).run(_trace(70, n=64))     # dirties the shared spine
+    with pytest.raises(ReplayUnsupported):
+        ReplayEngine(target).run(_trace(71, n=64))
+
+
+def test_pallas_overflow_guard():
+    from repro.core.replay.pallas_engine import run_pallas
+
+    n = 12_000_000   # worst-case > 2^31 ns on the default timing model
+    with pytest.raises(ReplayUnsupported):
+        run_pallas(_mk("cxl-ssd-cache"), np.zeros(n, np.int64),
+                   np.zeros(n, bool))
+    # page ids past the kernel's int32 tag range must refuse, not collide
+    with pytest.raises(ReplayUnsupported):
+        run_pallas(_mk("cxl-ssd-cache"),
+                   np.asarray([(5 + 2**32) * 4096], np.int64),
+                   np.zeros(1, bool))
+
+
+# ------------------------------------------------------------------ pallas
+def test_pallas_engine_decisions_match_oracle():
+    from repro.core.cache.trace_sim import TraceCacheSim
+
+    trace = _trace(9)
+    pages = np.asarray([a // 4096 for a, _, _ in trace], np.int32)
+    writes = np.asarray([w for _, _, w in trace])
+    res = TraceDriver(_mk("cxl-ssd-cache"), engine="pallas").run(trace)
+    frames = CACHE_KW["capacity_bytes"] // 4096
+    hits, evicts, _ = TraceCacheSim(num_sets=1, ways=frames,
+                                    policy="lru").run(pages, writes)
+    assert (np.asarray(hits) == res.hit_flags).all()
+    assert (np.asarray(evicts) == res.evict_flags).all()
+
+
+def test_pallas_fused_kernel_matches_ref():
+    from repro.kernels.cache_sim import cache_sim_fused
+    from repro.kernels.ref import cache_sim_fused_ref
+
+    rng = np.random.default_rng(40)
+    pages = rng.integers(0, 256, 4000).astype(np.int32)
+    writes = rng.random(4000) < 0.4
+    kw = dict(num_sets=16, ways=4, policy="fifo", outstanding=4, issue_ns=3,
+              hit_ns=50, miss_ns=5213, miss_occ_ns=213, wb_ns=87)
+    h1, e1, l1, _ = cache_sim_fused(pages, writes, **kw)
+    h2, e2, l2 = cache_sim_fused_ref(pages, writes, **kw)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ------------------------------------------------------------------ sweeps
+def test_cache_design_sweep_lanes_match_single_runs():
+    from repro.core.replay.sweep import cache_design_sweep
+
+    rng = np.random.default_rng(41)
+    addrs = (rng.integers(0, 24, 1200) * 4096
+             + rng.integers(0, 64, 1200) * 64).astype(np.int64)
+    writes = rng.random(1200) < 0.3
+    caps = [4, 16, 8]
+    lrus = [True, False, True]
+    base = make_device("cxl-ssd-cache", cache_cfg=DRAMCacheConfig(
+        capacity_bytes=16 * 4096, mshr_entries=4, writeback_buffer=2))
+    out = cache_design_sweep(base, addrs, writes, capacity_frames=caps,
+                             is_lru=lrus)
+    for k, (c, l) in enumerate(zip(caps, lrus)):
+        cfg = DRAMCacheConfig(capacity_bytes=c * 4096,
+                              policy="lru" if l else "fifo",
+                              mshr_entries=4, writeback_buffer=2)
+        r = ReplayEngine(make_device("cxl-ssd-cache", cache_cfg=cfg)) \
+            .run_arrays(addrs, writes)
+        assert int(out["sum_latency_ticks"][k]) == r.sum_latency_ticks
+        assert (out["hit_flags"][k] == r.hit_flags).all()
+
+
+def test_host_count_sweep_matches_python_driver():
+    from repro.core.replay.sweep import host_count_sweep
+
+    traces = [_trace(50 + h, n=700) for h in range(4)]
+    lanes = host_count_sweep(_pool_views(), traces, [1, 2, 4])
+    for h, lane in zip([1, 2, 4], lanes):
+        py = MultiHostDriver(_pool_views(h)).run(traces[:h])
+        assert py.elapsed_ticks == lane.elapsed_ticks
+        for a, b in zip(py.per_host, lane.per_host[:h]):
+            _assert_equal(a, b)
+
+
+# --------------------------------------------------- property test (sat.)
+# Property tests need hypothesis (a dev extra); they skip cleanly when absent.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    # Fixed length + bounded page pool keeps one compiled program per device
+    # kind across all examples.
+    PAGES = st.lists(st.integers(0, 31), min_size=256, max_size=256)
+    WRITES = st.lists(st.booleans(), min_size=256, max_size=256)
+    OFFSETS = st.lists(st.integers(0, 63), min_size=256, max_size=256)
+
+    @settings(max_examples=8, deadline=None)
+    @given(pages=PAGES, writes=WRITES, offs=OFFSETS,
+           name=st.sampled_from(["dram", "cxl-dram", "pmem", "cxl-ssd",
+                                 "cxl-ssd-cache"]))
+    def test_property_scan_matches_python_all_configs(pages, writes, offs,
+                                                      name):
+        trace = [(p * 4096 + o * 64, 64, w)
+                 for p, o, w in zip(pages, offs, writes)]
+        py = TraceDriver(_mk(name), outstanding=4).run(trace)
+        rp = ReplayEngine(_mk(name), outstanding=4).run(trace)
+        _assert_equal(py, rp)
+
+
+# --------------------------------------------------------- CI smoke (sat.)
+@pytest.mark.slow
+def test_replay_smoke_all_engines():
+    """Benchmark smoke: tiny trace through all three engines.  scan must be
+    tick-exact; pallas must agree on hit/evict decisions with the cache
+    oracle.  (Gated behind the slow marker; CI runs it in a dedicated job.)"""
+    from repro.core.cache.trace_sim import TraceCacheSim
+
+    trace = _trace(60, n=512)
+    py = TraceDriver(_mk("cxl-ssd-cache")).run(trace)
+    sc = TraceDriver(_mk("cxl-ssd-cache"), engine="scan").run(trace)
+    _assert_equal(py, sc)
+    pl_res = TraceDriver(_mk("cxl-ssd-cache"), engine="pallas").run(trace)
+    pages = np.asarray([a // 4096 for a, _, _ in trace], np.int32)
+    writes = np.asarray([w for _, _, w in trace])
+    hits, _, _ = TraceCacheSim(num_sets=1,
+                               ways=CACHE_KW["capacity_bytes"] // 4096,
+                               policy="lru").run(pages, writes)
+    assert (np.asarray(hits) == pl_res.hit_flags).all()
