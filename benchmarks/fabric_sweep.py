@@ -1,28 +1,45 @@
-"""Fabric congestion / pooling sweep: per-host bandwidth across topologies
-and host counts, plus the vectorized congestion estimator's throughput.
+"""Fabric congestion / pooling / QoS / ECMP sweep.
+
+Per-host bandwidth across topologies and host counts, the weighted-QoS
+bandwidth split, the ECMP multipath uplift, and the vectorized congestion
+estimator's throughput.
+
+Determinism contract: every trace generator is explicitly seeded and all
+*simulated* metrics live in :func:`collect_derived`, a pure function of the
+configuration — two runs emit identical derived JSON (smoke-tested in
+``tests/test_benchmarks.py``), so BENCH comparisons across PRs compare
+simulation results, never wall-clock noise.  Wall-clock timings are
+reported separately in the harness CSV rows and under ``"timing"`` in
+``results/BENCH_fabric.json``.
 
 Rows follow the harness convention ``(name, us_per_call, derived)``:
 ``us_per_call`` is simulator wall-clock per datapoint, ``derived`` the
-simulated metric.  The headline result: on any shared-bottleneck topology,
-per-host bandwidth drops measurably as hosts are added, while a ``direct``
-private-link configuration scales flat — the fabric's reason to exist.
+simulated metric.  The headline results: on any shared-bottleneck topology
+per-host bandwidth drops as hosts are added while ``direct`` scales flat;
+3:1 QoS weights split a saturated port 3:1; and ECMP over parallel spines
+lifts aggregate bandwidth that deterministic single-path routing strands.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core.devices import DRAMDevice
-from repro.core.fabric import Fabric, MemoryPool, build_topology
+from repro.core.fabric import Fabric, MemoryPool
 from repro.core.workloads.driver import MultiHostDriver
 
 Row = Tuple[str, float, str]
 
 ACCESSES_PER_HOST = 20_000
 LINE = 64
+TRACE_SEED = 20_250_731     # explicit: BENCH numbers must not drift across runs
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                        "BENCH_fabric.json")
 
 # (tag, topology kind, kwargs builder) — every fabric shape the subsystem
 # supports, each sharing one pooled device unless noted.
@@ -31,17 +48,103 @@ SWEEP = [
     ("star", "single_switch", lambda nh: dict(num_hosts=nh, num_devices=1)),
     ("tree2", "two_level", lambda nh: dict(num_hosts=nh, num_devices=1,
                                            num_leaves=max(1, nh // 2))),
+    ("spine", "spine_leaf", lambda nh: dict(num_hosts=nh, num_devices=1,
+                                            num_leaves=max(1, nh // 2),
+                                            num_spines=2)),
     ("mesh", "mesh", lambda nh: dict(num_hosts=nh, num_devices=1,
                                      rows=2, cols=2)),
 ]
 HOST_COUNTS = [1, 2, 4]
+QOS_WEIGHTS = {"h0": 3.0, "h1": 1.0}
 
 
-def _stream_trace(host: int, n: int = ACCESSES_PER_HOST):
+def _stream_trace(host: int, n: int = ACCESSES_PER_HOST,
+                  seed: int = TRACE_SEED):
+    """Streaming reads with a seeded pseudo-random write mix — explicitly
+    seeded per host so every invocation replays the identical trace."""
+    rng = np.random.default_rng(seed + host)
+    writes = rng.random(n) < 0.25
     base = host << 30
-    return [(base + i * LINE, LINE, i % 4 == 0) for i in range(n)]
+    return [(base + i * LINE, LINE, bool(w)) for i, w in enumerate(writes)]
 
 
+# ------------------------------------------------------- scenario builders
+# One definition per scenario, shared by the timed CSV rows AND the
+# deterministic derived JSON — the two halves of BENCH_fabric.json must
+# describe the same configuration or cross-PR comparison lies.
+def _qos_scenario(weights):
+    fab = Fabric.build("single_switch", num_hosts=2, num_devices=1,
+                       qos_weights=weights)
+    pool = MemoryPool(fab, {"d0": DRAMDevice()})
+    return fab, pool.views(["h0", "h1"])
+
+
+def _ecmp_scenario(ecmp: bool):
+    fab = Fabric.build("spine_leaf", num_hosts=2, num_devices=2,
+                       num_leaves=2, num_spines=2, uplink_bw_gbps=8.0,
+                       ecmp=ecmp)
+    pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+    return fab, pool.views(["h0", "h1"])
+
+
+def _run_two_hosts(views, accesses: int):
+    return MultiHostDriver(views).run(
+        [_stream_trace(h, accesses) for h in range(2)])
+
+
+# ---------------------------------------------------------------- derived
+def _run_pooled(fab: Fabric, nh: int, accesses: int, tag: str):
+    if tag == "direct":
+        # Private link per host: one device per pair, no sharing.
+        views = [fab.mount(f"h{i}", f"d{i}", DRAMDevice())
+                 for i in range(nh)]
+    else:
+        pool = MemoryPool(fab, {"d0": DRAMDevice()})
+        views = pool.views([f"h{i}" for i in range(nh)])
+    return MultiHostDriver(views).run(
+        [_stream_trace(h, accesses) for h in range(nh)])
+
+
+def collect_derived(accesses: int = ACCESSES_PER_HOST,
+                    host_counts: List[int] = HOST_COUNTS) -> Dict:
+    """Every simulated metric of the sweep, as a pure deterministic function
+    of the configuration.  Two calls return identical structures — the
+    determinism smoke test asserts exactly that."""
+    out: Dict = {"accesses_per_host": accesses, "trace_seed": TRACE_SEED,
+                 "topologies": {}, "qos": {}, "ecmp": {}}
+    for tag, kind, kw in SWEEP:
+        for nh in host_counts:
+            res = _run_pooled(Fabric.build(kind, **kw(nh)), nh, accesses, tag)
+            out["topologies"][f"{tag}/hosts{nh}"] = {
+                "min_host_gbps": round(res.min_host_bandwidth_gbps, 6),
+                "aggregate_gbps": round(res.aggregate_bandwidth_gbps, 6),
+            }
+
+    # QoS: 3:1 weights on a saturated star port vs unweighted FCFS
+    for label, weights in (("fcfs", None), ("qos3to1", QOS_WEIGHTS)):
+        _, views = _qos_scenario(weights)
+        res = _run_two_hosts(views, accesses)
+        out["qos"][label] = {
+            "own_window_gbps": [round(r.bandwidth_gbps, 6)
+                                for r in res.per_host],
+            "end_ticks": [r.end_tick for r in res.per_host],
+            "aggregate_gbps": round(res.aggregate_bandwidth_gbps, 6),
+        }
+
+    # ECMP: thin uplinks make the spine tier the bottleneck; multipath
+    # reclaims the parallel links single-path routing strands
+    for label, ecmp in (("single_path", False), ("ecmp", True)):
+        fab, views = _ecmp_scenario(ecmp)
+        res = _run_two_hosts(views, accesses)
+        out["ecmp"][label] = {
+            "aggregate_gbps": round(res.aggregate_bandwidth_gbps, 6),
+            "spine_bytes": {s: fab.ports[("s0", s)].bytes
+                            for s in ("sp0", "sp1")},
+        }
+    return out
+
+
+# ------------------------------------------------------------------ rows
 def bench_fabric_sweep() -> List[Row]:
     """Per-host bandwidth for every topology x host count."""
     rows: List[Row] = []
@@ -49,15 +152,7 @@ def bench_fabric_sweep() -> List[Row]:
         for nh in HOST_COUNTS:
             fab = Fabric.build(kind, **kw(nh))
             t0 = time.perf_counter()
-            if tag == "direct":
-                # Private link per host: one device per pair, no sharing.
-                views = [fab.mount(f"h{i}", f"d{i}", DRAMDevice())
-                         for i in range(nh)]
-            else:
-                pool = MemoryPool(fab, {"d0": DRAMDevice()})
-                views = pool.views([f"h{i}" for i in range(nh)])
-            res = MultiHostDriver(views).run(
-                [_stream_trace(h) for h in range(nh)])
+            res = _run_pooled(fab, nh, ACCESSES_PER_HOST, tag)
             wall = (time.perf_counter() - t0) * 1e6
             per_host = res.min_host_bandwidth_gbps
             rows.append((
@@ -65,6 +160,37 @@ def bench_fabric_sweep() -> List[Row]:
                 wall / (nh * ACCESSES_PER_HOST),
                 f"{per_host:.2f}GB/s/host,agg={res.aggregate_bandwidth_gbps:.2f}GB/s",
             ))
+    return rows
+
+
+def bench_qos_split() -> List[Row]:
+    """Weighted arbitration on a saturated shared port: own-window
+    bandwidth per host under 3:1 weights vs FCFS."""
+    rows: List[Row] = []
+    for label, weights in (("fcfs", None), ("qos3to1", QOS_WEIGHTS)):
+        _, views = _qos_scenario(weights)
+        t0 = time.perf_counter()
+        res = _run_two_hosts(views, ACCESSES_PER_HOST)
+        wall = (time.perf_counter() - t0) * 1e6
+        bw = [r.bandwidth_gbps for r in res.per_host]
+        rows.append((f"fabric/qos/{label}",
+                     wall / (2 * ACCESSES_PER_HOST),
+                     f"h0={bw[0]:.2f}GB/s,h1={bw[1]:.2f}GB/s"))
+    return rows
+
+
+def bench_ecmp_uplift() -> List[Row]:
+    """Single deterministic path vs ECMP over two spines (8 GB/s uplinks:
+    the spine tier is the bottleneck, so stranded links show directly)."""
+    rows: List[Row] = []
+    for label, ecmp in (("single_path", False), ("ecmp", True)):
+        _, views = _ecmp_scenario(ecmp)
+        t0 = time.perf_counter()
+        res = _run_two_hosts(views, ACCESSES_PER_HOST)
+        wall = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fabric/ecmp/{label}",
+                     wall / (2 * ACCESSES_PER_HOST),
+                     f"agg={res.aggregate_bandwidth_gbps:.2f}GB/s"))
     return rows
 
 
@@ -131,11 +257,52 @@ def bench_fabric_fused_host_sweep() -> List[Row]:
     return rows
 
 
-ALL = [bench_fabric_sweep, bench_congestion_estimator, bench_fabric_fused_host_sweep]
+def bench_fused_qos_ecmp_exact() -> List[Row]:
+    """QoS + ECMP through the fused multi-host scan, asserted tick-identical
+    to the interpreted driver — the BENCH-level conformance bit."""
+    from repro.core.replay import MultiHostReplay
+
+    def mk():
+        fab = Fabric.build("spine_leaf", num_hosts=2, num_devices=2,
+                           num_leaves=2, num_spines=2, ecmp=True,
+                           qos_weights=QOS_WEIGHTS)
+        pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+        return pool.views(["h0", "h1"])
+
+    traces = [_stream_trace(h, 10_000) for h in range(2)]
+    py = MultiHostDriver(mk()).run(traces)
+    MultiHostReplay(mk()).run(traces)                # compile + warm
+    t0 = time.perf_counter()
+    rp = MultiHostReplay(mk()).run(traces)
+    wall = time.perf_counter() - t0
+    exact = py.elapsed_ticks == rp.elapsed_ticks and all(
+        a.sum_latency_ticks == b.sum_latency_ticks
+        for a, b in zip(py.per_host, rp.per_host))
+    assert exact, "fused QoS+ECMP replay diverged from the interpreted driver"
+    return [("fabric/fused/qos_ecmp", wall * 1e6 / 20_000,
+             f"agg={rp.aggregate_bandwidth_gbps:.2f}GB/s,exact={exact}")]
+
+
+ALL = [bench_fabric_sweep, bench_qos_split, bench_ecmp_uplift,
+       bench_congestion_estimator, bench_fabric_fused_host_sweep,
+       bench_fused_qos_ecmp_exact]
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
+    timing = []
     for fn in ALL:
         for name, us_per_call, derived in fn():
+            timing.append({"name": name, "us_per_call": round(us_per_call, 2),
+                           "derived": derived})
             print(f"{name},{us_per_call:.2f},{derived}")
+    # collect_derived re-simulates the scenarios the timed rows just ran —
+    # intentional: the derived JSON must come from the one pure, seeded
+    # entry point the determinism smoke test exercises, uncoupled from the
+    # timing harness (costs ~2x wall on a benchmark that runs offline).
+    report = {"derived": collect_derived(), "timing": timing}
+    os.makedirs(os.path.dirname(os.path.abspath(OUT_JSON)), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(OUT_JSON)}")

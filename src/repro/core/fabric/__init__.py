@@ -12,7 +12,7 @@ The vectorized congestion estimator lives in
 
 from repro.core.fabric.fabric import Fabric, FabricAttachedDevice
 from repro.core.fabric.pool import HostPortView, MemoryPool, PoolAddressMapper
-from repro.core.fabric.routing import RoutingTable
+from repro.core.fabric.routing import RoutingTable, flow_choices, flow_hash
 from repro.core.fabric.switch import SwitchPort
 from repro.core.fabric.topology import (
     TOPOLOGY_BUILDERS,
@@ -21,13 +21,14 @@ from repro.core.fabric.topology import (
     direct,
     mesh,
     single_switch,
+    spine_leaf,
     two_level,
 )
 
 __all__ = [
     "Fabric", "FabricAttachedDevice",
     "MemoryPool", "HostPortView", "PoolAddressMapper",
-    "RoutingTable", "SwitchPort",
+    "RoutingTable", "SwitchPort", "flow_hash", "flow_choices",
     "Topology", "build_topology", "TOPOLOGY_BUILDERS",
-    "direct", "single_switch", "two_level", "mesh",
+    "direct", "single_switch", "two_level", "spine_leaf", "mesh",
 ]

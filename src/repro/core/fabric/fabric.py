@@ -8,6 +8,15 @@ with per-port occupancy and per-switch store-and-forward latency.  On a
 timing *exactly* (tested), so mounting a device behind the fabric is a
 strict generalization of the paper's point-to-point configuration.
 
+Two scheduling/routing refinements are opt-in:
+
+* ``qos_weights`` — per-host weighted virtual-finish-time arbitration on
+  every port (see :class:`~repro.core.fabric.switch.SwitchPort`); all-equal
+  weights keep the exact FCFS discipline.
+* ``ecmp=True`` — per-access load balancing over *all* equal-cost shortest
+  paths, selected by a deterministic flow hash over
+  ``(src, dst, line_addr)`` (see :mod:`repro.core.fabric.routing`).
+
 :class:`FabricAttachedDevice` composes the fabric with any existing
 :class:`~repro.core.devices.MemDevice` unchanged: fabric transport first,
 then the device's own media timing.  Devices that embed a private
@@ -28,6 +37,7 @@ from repro.core.fabric.topology import SWITCH, Topology, build_topology
 
 DEFAULT_FORWARD_NS = 35.0    # per-switch store-and-forward latency
 DEFAULT_RT_EXTRA_NS = 50.0   # Table I: total CXL.mem network round-trip extra
+LINE_BYTES = 64              # flow-hash granularity: one cache line
 
 
 class Fabric:
@@ -35,38 +45,91 @@ class Fabric:
 
     def __init__(self, topology: Topology,
                  forward_ns: float = DEFAULT_FORWARD_NS,
-                 rt_extra_ns: float = DEFAULT_RT_EXTRA_NS) -> None:
+                 rt_extra_ns: float = DEFAULT_RT_EXTRA_NS,
+                 ecmp: bool = False,
+                 qos_weights: Optional[Dict[str, float]] = None) -> None:
         topology.validate()
         self.topology = topology
         self.routing = RoutingTable(topology)
         self.forward_ns = forward_ns
         self.rt_extra_ns = rt_extra_ns
+        self.ecmp = ecmp
         self.ports: Dict[Tuple[str, str], SwitchPort] = {
             (u, v): SwitchPort(u, v, spec.bw_gbps, spec.prop_ns)
             for (u, v), spec in topology.links.items()
         }
+        if qos_weights:
+            self.set_qos_weights(qos_weights)
         self.stats = {"transfers": 0, "bytes": 0}
 
     @classmethod
     def build(cls, kind: str, *, forward_ns: float = DEFAULT_FORWARD_NS,
-              rt_extra_ns: float = DEFAULT_RT_EXTRA_NS, **topo_kwargs) -> "Fabric":
+              rt_extra_ns: float = DEFAULT_RT_EXTRA_NS, ecmp: bool = False,
+              qos_weights: Optional[Dict[str, float]] = None,
+              **topo_kwargs) -> "Fabric":
         return cls(build_topology(kind, **topo_kwargs),
-                   forward_ns=forward_ns, rt_extra_ns=rt_extra_ns)
+                   forward_ns=forward_ns, rt_extra_ns=rt_extra_ns,
+                   ecmp=ecmp, qos_weights=qos_weights)
+
+    # ---------------------------------------------------------------- QoS
+    def set_qos_weights(self, weights: Dict[str, float]) -> None:
+        """Install per-origin weights on every port.  Every host of the
+        topology must be weighted explicitly — the all-equal-weights FCFS
+        shortcut looks only at configured values, so a partially-configured
+        map like ``{"h0": 2, "h1": 2}`` on a three-host fabric would
+        silently drop the implied 2:2:1 split.  Configure before any
+        traffic: the fused replay snapshots a fresh fabric, and mid-run
+        weight changes are not part of the modeled discipline."""
+        if getattr(self, "stats", {}).get("transfers", 0):
+            raise ValueError("set QoS weights before the fabric carries "
+                             "traffic (or Fabric.reset() first)")
+        hosts = set(self.topology.hosts)
+        missing = sorted(hosts - set(weights))
+        unknown = sorted(set(weights) - hosts)
+        if missing or unknown:
+            raise ValueError(
+                f"QoS weights must name every host exactly once "
+                f"(missing: {missing or 'none'}, not a host: "
+                f"{unknown or 'none'})")
+        for port in self.ports.values():
+            port.set_weights(weights)
+
+    @property
+    def qos_enabled(self) -> bool:
+        return any(p.qos_enabled for p in self.ports.values())
 
     # ------------------------------------------------------------ transport
     def path(self, src: str, dst: str) -> List[str]:
         return self.routing.path(src, dst)
 
-    def route_occupancy(self, src: str, dst: str,
-                        nbytes: int) -> List[Tuple[Tuple[str, str], int, int]]:
+    def paths(self, src: str, dst: str) -> List[List[str]]:
+        """The ECMP path set actually used for ``src -> dst``: all
+        equal-cost shortest paths when ECMP is on, else the primary path."""
+        if self.ecmp:
+            return self.routing.paths(src, dst)
+        return [self.routing.path(src, dst)]
+
+    def select_path(self, src: str, dst: str,
+                    line_addr: Optional[int]) -> List[str]:
+        if self.ecmp and line_addr is not None:
+            return self.routing.select(src, dst, line_addr)
+        return self.routing.path(src, dst)
+
+    def route_occupancy(self, src: str, dst: str, nbytes: int,
+                        choice: Optional[int] = None
+                        ) -> List[Tuple[Tuple[str, str], int, int]]:
         """Tensor export of :meth:`traverse`'s per-hop timing for ``nbytes``:
         one ``(port_key, occ_ticks, after_ticks)`` triple per hop, where
         ``after`` folds propagation plus the per-switch store-and-forward
         latency, each rounded separately with ``ns()`` exactly as
-        :meth:`traverse` does.  The fused replay engines build their route
-        tensors from this single definition so the busy-until rule cannot
-        drift between the interpreted and vectorized paths."""
-        path = self.routing.path(src, dst)
+        :meth:`traverse` does.  ``choice`` picks a route from the ECMP path
+        set (default: the primary path).  The fused replay engines build
+        their route tensors from this single definition so the busy-until
+        rule cannot drift between the interpreted and vectorized paths."""
+        if choice is None:
+            path = self.routing.path(src, dst)
+        else:
+            path = self.paths(src, dst)[choice]
         hops = []
         for u, v in zip(path, path[1:]):
             port = self.ports[(u, v)]
@@ -76,19 +139,39 @@ class Fabric:
             hops.append(((u, v), port.occ_ticks(nbytes), after))
         return hops
 
-    def traverse(self, now: int, src: str, dst: str, nbytes: int) -> int:
-        """Carry ``nbytes`` from ``src`` to ``dst``; returns the completion
-        tick (arrival + round-trip extra), queueing on every port's
-        busy-until along the route."""
-        path = self.routing.path(src, dst)
+    def traverse_qos(self, now: int, src: str, dst: str, nbytes: int,
+                     line_addr: Optional[int] = None) -> Tuple[int, int]:
+        """Carry ``nbytes`` from ``src`` to ``dst``.  Returns ``(arrival,
+        ack_floor)``: the physical completion tick (arrival + round-trip
+        extra, queueing on every port's busy-until along the route — the
+        data path is pure FCFS, identical with or without QoS) and the
+        weighted-arbitration floor on the *final host acknowledgment*
+        (0 when no port regulates this origin).  Callers must apply the
+        floor after media service, never to the data path — a floored
+        timestamp fed into shared busy-until state would block other
+        hosts' earlier traffic.  ``line_addr`` keys the ECMP flow hash
+        (ignored unless the fabric was built with ``ecmp=True``)."""
+        path = self.select_path(src, dst, line_addr)
         t = now
+        floor = 0
         for u, v in zip(path, path[1:]):
-            t = self.ports[(u, v)].transmit(t, nbytes, origin=src)
+            port = self.ports[(u, v)]
+            if port.qos_enabled:
+                floor = max(floor, port.qos_update(t, nbytes, src))
+            t = port.transmit(t, nbytes, origin=src)
             if self.topology.kind(v) == SWITCH:
                 t += ns(self.forward_ns)
         self.stats["transfers"] += 1
         self.stats["bytes"] += nbytes
-        return t + ns(self.rt_extra_ns)
+        return t + ns(self.rt_extra_ns), floor
+
+    def traverse(self, now: int, src: str, dst: str, nbytes: int,
+                 line_addr: Optional[int] = None) -> int:
+        """The :meth:`traverse_qos` physical arrival tick alone — the exact
+        :meth:`CXLLink.traverse` contract.  QoS-floored mounts go through
+        :meth:`traverse_qos` (the floor binds the host ack, not the data
+        arrival this returns)."""
+        return self.traverse_qos(now, src, dst, nbytes, line_addr)[0]
 
     # ------------------------------------------------------------ mounting
     def mount(self, host: str, device_node: str, device: MemDevice,
@@ -102,22 +185,30 @@ class Fabric:
         """Per-port traffic/occupancy summary, sorted by bytes desc then name
         (deterministic).  ``utilization`` is the fraction of the elapsed
         window the port spent serializing; ``bytes_by_host`` attributes the
-        port's traffic to the originating endpoints (QoS groundwork — the
-        scheduling itself stays FCFS)."""
-        rows = [{
-            "port": f"{p.src}->{p.dst}",
-            "bytes": p.bytes,
-            "packets": p.packets,
-            "utilization": p.utilization(elapsed_ticks),
-            "achieved_gbps": p.achieved_gbps(elapsed_ticks),
-            "queued_ticks": p.queued_ticks,
-            "bytes_by_host": dict(sorted(p.bytes_by_origin.items())),
-        } for p in self.ports.values() if p.packets]
+        port's traffic to the originating endpoints; ``qos_weights`` echoes
+        the arbitration weights when weighted scheduling is active."""
+        rows = []
+        for p in self.ports.values():
+            if not p.packets:
+                continue
+            row = {
+                "port": f"{p.src}->{p.dst}",
+                "bytes": p.bytes,
+                "packets": p.packets,
+                "utilization": p.utilization(elapsed_ticks),
+                "achieved_gbps": p.achieved_gbps(elapsed_ticks),
+                "queued_ticks": p.queued_ticks,
+                "bytes_by_host": dict(sorted(p.bytes_by_origin.items())),
+            }
+            if p.qos_enabled:
+                row["qos_weights"] = dict(sorted(p.weight_by_origin.items()))
+            rows.append(row)
         rows.sort(key=lambda r: (-r["bytes"], r["port"]))
         return rows
 
     def bottleneck_port(self, src: str, dst: str) -> SwitchPort:
-        """The minimum-bandwidth port along the route (first on ties)."""
+        """The minimum-bandwidth port along the primary route (first on
+        ties)."""
         path = self.routing.path(src, dst)
         hops = [self.ports[(u, v)] for u, v in zip(path, path[1:])]
         return min(hops, key=lambda p: p.bw_gbps)
@@ -157,5 +248,7 @@ class FabricAttachedDevice(MemDevice):
     def service(self, now: int, addr: int, size: int, write: bool,
                 posted: bool = False) -> int:
         self._count(size, write)
-        t = self.fabric.traverse(now, self.host, self.device_node, size)
-        return self.inner.service(t, addr, size, write, posted)
+        t, floor = self.fabric.traverse_qos(now, self.host, self.device_node,
+                                            size,
+                                            line_addr=addr // LINE_BYTES)
+        return max(self.inner.service(t, addr, size, write, posted), floor)

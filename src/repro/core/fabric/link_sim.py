@@ -8,9 +8,12 @@ estimate that JIT-compiles and vmaps.  The model here is fluid-flow:
 1. every access is attributed to its (host, device) pair;
 2. per-pair bytes are reduced with ``jax.ops.segment_sum`` (one segment per
    pair — the trace can be millions of accesses);
-3. per-*link* bytes come from a static 0/1 route-membership matrix ``R``
-   (pairs x links), computed once from the routing table: ``link_bytes =
-   R.T @ pair_bytes``;
+3. per-*link* bytes come from a static route-weight matrix ``R`` (pairs x
+   links), computed once from the routing table: ``link_bytes = R.T @
+   pair_bytes``.  On an ECMP fabric each of a pair's equal-cost paths
+   carries weight ``1/K`` (the flow hash spreads uniformly in
+   expectation), so shared first/last hops accumulate back to 1 and the
+   spine tier splits — matching the exact replay's spreading;
 4. link utilization = link_bytes / (bw x window); a pair's congestion
    factor is the max utilization along its route, and its predicted
    throughput scales by ``1 / max(1, congestion)``.
@@ -47,10 +50,13 @@ class LinkCongestionSim:
         routes = np.zeros((n_pairs, len(self.link_names)), dtype=np.float32)
         for hi, h in enumerate(self.hosts):
             for di, d in enumerate(self.device_nodes):
-                path = fabric.routing.path(h, d)
-                for u, v in zip(path, path[1:]):
-                    routes[hi * len(self.device_nodes) + di,
-                           link_index[f"{u}->{v}"]] = 1.0
+                # ECMP-aware: fabric.paths is the path set actually routed
+                # ([primary] when ecmp is off); each path carries 1/K.
+                paths = fabric.paths(h, d)
+                for path in paths:
+                    for u, v in zip(path, path[1:]):
+                        routes[hi * len(self.device_nodes) + di,
+                               link_index[f"{u}->{v}"]] += 1.0 / len(paths)
         self.routes = jnp.asarray(routes)                       # (P, L)
         self.link_bw_bytes_per_s = jnp.asarray(
             [fabric.ports[tuple(name.split("->"))].bw_gbps * 1e9
@@ -104,7 +110,10 @@ def _estimate(pair_ids: jnp.ndarray, nbytes: jnp.ndarray, routes: jnp.ndarray,
     pair_bytes = jax.ops.segment_sum(nbytes, pair_ids, num_segments=n_pairs)
     link_bytes = routes.T @ pair_bytes                          # (L,)
     util = link_bytes / (link_bw_bytes_per_s * window_s)
-    # A pair is slowed by its most-congested link; utilization <= 1 is free.
-    pair_congestion = jnp.max(routes * util[None, :], axis=1)
+    # A pair is slowed by its most-congested link; utilization <= 1 is
+    # free.  Membership (routes > 0), not the fractional ECMP weight,
+    # selects which links can slow a pair.
+    pair_congestion = jnp.max(
+        jnp.where(routes > 0, util[None, :], 0.0), axis=1)
     slowdown = jnp.maximum(1.0, pair_congestion)
     return util, slowdown, pair_bytes

@@ -22,7 +22,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.devices import MemDevice
-from repro.core.fabric.fabric import Fabric
+from repro.core.fabric.fabric import Fabric, LINE_BYTES
 
 DEFAULT_GRANULARITY = 4096   # one flash/DRAM-cache page
 
@@ -112,5 +112,10 @@ class HostPortView(MemDevice):
         self._count(size, write)
         dev_idx, local = self.pool.mapper.map(addr)
         node = self.pool.device_nodes[dev_idx]
-        t = self.pool.fabric.traverse(now, self.host, node, size)
-        return self.pool.devices[dev_idx].service(t, local, size, write, posted)
+        # ECMP flow key: the device-local line address — the same value the
+        # fused replay hashes host-side after applying the pool mapper.
+        t, floor = self.pool.fabric.traverse_qos(now, self.host, node, size,
+                                                 line_addr=local // LINE_BYTES)
+        done = self.pool.devices[dev_idx].service(t, local, size, write,
+                                                  posted)
+        return max(done, floor)

@@ -1,10 +1,17 @@
-"""Shortest-path routing over a fabric topology.
+"""Shortest-path routing over a fabric topology, with optional ECMP.
 
-Paths are computed by Dijkstra over hop count with *deterministic
-tie-breaking*: among equal-length paths the lexicographically smallest node
-sequence wins (the heap orders candidates by ``(hops, path_tuple)``).  Two
+Paths are computed over hop count with *deterministic tie-breaking*: among
+equal-length paths the lexicographically smallest node sequence wins.  Two
 runs of the same scenario therefore route identically — a property the
 equivalence tests and the vectorized congestion estimator both rely on.
+
+:meth:`RoutingTable.paths` enumerates *all* equal-cost shortest paths
+(lexicographically ordered, so ``paths(...)[0] == path(...)``), which is the
+ECMP path set.  :func:`flow_hash` / :func:`flow_choices` map a flow key
+``(src, dst, line_addr)`` onto that set deterministically: pure mod-2^64
+integer arithmetic (FNV-1a pair salt + splitmix64 finalizer), so the scalar
+per-access Python path and the vectorized numpy export used by the fused
+replay agree bit-for-bit.
 
 Only switches relay traffic; hosts and devices are endpoints.  Routes are
 cached per ``(src, dst)`` under the assumption that the topology is static
@@ -13,52 +20,145 @@ once a :class:`~repro.core.fabric.fabric.Fabric` is built.
 
 from __future__ import annotations
 
-import heapq
+from collections import deque
 from typing import Dict, List, Tuple
 
+import numpy as np
+
 from repro.core.fabric.topology import SWITCH, Topology
+
+# Keep the ECMP fan-out bounded on dense graphs (a large mesh has a
+# combinatorial number of equal-cost paths).  The lexicographically smallest
+# MAX_ECMP_PATHS are retained — deterministic, and a superset is never
+# needed because selection hashes into the retained list.
+MAX_ECMP_PATHS = 16
+
+_M64 = (1 << 64) - 1
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def pair_salt(src: str, dst: str) -> int:
+    """FNV-1a over ``"src->dst"`` — the per-flow-pair hash salt."""
+    h = _FNV_OFFSET
+    for b in f"{src}->{dst}".encode():
+        h = ((h ^ b) * _FNV_PRIME) & _M64
+    return h
+
+
+def flow_hash(src: str, dst: str, line_addr: int) -> int:
+    """Deterministic 64-bit flow hash over ``(src, dst, line_addr)``.
+
+    splitmix64 finalizer over the line address xor'd with the pair salt.
+    Stable across runs and processes (never Python's randomized ``hash``).
+    """
+    x = (int(line_addr) ^ pair_salt(src, dst)) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
+
+def flow_choices(src: str, dst: str, line_addrs: np.ndarray,
+                 num_paths: int) -> np.ndarray:
+    """Vectorized ``flow_hash(...) % num_paths`` for a line-address array.
+
+    numpy uint64 arithmetic wraps mod 2^64, matching the scalar
+    :func:`flow_hash` exactly — the fused replay precomputes its per-access
+    route-choice column with this, so it cannot drift from the interpreted
+    per-access path.
+    """
+    if num_paths <= 1:
+        return np.zeros(np.asarray(line_addrs).shape, np.int32)
+    x = np.asarray(line_addrs).astype(np.uint64)
+    x = x ^ np.uint64(pair_salt(src, dst))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x % np.uint64(num_paths)).astype(np.int32)
 
 
 class RoutingTable:
     def __init__(self, topology: Topology) -> None:
         self.topology = topology
-        self._cache: Dict[Tuple[str, str], List[str]] = {}
+        self._cache: Dict[Tuple[str, str], List[List[str]]] = {}
 
-    def path(self, src: str, dst: str) -> List[str]:
-        """Node sequence ``[src, ..., dst]``; raises if unreachable."""
+    def paths(self, src: str, dst: str) -> List[List[str]]:
+        """All equal-cost shortest node sequences ``[src, ..., dst]``,
+        lexicographically ordered (capped at :data:`MAX_ECMP_PATHS`);
+        raises if unreachable."""
         key = (src, dst)
         cached = self._cache.get(key)
         if cached is None:
-            cached = self._cache[key] = _shortest_path(self.topology, src, dst)
+            cached = self._cache[key] = _all_shortest_paths(
+                self.topology, src, dst)
         return cached
+
+    def path(self, src: str, dst: str) -> List[str]:
+        """The primary (lexicographically smallest shortest) path."""
+        return self.paths(src, dst)[0]
+
+    def num_paths(self, src: str, dst: str) -> int:
+        return len(self.paths(src, dst))
+
+    def select(self, src: str, dst: str, line_addr: int) -> List[str]:
+        """ECMP selection: hash ``(src, dst, line_addr)`` onto the
+        equal-cost path set.  With a single shortest path this is exactly
+        :meth:`path`."""
+        paths = self.paths(src, dst)
+        if len(paths) == 1:
+            return paths[0]
+        return paths[flow_hash(src, dst, line_addr) % len(paths)]
 
     def hops(self, src: str, dst: str) -> int:
         return len(self.path(src, dst)) - 1
 
 
-def _shortest_path(topo: Topology, src: str, dst: str) -> List[str]:
+def _all_shortest_paths(topo: Topology, src: str, dst: str) -> List[List[str]]:
+    """Lazily enumerate equal-cost shortest paths in lexicographic order.
+
+    A reverse BFS from ``dst`` over the relay-constrained graph labels
+    every node with its shortest remaining distance; a forward DFS from
+    ``src`` then walks only distance-decreasing edges, visiting candidates
+    in sorted order — so paths stream out lexicographically (the first one
+    reproduces the seed Dijkstra tie-break exactly) and generation stops at
+    :data:`MAX_ECMP_PATHS` without materializing the combinatorial path
+    set a dense mesh would otherwise produce."""
     if src == dst:
         raise ValueError(f"src == dst ({src!r})")
     for node in (src, dst):
         if node not in topo.kinds:
             raise ValueError(f"unknown node {node!r}")
-    # (hops, path) heap: equal hop counts resolve to the lexicographically
-    # smallest path, making routing deterministic across runs.
-    heap: List[Tuple[int, Tuple[str, ...]]] = [(0, (src,))]
-    settled = set()
-    while heap:
-        hops, path = heapq.heappop(heap)
-        node = path[-1]
-        if node == dst:
-            return list(path)
-        if node in settled:
+    # dist_d[v]: hops from v to dst relaying only through switches.
+    dist_d = {dst: 0}
+    queue = deque([dst])
+    while queue:
+        node = queue.popleft()
+        # Endpoints never relay: expand through switches (or dst itself).
+        if node != dst and topo.kind(node) != SWITCH:
             continue
-        settled.add(node)
         for nxt in topo.neighbors(node):
-            if nxt in settled:
-                continue
-            # Endpoints never relay: expand through switches, or stop at dst.
+            if nxt not in dist_d:
+                dist_d[nxt] = dist_d[node] + 1
+                queue.append(nxt)
+    if src not in dist_d:
+        raise ValueError(f"no path from {src!r} to {dst!r}")
+
+    paths: List[List[str]] = []
+    prefix = [src]
+
+    def walk(node: str) -> None:
+        if len(paths) >= MAX_ECMP_PATHS:
+            return
+        if node == dst:
+            paths.append(list(prefix))
+            return
+        for nxt in topo.neighbors(node):        # adjacency is kept sorted
             if nxt != dst and topo.kind(nxt) != SWITCH:
                 continue
-            heapq.heappush(heap, (hops + 1, path + (nxt,)))
-    raise ValueError(f"no path from {src!r} to {dst!r}")
+            if dist_d.get(nxt, -1) == dist_d[node] - 1:
+                prefix.append(nxt)
+                walk(nxt)
+                prefix.pop()
+
+    walk(src)
+    return paths

@@ -13,6 +13,9 @@ Builders cover the shapes evaluated in multi-host CXL studies
                    timing exactly)
 ``single_switch``  all hosts and devices on one switch (star)
 ``two_level``      leaf switches holding hosts, root switch holding devices
+``spine_leaf``     two-tier Clos (every leaf uplinks to every spine) — the
+                   canonical ECMP shape: ``num_spines`` equal-cost paths
+                   between endpoints on different leaves
 ``mesh``           2-D grid of switches, hosts/devices attached round-robin
 
 Node names are ``h<i>`` (hosts), ``s<i>`` / ``s<r>_<c>`` (switches), and
@@ -172,6 +175,35 @@ def two_level(num_hosts: int, num_devices: int, num_leaves: int = 2,
     return topo
 
 
+def spine_leaf(num_hosts: int, num_devices: int, num_leaves: int = 2,
+               num_spines: int = 2, bw_gbps: float = DEFAULT_LINK_BW_GBPS,
+               uplink_bw_gbps: float | None = None) -> Topology:
+    """Two-tier Clos: every leaf uplinks to every spine, hosts round-robin
+    onto the first leaves, devices round-robin onto the last ones.  Any
+    host->device pair on different leaves has ``num_spines`` equal-cost
+    paths — the canonical ECMP shape (with ECMP off, deterministic
+    single-path routing leaves all but one spine idle)."""
+    _check_counts(num_hosts, num_devices)
+    if num_leaves < 1 or num_spines < 1:
+        raise ValueError("spine_leaf needs at least one leaf and one spine")
+    topo = Topology(name="spine_leaf")
+    spines = [topo.add_switch(f"sp{i}") for i in range(num_spines)]
+    leaves = [topo.add_switch(f"s{i}") for i in range(num_leaves)]
+    up = uplink_bw_gbps if uplink_bw_gbps is not None else bw_gbps
+    for leaf in leaves:
+        for spine in spines:
+            topo.connect(leaf, spine, bw_gbps=up)
+    for i in range(num_hosts):
+        topo.connect(topo.add_host(f"h{i}"), leaves[i % num_leaves],
+                     bw_gbps=bw_gbps)
+    for i in range(num_devices):
+        topo.connect(topo.add_device(f"d{i}"),
+                     leaves[(num_leaves - 1 - i) % num_leaves],
+                     bw_gbps=bw_gbps)
+    topo.validate()
+    return topo
+
+
 def mesh(num_hosts: int, num_devices: int, rows: int = 2, cols: int = 2,
          bw_gbps: float = DEFAULT_LINK_BW_GBPS) -> Topology:
     """``rows x cols`` switch grid (4-neighbor).  Hosts attach round-robin
@@ -205,6 +237,7 @@ TOPOLOGY_BUILDERS = {
     "direct": direct,
     "single_switch": single_switch,
     "two_level": two_level,
+    "spine_leaf": spine_leaf,
     "mesh": mesh,
 }
 

@@ -94,6 +94,20 @@ def _transport(cfg: StackConfig, p: Dict, pb: Tuple, t):
     return tuple(pb), t + p["rt_extra"]
 
 
+def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route):
+    """ECMP transport: hop *h* of the chosen route occupies the port
+    ``hop_port[route, h]`` of the path set's port union, so the busy-until
+    state is a vector indexed per access instead of a positional tuple.
+    All equal-cost routes share one hop count (static)."""
+    for h in range(cfg.num_hops):
+        pi = p["hop_port"][route, h]
+        start = jnp.maximum(t, pb[pi])
+        done = start + p["hop_occ"][route, h]
+        pb = pb.at[pi].set(done)
+        t = done + p["hop_after"][route, h]
+    return pb, t + p["rt_extra"]
+
+
 # -------------------------------------------------------------- flash (PAL)
 def _pal_read(cfg: StackConfig, p: Dict, f: Dict, t, ppn, en):
     """Mirror of :meth:`PAL._schedule` (read path, program-suspend rule)."""
@@ -368,36 +382,63 @@ def _media_init(cfg: StackConfig):
 
 
 # ------------------------------------------------------------------ runner
-def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick):
+def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
+                routes=None):
     """The scan proper, parameterized by the initial media state so sweeps
-    can vary it per vmap lane (e.g. capacity via disabled frames)."""
+    can vary it per vmap lane (e.g. capacity via disabled frames).
+    ``routes`` is the per-access ECMP choice column (required when
+    ``cfg.num_routes > 1``, ignored otherwise)."""
     dev_step = _STEPS[cfg.kind]
+    ecmp = cfg.num_routes > 1
+    if ecmp and routes is None:
+        # callers without a route column (e.g. cache_design_sweep) follow
+        # the replay layer's fallback contract, so refuse accordingly
+        raise ReplayUnsupported(
+            "ECMP stack needs a per-access route column; this entry point "
+            "supports single-route mounts only (use engine='python')")
     init = (jnp.full(cfg.outstanding, start_tick, jnp.int64),  # LFB slots
             _i64(start_tick),                                  # issue clock
             _i64(1),                                           # stamp counter
-            tuple(_i64(0) for _ in range(cfg.num_ports)),      # port busy
+            # port busy-until: positional tuple on a fixed route (fuses into
+            # elementwise work), an indexable vector under ECMP
+            jnp.zeros(cfg.num_ports, jnp.int64) if ecmp
+            else tuple(_i64(0) for _ in range(cfg.num_ports)),
             media)
 
     def step(carry, x):
         slots, now, ctr, pb, md = carry
-        addr, wr = x
+        if ecmp:
+            addr, wr, route = x
+        else:
+            addr, wr = x
         k = jnp.argmin(slots)
         issue = jnp.maximum(now, slots[k])
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
-        pb, t = _transport(cfg, p, pb, issue)
+        if ecmp:
+            pb, t = _transport_ecmp(cfg, p, pb, issue, route)
+        else:
+            pb, t = _transport(cfg, p, pb, issue)
         md, done, hit, evict = dev_step(cfg, p, md, t, addr, wr, posted, ctr)
         slots = slots.at[k].set(done)
         flags = jnp.where(hit, 1, 0) | jnp.where(evict, 2, 0)
         return ((slots, issue + p["issue_ov"], ctr + 1, pb, md),
                 (issue, done, flags.astype(jnp.int32)))
 
-    carry, (issues, dones, flags) = jax.lax.scan(step, init, (addrs, writes))
+    xs = (addrs, writes, routes) if ecmp else (addrs, writes)
+    carry, (issues, dones, flags) = jax.lax.scan(step, init, xs)
     return issues, dones, flags, carry[4]
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_stack(cfg: StackConfig, p: Dict, addrs, writes, start_tick):
     return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_stack_ecmp(cfg: StackConfig, p: Dict, addrs, writes, routes,
+                    start_tick):
+    return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick,
+                       routes=routes)
 
 
 # ------------------------------------------------------------------ facade
@@ -445,6 +486,12 @@ class ReplayEngine:
             raise ReplayUnsupported(
                 f"trace longer than {MAX_ACCESSES} accesses (packed-stamp "
                 "budget); split the trace or use engine='python'")
+        if start_tick < 0 and getattr(getattr(self.device, "fabric", None),
+                                      "qos_enabled", False):
+            # with start_tick >= 0 a lone origin's QoS floor provably never
+            # binds (see spec._fabric_hops); negative ticks void the proof
+            raise ReplayUnsupported(
+                "QoS replay needs start_tick >= 0; use engine='python'")
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,
             issue_overhead_ns=self.issue_overhead_ns,
@@ -452,9 +499,16 @@ class ReplayEngine:
             max_addr=int(addrs.max(initial=0)))
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
-            issues, dones, flags, _ = _run_stack(
-                cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
-                _i64(start_tick))
+            if cfg.num_routes > 1:
+                from repro.core.replay.spec import access_route_choices
+                routes = access_route_choices(self.device, addrs)
+                issues, dones, flags, _ = _run_stack_ecmp(
+                    cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
+                    jnp.asarray(routes), _i64(start_tick))
+            else:
+                issues, dones, flags, _ = _run_stack(
+                    cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
+                    _i64(start_tick))
             issues = np.asarray(issues)
             dones = np.asarray(dones)
             flags = np.asarray(flags)

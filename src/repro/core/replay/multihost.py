@@ -9,6 +9,18 @@ busy-until vector, and serializes on the target device's media occupancy.
 Contention between hosts therefore emerges from the same shared state as in
 the interpreted driver, tick for tick.
 
+QoS and ECMP are mirrored operation-for-operation:
+
+* **ECMP** — the per-access route choice is precomputed host-side with the
+  same :func:`~repro.core.fabric.routing.flow_choices` hash the interpreted
+  path evaluates per access, and the hop tensors gain a route axis.
+* **QoS** — per-port per-host virtual-finish-time and last-arrival carries
+  replicate :meth:`SwitchPort.qos_update`: the weight sum runs over hosts
+  in sorted-name order (the same float64 add order as the Python ``dict``
+  walk), the pace uses the identical ``int(occ * (W / w))`` truncation, and
+  the resulting floor binds the final host acknowledgment only — the
+  physical port walk is untouched, exactly like the interpreted path.
+
 Supported targets (homogeneous): :class:`FabricAttachedDevice` mounts and
 :class:`HostPortView` pool views whose inner media is DRAM-class
 (``DRAMDevice``, or ``CXLDRAMDevice`` with its private link detached by the
@@ -31,12 +43,17 @@ from jax.experimental import enable_x64
 
 from repro.core.devices import CXLDRAMDevice, DRAMDevice, NullLink, POSTED_ACK_NS
 from repro.core.engine import ns
-from repro.core.fabric.fabric import Fabric, FabricAttachedDevice
+from repro.core.fabric.fabric import LINE_BYTES, Fabric, FabricAttachedDevice
 from repro.core.fabric.pool import HostPortView
+from repro.core.fabric.routing import flow_choices
+from repro.core.fabric.switch import ACTIVE_WINDOW_OCC
 from repro.core.replay.spec import ReplayUnsupported, trace_to_arrays
 from repro.core.workloads.driver import MultiHostResult, TraceResult
 
 BIG = 1 << 62
+# "never arrived" sentinel for the QoS last-arrival carry: far enough below
+# zero that sentinel + activity window can never exceed a valid tick.
+NEVER = -(1 << 61)
 
 
 def _i64(x):
@@ -51,6 +68,11 @@ class MultiCfg:
     num_ports: int
     max_hops: int
     num_devs: int
+    max_routes: int = 1
+    qos: bool = False
+    # host indices in sorted-host-name order: the QoS weight sum must add
+    # floats in exactly the order SwitchPort.qos_update's sorted() walk does
+    host_order: Tuple[int, ...] = ()
 
 
 def _unwrap_dram(dev) -> DRAMDevice:
@@ -68,9 +90,11 @@ def _unwrap_dram(dev) -> DRAMDevice:
 def _port_index(fabric: Fabric) -> Dict[Tuple[str, str], int]:
     return {key: i for i, key in enumerate(sorted(fabric.ports))}
 
+
 def _route_rows(fabric: Fabric, host: str, node: str, size: int,
-                pidx: Dict[Tuple[str, str], int], max_hops: int):
-    hops = fabric.route_occupancy(host, node, size)
+                pidx: Dict[Tuple[str, str], int], max_hops: int,
+                choice: int):
+    hops = fabric.route_occupancy(host, node, size, choice=choice)
     if len(hops) > max_hops:
         raise AssertionError("max_hops underestimated")
     port = np.zeros(max_hops, np.int32)
@@ -86,7 +110,7 @@ def _route_rows(fabric: Fabric, host: str, node: str, size: int,
 
 
 def _extract_targets(targets: Sequence, size: int):
-    """Shared fabric + route/device tensors for mounts or pool views."""
+    """Shared fabric + route/device/QoS tensors for mounts or pool views."""
     first = targets[0]
     if isinstance(first, FabricAttachedDevice):
         fabric = first.fabric
@@ -126,22 +150,33 @@ def _extract_targets(targets: Sequence, size: int):
         raise ReplayUnsupported(
             "fabric has prior traffic; replay snapshots a fresh fabric "
             "(Fabric.reset() or re-build it, or use engine='python')")
+    qos = fabric.qos_enabled
+    if qos and len(set(hosts)) != len(hosts):
+        raise ReplayUnsupported(
+            "QoS arbitration keys per-origin state by host name; give each "
+            "host view a distinct host node (or use engine='python')")
 
     pidx = _port_index(fabric)
     pairs = ([(i, i) for i in range(len(hosts))] if mapper is None else
              [(i, d) for i in range(len(hosts)) for d in range(len(nodes))])
     max_hops = max(fabric.routing.hops(hosts[i], nodes[d]) for i, d in pairs)
     H, NDEV = len(hosts), len(nodes)
-    hop_port = np.zeros((H, NDEV, max_hops), np.int32)
-    hop_occ = np.zeros((H, NDEV, max_hops), np.int64)
-    hop_after = np.zeros((H, NDEV, max_hops), np.int64)
-    hop_on = np.zeros((H, NDEV, max_hops), bool)
+    route_count = np.ones((H, NDEV), np.int32)
+    for i, d in pairs:
+        route_count[i, d] = len(fabric.paths(hosts[i], nodes[d]))
+    K = int(route_count.max())
+    hop_port = np.zeros((H, NDEV, K, max_hops), np.int32)
+    hop_occ = np.zeros((H, NDEV, K, max_hops), np.int64)
+    hop_after = np.zeros((H, NDEV, K, max_hops), np.int64)
+    hop_on = np.zeros((H, NDEV, K, max_hops), bool)
     for i, h in enumerate(hosts):
         for d, n in enumerate(nodes):
             if mapper is None and d != i:
                 continue        # mount mode: host i only reaches device i
-            hop_port[i, d], hop_occ[i, d], hop_after[i, d], hop_on[i, d] = \
-                _route_rows(fabric, h, n, size, pidx, max_hops)
+            for k in range(route_count[i, d]):
+                (hop_port[i, d, k], hop_occ[i, d, k], hop_after[i, d, k],
+                 hop_on[i, d, k]) = _route_rows(fabric, h, n, size, pidx,
+                                                max_hops, k)
     params = {
         "hop_port": hop_port, "hop_occ": hop_occ, "hop_after": hop_after,
         "hop_on": hop_on,
@@ -151,7 +186,21 @@ def _extract_targets(targets: Sequence, size: int):
         "dev_load": np.asarray([ns(d.t.load_ns) for d in drams], np.int64),
         "dev_pack": np.asarray([ns(POSTED_ACK_NS)] * NDEV, np.int64),
     }
-    return fabric, mapper, params, len(pidx), max_hops, NDEV
+    host_order: Tuple[int, ...] = ()
+    if qos:
+        ports_sorted = sorted(fabric.ports)
+        params["qos_on"] = np.asarray(
+            [fabric.ports[key].qos_enabled for key in ports_sorted], bool)
+        params["qos_w"] = np.asarray(
+            [[fabric.ports[key].weight_of(hname) for hname in hosts]
+             for key in ports_sorted], np.float64)
+        host_order = tuple(int(j) for j in
+                           sorted(range(H), key=lambda j: hosts[j]))
+    meta = dict(fabric=fabric, mapper=mapper, hosts=hosts, nodes=nodes,
+                route_count=route_count, qos=qos, host_order=host_order,
+                num_ports=len(pidx), max_hops=max_hops, max_routes=K,
+                num_devs=NDEV)
+    return params, meta
 
 
 def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
@@ -176,10 +225,13 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick):
             jnp.full(H, start_tick, jnp.int64),        # per-host issue clock
             jnp.zeros(H, jnp.int64),                   # per-host trace index
             jnp.zeros(cfg.num_ports, jnp.int64),       # shared port busy
-            jnp.zeros(cfg.num_devs, jnp.int64))        # shared media busy
+            jnp.zeros(cfg.num_devs, jnp.int64),        # shared media busy
+            # QoS: per-port per-host virtual finish + last arrival
+            jnp.zeros((cfg.num_ports, H), jnp.int64),
+            jnp.full((cfg.num_ports, H), NEVER, jnp.int64))
 
     def step(carry, _):
-        slots, now, idx, port_busy, dev_busy = carry
+        slots, now, idx, port_busy, dev_busy, vft, last_arr = carry
         cand = jnp.where(idx < lens,
                          jnp.maximum(now, jnp.min(slots, axis=1)), BIG)
         i = jnp.argmin(cand)                 # ties -> lowest host index
@@ -189,26 +241,50 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick):
         a = addrs[i, idx[i]]
         wr = writes[i, idx[i]]
         dev = devs[i, idx[i]]
+        r = p["route"][i, idx[i]] if cfg.max_routes > 1 else 0
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
         t = issue
+        floor = _i64(0)
         for h in range(cfg.max_hops):
-            on = p["hop_on"][i, dev, h]
-            pi = p["hop_port"][i, dev, h]
+            on = p["hop_on"][i, dev, r, h]
+            pi = p["hop_port"][i, dev, r, h]
+            occ_h = p["hop_occ"][i, dev, r, h]
+            if cfg.qos:
+                # mirror of SwitchPort.qos_update at arrival tick t
+                qon = on & p["qos_on"][pi]
+                prev = vft[pi, i]
+                win = occ_h * ACTIVE_WINDOW_OCC
+                w_active = jnp.float64(0.0)
+                for j in cfg.host_order:   # sorted-name order, like dict walk
+                    member = (j == i) | (last_arr[pi, j] + win > t)
+                    w_active = w_active + jnp.where(member, p["qos_w"][pi, j],
+                                                    0.0)
+                pace = (occ_h.astype(jnp.float64)
+                        * (w_active / p["qos_w"][pi, i])).astype(jnp.int64)
+                floor = jnp.maximum(
+                    floor, jnp.where(qon & (prev > t), prev + pace, 0))
+                vft = vft.at[pi, i].set(
+                    jnp.where(qon, jnp.maximum(prev, t) + pace, prev))
+                last_arr = last_arr.at[pi, i].set(
+                    jnp.where(qon, t, last_arr[pi, i]))
             start = jnp.maximum(t, port_busy[pi])
-            done_h = start + p["hop_occ"][i, dev, h]
+            done_h = start + occ_h
             port_busy = port_busy.at[pi].set(
                 jnp.where(on, done_h, port_busy[pi]))
-            t = jnp.where(on, done_h + p["hop_after"][i, dev, h], t)
+            t = jnp.where(on, done_h + p["hop_after"][i, dev, r, h], t)
         t = t + p["rt_extra"]
         start = jnp.maximum(t, dev_busy[dev])
         occ_done = start + p["dev_occ"][dev]
         dev_busy = dev_busy.at[dev].set(occ_done)
         done = occ_done + jnp.where(posted, p["dev_pack"][dev],
                                     p["dev_load"][dev])
+        if cfg.qos:
+            done = jnp.maximum(done, floor)   # ack floor, data path untouched
         slots = slots.at[i, k].set(done)
         now = now.at[i].set(issue + p["issue_ov"])
         idx = idx.at[i].set(idx[i] + 1)
-        return (slots, now, idx, port_busy, dev_busy), (i, issue, done)
+        return ((slots, now, idx, port_busy, dev_busy, vft, last_arr),
+                (i, issue, done))
 
     n_total = addrs.shape[0] * addrs.shape[1]
     carry, (who, issues, dones) = jax.lax.scan(
@@ -218,8 +294,9 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick):
 
 class MultiHostReplay:
     """Fused, vectorized stand-in for :class:`MultiHostDriver` (DRAM-class
-    pooled or per-host fabric targets).  ``run`` is tick-identical to the
-    interpreted driver for supported shapes."""
+    pooled or per-host fabric targets, QoS weights and ECMP included).
+    ``run`` is tick-identical to the interpreted driver for supported
+    shapes."""
 
     def __init__(self, targets: Sequence, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
@@ -233,7 +310,8 @@ class MultiHostReplay:
 
     def prepare(self, traces: Sequence):
         """Extract (cfg, params, devs, addrs, writes, lens, size) tensors —
-        the compiled program's inputs.  Exposed so sweeps can batch them."""
+        the compiled program's inputs.  Exposed so sweeps can batch them.
+        Per-access route choices ride inside ``params["route"]``."""
         if len(traces) != len(self.targets):
             raise ValueError(f"{len(traces)} traces for "
                              f"{len(self.targets)} host targets")
@@ -241,23 +319,36 @@ class MultiHostReplay:
         size = parsed[0][2]
         if any(pz != size for _, _, pz in parsed):
             raise ReplayUnsupported("hosts must share one access size")
-        fabric, mapper, params, P, max_hops, NDEV = _extract_targets(
-            self.targets, size)
+        params, meta = _extract_targets(self.targets, size)
         H = len(self.targets)
         L = max(a.size for a, _, _ in parsed)
         addrs = np.zeros((H, L), np.int64)
         writes = np.zeros((H, L), bool)
         devs = np.zeros((H, L), np.int32)
+        routes = np.zeros((H, L), np.int32)
         lens = np.asarray([a.size for a, _, _ in parsed], np.int64)
+        mapper, route_count = meta["mapper"], meta["route_count"]
         for i, (a, w, _) in enumerate(parsed):
             dev, local = _map_addrs(mapper, i, a)
             addrs[i, :a.size] = local
             writes[i, :a.size] = w
             devs[i, :a.size] = dev
+            if meta["max_routes"] > 1:
+                # same hash, same flow key (device-local line address) as
+                # HostPortView / FabricAttachedDevice evaluate per access
+                for d in np.unique(dev):
+                    m = dev == d
+                    routes[i, :a.size][m] = flow_choices(
+                        meta["hosts"][i], meta["nodes"][d],
+                        local[m] // LINE_BYTES, int(route_count[i, d]))
         params["issue_ov"] = ns(self.issue_overhead_ns)
+        params["route"] = routes
         cfg = MultiCfg(num_hosts=H, outstanding=self.outstanding,
-                       posted_writes=self.posted_writes, num_ports=P,
-                       max_hops=max_hops, num_devs=NDEV)
+                       posted_writes=self.posted_writes,
+                       num_ports=meta["num_ports"],
+                       max_hops=meta["max_hops"], num_devs=meta["num_devs"],
+                       max_routes=meta["max_routes"], qos=meta["qos"],
+                       host_order=meta["host_order"])
         return cfg, params, devs, addrs, writes, lens, size
 
     @staticmethod
@@ -292,11 +383,32 @@ class MultiHostReplay:
         return MultiHostResult(per_host=per_host,
                                elapsed_ticks=max(lasts) - first_all)
 
-    def run(self, traces: Sequence, start_tick: int = 0) -> MultiHostResult:
+    def _execute(self, traces: Sequence, start_tick: int):
         cfg, params, devs, addrs, writes, lens, size = self.prepare(traces)
+        if cfg.qos and start_tick < 0:
+            raise ReplayUnsupported(
+                "QoS replay needs start_tick >= 0 (the virtual-clock and "
+                "arrival sentinels assume non-negative ticks)")
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
             who, issues, dones = _run_multi(
                 cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
                 jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick))
+        return (np.asarray(who), np.asarray(issues), np.asarray(dones),
+                lens, size)
+
+    def run(self, traces: Sequence, start_tick: int = 0) -> MultiHostResult:
+        who, issues, dones, lens, size = self._execute(traces, start_tick)
         return self.aggregate(who, issues, dones, lens, size, start_tick)
+
+    def run_recorded(self, traces: Sequence, start_tick: int = 0
+                     ) -> Tuple[MultiHostResult, List[np.ndarray]]:
+        """:meth:`run` plus the per-access latency stream of every host
+        (in that host's issue order) — tensors the scan already produced
+        for free, exposed for conformance pinning and tail analysis."""
+        who, issues, dones, lens, size = self._execute(traces, start_tick)
+        res = self.aggregate(who, issues, dones, lens, size, start_tick)
+        valid = np.arange(who.size) < int(np.asarray(lens).sum())
+        lat = [(dones - issues)[valid & (who == i)]
+               for i in range(len(self.targets))]
+        return res, lat

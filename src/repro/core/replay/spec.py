@@ -41,7 +41,7 @@ from repro.core.devices import (
     POSTED_ACK_NS,
 )
 from repro.core.engine import ns, us
-from repro.core.fabric.fabric import FabricAttachedDevice
+from repro.core.fabric.fabric import LINE_BYTES, FabricAttachedDevice
 from repro.core.fabric.topology import SWITCH
 from repro.core.ssd.hil import HIL
 
@@ -66,6 +66,7 @@ class StackConfig:
     posted_writes: bool
     num_hops: int                # transport hops (0 = directly attached)
     num_ports: int               # busy-until vector length (>= 1)
+    num_routes: int = 1          # ECMP fan-out (1 = single fixed route)
     page_bytes: int = 4096
     # cache layer (SSD_CACHE)
     cache_frames: int = 0
@@ -90,11 +91,59 @@ def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
 def _fabric_hops(dev: FabricAttachedDevice, size: int) -> Tuple[list, int]:
     """Route tensor export: one (port_index, occ_ticks, after_ticks) per hop,
     from :meth:`Fabric.route_occupancy` (the single definition of the
-    per-hop busy-until rule)."""
+    per-hop busy-until rule).
+
+    Single-host QoS note: a fabric with QoS weights needs *no* mirroring
+    here — with one origin the active set is always the singleton, the pace
+    equals the occupancy exactly (``occ * (w/w)``), the virtual clock never
+    overtakes the port's busy-until, and the ack floor provably never binds
+    (see :meth:`SwitchPort.qos_update`), so the interpreted path is
+    bit-identical to plain FCFS.  ECMP, by contrast, changes which ports a
+    transfer occupies, so it is exported as per-route tensors by
+    :func:`_fabric_route_tensors`."""
     fab = dev.fabric
     hops = [(i, occ, after) for i, (_, occ, after) in enumerate(
         fab.route_occupancy(dev.host, dev.device_node, size))]
     return hops, ns(fab.rt_extra_ns)
+
+
+def _fabric_route_tensors(dev: FabricAttachedDevice, size: int):
+    """ECMP export: per-route hop tensors over the union of ports the path
+    set touches.  All equal-cost routes share one hop count, so only the
+    port indices differ per route.  Returns ``(hop_port (K,H) int32,
+    hop_occ (K,H) int64, hop_after (K,H) int64, num_ports, rt_extra)``."""
+    fab = dev.fabric
+    routes = fab.paths(dev.host, dev.device_node)
+    K = len(routes)
+    per_route = [fab.route_occupancy(dev.host, dev.device_node, size,
+                                     choice=k) for k in range(K)]
+    H = len(per_route[0])
+    if any(len(r) != H for r in per_route):
+        raise AssertionError("equal-cost routes must share one hop count")
+    port_keys = sorted({key for hops in per_route for key, _, _ in hops})
+    pidx = {key: i for i, key in enumerate(port_keys)}
+    hop_port = np.zeros((K, H), np.int32)
+    hop_occ = np.zeros((K, H), np.int64)
+    hop_after = np.zeros((K, H), np.int64)
+    for k, hops in enumerate(per_route):
+        for h, (key, occ_h, after_h) in enumerate(hops):
+            hop_port[k, h] = pidx[key]
+            hop_occ[k, h] = occ_h
+            hop_after[k, h] = after_h
+    return hop_port, hop_occ, hop_after, len(port_keys), ns(fab.rt_extra_ns)
+
+
+def access_route_choices(device: MemDevice, addrs: np.ndarray) -> np.ndarray:
+    """Per-access ECMP route-choice column for a fabric-mounted device —
+    the same :func:`~repro.core.fabric.routing.flow_choices` hash over the
+    same flow key (``addr // 64``) the interpreted
+    :meth:`FabricAttachedDevice.service` evaluates per access."""
+    from repro.core.fabric.routing import flow_choices
+
+    fab = device.fabric
+    k = len(fab.paths(device.host, device.device_node))
+    return flow_choices(device.host, device.device_node,
+                        np.asarray(addrs, np.int64) // LINE_BYTES, k)
 
 
 def _require_fresh(dev: MemDevice) -> None:
@@ -133,6 +182,7 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
     """Extract (static config, params dict) for one host->device stack."""
     _require_fresh(device)
     inner = device
+    ecmp = None
     if isinstance(device, FabricAttachedDevice):
         if device.fabric.stats.get("transfers", 0):
             # shared ports may hold busy-until state from other mounts;
@@ -140,7 +190,11 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
             raise ReplayUnsupported(
                 "fabric has prior traffic; replay snapshots a fresh fabric "
                 "(Fabric.reset() or re-build it, or use engine='python')")
-        hops, rt = _fabric_hops(device, size)
+        if len(device.fabric.paths(device.host, device.device_node)) > 1:
+            ecmp = _fabric_route_tensors(device, size)
+            hops, rt = [], ecmp[4]
+        else:
+            hops, rt = _fabric_hops(device, size)
         inner = device.inner
         _require_fresh(inner)
     elif isinstance(device, (CXLDRAMDevice, CXLSSDDevice, CachedCXLSSDDevice)):
@@ -150,15 +204,31 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
     else:
         raise ReplayUnsupported(f"no fused model for {type(device).__name__}")
 
-    params: Dict = {
-        "issue_ov": ns(issue_overhead_ns),
-        # hop h is port h on a single-host route: positional arrays suffice
-        "hop_occ": np.asarray([h[1] for h in hops], np.int64),
-        "hop_after": np.asarray([h[2] for h in hops], np.int64),
-        "rt_extra": rt,
-    }
-    common = dict(outstanding=max(1, outstanding), posted_writes=posted_writes,
-                  num_hops=len(hops), num_ports=max(1, len(hops)))
+    if ecmp is not None:
+        hop_port, hop_occ, hop_after, n_ports, rt = ecmp
+        params: Dict = {
+            "issue_ov": ns(issue_overhead_ns),
+            # per-route port indices into the path set's port union
+            "hop_port": hop_port,
+            "hop_occ": hop_occ,
+            "hop_after": hop_after,
+            "rt_extra": rt,
+        }
+        common = dict(outstanding=max(1, outstanding),
+                      posted_writes=posted_writes,
+                      num_hops=hop_occ.shape[1], num_ports=n_ports,
+                      num_routes=hop_occ.shape[0])
+    else:
+        params = {
+            "issue_ov": ns(issue_overhead_ns),
+            # hop h is port h on a single fixed route: positional arrays
+            "hop_occ": np.asarray([h[1] for h in hops], np.int64),
+            "hop_after": np.asarray([h[2] for h in hops], np.int64),
+            "rt_extra": rt,
+        }
+        common = dict(outstanding=max(1, outstanding),
+                      posted_writes=posted_writes,
+                      num_hops=len(hops), num_ports=max(1, len(hops)))
 
     if isinstance(inner, (DRAMDevice, CXLDRAMDevice)):
         dram = inner.dram if isinstance(inner, CXLDRAMDevice) else inner
@@ -166,7 +236,24 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
             # Mounted behind a fabric with detach_link=False: the private
             # link is a second transport stage after the fabric.
             ih, irt = _link_hops(inner.link, size)
-            if ih:
+            if ih and ecmp is not None:
+                # private link = one extra hop on every ECMP route, with
+                # its own (uncontended) port slot after the fabric ports
+                K = params["hop_occ"].shape[0]
+                params["hop_occ"] = np.concatenate(
+                    [params["hop_occ"], np.full((K, 1), ih[0][1])],
+                    axis=1).astype(np.int64)
+                params["hop_after"] = np.concatenate(
+                    [params["hop_after"], np.full((K, 1), ih[0][2])],
+                    axis=1).astype(np.int64)
+                params["hop_port"] = np.concatenate(
+                    [params["hop_port"],
+                     np.full((K, 1), common["num_ports"])],
+                    axis=1).astype(np.int32)
+                params["rt_extra"] = rt + irt
+                common.update(num_hops=common["num_hops"] + 1,
+                              num_ports=common["num_ports"] + 1)
+            elif ih:
                 base = len(hops)
                 params["hop_occ"] = np.concatenate(
                     [params["hop_occ"], [ih[0][1]]]).astype(np.int64)

@@ -1,0 +1,1 @@
+"""Golden-trace conformance fixtures for the replay engines."""

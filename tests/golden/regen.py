@@ -1,0 +1,43 @@
+"""Regenerate the golden-trace conformance fixture.
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Refuses to write if the interpreted and scan engines disagree — a fixture
+must never pin a divergence.  Rerun only after an *intentional*
+timing-model change, and mention the regeneration in the commit message.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from golden import scenarios as sc  # noqa: E402
+
+
+def regen() -> dict:
+    fixture = {"format": 1, "scenarios": {}}
+    for name in sc.scenario_names():
+        py = sc.run_python(name)
+        scan = sc.run_scan(name)
+        if py != scan:
+            raise SystemExit(
+                f"{name}: python and scan engines disagree — refusing to "
+                "pin a divergence (fix the engines first)")
+        entry = {"python_scan": py}
+        if sc.pallas_supported(name):
+            entry["pallas"] = sc.run_pallas(name)
+        fixture["scenarios"][name] = entry
+        print(f"  {name}: ok")
+    return fixture
+
+
+if __name__ == "__main__":
+    data = regen()
+    with open(sc.FIXTURE, "w") as fh:
+        json.dump(data, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {sc.FIXTURE}")

@@ -1,0 +1,175 @@
+"""Golden-trace scenario table + engine runners.
+
+One scenario = one (device stack, attach mode, seeded trace) combination.
+The fixture (``golden_traces.json``) pins per-access latencies so that
+*silent* divergence — python and scan drifting together, or an engine's
+latency model changing without anyone noticing — fails loudly, which the
+pairwise python==scan property tests cannot catch.
+
+Contracts pinned per scenario:
+
+* ``python_scan`` — per-access latency ticks that BOTH the interpreted
+  ``TraceDriver``/``MultiHostDriver`` path and the fused lax.scan replay
+  must reproduce exactly (they are tick-identical by construction; the
+  fixture pins them to a fixed history).
+* ``pallas`` — the Pallas engine's own per-access latencies where the
+  engine supports the stack (cached CXL-SSD).  Its analytic latency model
+  is *not* tick-identical to python; pinning its output separately catches
+  silent regressions in that model too.
+
+Regenerate with ``PYTHONPATH=src python tests/golden/regen.py`` after an
+intentional timing-model change, and say so in the commit message.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+FIXTURE = Path(__file__).with_name("golden_traces.json")
+
+CACHE_KW = dict(capacity_bytes=16 * 4096, mshr_entries=4, writeback_buffer=2)
+DEVICES = ["dram", "cxl-dram", "pmem", "cxl-ssd", "cxl-ssd-cache"]
+N_ACCESSES = 160
+OUTSTANDING = 8
+
+# multi-host tentpole scenario: QoS weights + ECMP on a spine-leaf pool
+MULTI = dict(num_hosts=3, num_leaves=2, num_spines=2,
+             qos_weights={"h0": 3.0, "h1": 1.0, "h2": 1.0})
+
+
+def scenario_names():
+    names = [f"{d}@{attach}" for d in DEVICES
+             for attach in ("direct", "fabric")]
+    names.append("multihost-qos-ecmp")
+    return names
+
+
+def make_trace(seed: int, n: int = N_ACCESSES, pages: int = 24,
+               write_frac: float = 0.3):
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, pages, n) * 4096 + rng.integers(0, 64, n) * 64
+    writes = rng.random(n) < write_frac
+    return [(int(a), 64, bool(w)) for a, w in zip(addrs, writes)]
+
+
+def _mk_device(name: str):
+    from repro.core.cache.dram_cache import DRAMCacheConfig
+    from repro.core.devices import make_device
+
+    if name == "cxl-ssd-cache":
+        return make_device(name, cache_cfg=DRAMCacheConfig(policy="lru",
+                                                           **CACHE_KW))
+    return make_device(name)
+
+
+def make_target(name: str):
+    """Fresh device for ``<device>@<attach>`` scenarios."""
+    from repro.core.fabric import Fabric
+
+    device, attach = name.split("@")
+    dev = _mk_device(device)
+    if attach == "fabric":
+        fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
+                           num_leaves=2)
+        return fab.mount("h1", "d1", dev)
+    return dev
+
+
+def make_multi_targets():
+    """Fresh pool views for the multihost QoS+ECMP scenario."""
+    from repro.core.devices import DRAMDevice
+    from repro.core.fabric import Fabric, MemoryPool
+
+    fab = Fabric.build("spine_leaf", num_hosts=MULTI["num_hosts"],
+                       num_devices=2, num_leaves=MULTI["num_leaves"],
+                       num_spines=MULTI["num_spines"], ecmp=True,
+                       qos_weights=MULTI["qos_weights"])
+    pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+    return pool.views([f"h{i}" for i in range(MULTI["num_hosts"])])
+
+
+def multi_traces():
+    return [make_trace(100 + h) for h in range(MULTI["num_hosts"])]
+
+
+class ServiceTap:
+    """Wrap a MemDevice, recording the latency of every service call —
+    the interpreted drivers' per-access latencies, without touching them."""
+
+    def __init__(self, dev):
+        self._dev = dev
+        self.latencies = []
+
+    def __getattr__(self, name):
+        return getattr(self._dev, name)
+
+    def service(self, now, addr, size, write, posted=False):
+        done = self._dev.service(now, addr, size, write, posted)
+        self.latencies.append(int(done - now))
+        return done
+
+
+def _summ(latencies, result):
+    return {
+        "latency_ticks": [int(x) for x in latencies],
+        "elapsed_ticks": int(result.elapsed_ticks),
+        "sum_latency_ticks": int(result.sum_latency_ticks),
+        "end_tick": int(result.end_tick),
+    }
+
+
+def run_python(name: str):
+    """Interpreted reference: per-access latencies + scalar summary."""
+    from repro.core.workloads.driver import MultiHostDriver, TraceDriver
+
+    if name == "multihost-qos-ecmp":
+        taps = [ServiceTap(t) for t in make_multi_targets()]
+        res = MultiHostDriver(taps, outstanding=OUTSTANDING).run(
+            multi_traces())
+        return [_summ(tap.latencies, host)
+                for tap, host in zip(taps, res.per_host)]
+    tap = ServiceTap(make_target(name))
+    res = TraceDriver(tap, outstanding=OUTSTANDING).run(
+        make_trace(hash_seed(name)))
+    return _summ(tap.latencies, res)
+
+
+def run_scan(name: str):
+    """Fused lax.scan replay: per-access latencies + scalar summary."""
+    from repro.core.replay import MultiHostReplay, ReplayEngine
+
+    if name == "multihost-qos-ecmp":
+        eng = MultiHostReplay(make_multi_targets(), outstanding=OUTSTANDING)
+        res, lat = eng.run_recorded(multi_traces())
+        return [_summ(l.tolist(), host)
+                for l, host in zip(lat, res.per_host)]
+    res = ReplayEngine(make_target(name), outstanding=OUTSTANDING).run(
+        make_trace(hash_seed(name)))
+    return _summ(res.latency_ticks.tolist(), res)
+
+
+def run_pallas(name: str):
+    """Pallas engine (cached CXL-SSD only): its own pinned latencies."""
+    from repro.core.workloads.driver import TraceDriver
+
+    res = TraceDriver(make_target(name), outstanding=OUTSTANDING,
+                      engine="pallas").run(make_trace(hash_seed(name)))
+    return _summ(res.latency_ticks.tolist(), res)
+
+
+def pallas_supported(name: str) -> bool:
+    return name.startswith("cxl-ssd-cache@")
+
+
+def hash_seed(name: str) -> int:
+    """Stable small per-scenario trace seed (NOT Python's randomized
+    ``hash``)."""
+    return sum(ord(c) for c in name) % 997
+
+
+def load_fixture() -> dict:
+    with open(FIXTURE) as fh:
+        return json.load(fh)

@@ -1,0 +1,42 @@
+"""Benchmark determinism: the fabric sweep's *derived* (simulated) metrics
+must be bit-identical across runs, so BENCH comparisons across PRs compare
+simulation results, never run-to-run noise.
+
+``collect_derived`` is the pure half of ``benchmarks/fabric_sweep.py`` —
+every trace generator is explicitly seeded and no wall-clock numbers leak
+into it.  A scaled-down configuration keeps this in the default test tier.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+
+import fabric_sweep  # noqa: E402
+
+
+def test_fabric_sweep_derived_json_identical_across_runs():
+    a = fabric_sweep.collect_derived(accesses=2500, host_counts=[1, 2])
+    b = fabric_sweep.collect_derived(accesses=2500, host_counts=[1, 2])
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_fabric_sweep_derived_covers_qos_and_ecmp():
+    d = fabric_sweep.collect_derived(accesses=2500, host_counts=[1])
+    # QoS: weighted run reorders completion — heavy host ends first
+    qos = d["qos"]["qos3to1"]
+    assert qos["end_ticks"][0] < qos["end_ticks"][1]
+    assert qos["own_window_gbps"][0] > d["qos"]["fcfs"]["own_window_gbps"][0]
+    # ECMP: both spines carry bytes and aggregate beats single-path
+    ecmp, single = d["ecmp"]["ecmp"], d["ecmp"]["single_path"]
+    assert all(b > 0 for b in ecmp["spine_bytes"].values())
+    assert sum(1 for b in single["spine_bytes"].values() if b == 0) >= 1
+    assert ecmp["aggregate_gbps"] > single["aggregate_gbps"]
+
+
+def test_trace_generator_explicitly_seeded():
+    t1 = fabric_sweep._stream_trace(3, n=500)
+    t2 = fabric_sweep._stream_trace(3, n=500)
+    assert t1 == t2
+    assert t1 != fabric_sweep._stream_trace(4, n=500)

@@ -1,7 +1,7 @@
 """CXL fabric subsystem: topology builders, deterministic routing, CXLLink
-equivalence on the direct topology, shared-bottleneck contention, pooled
-address mapping, the multi-host driver, and the vectorized congestion
-estimator."""
+equivalence on the direct topology, shared-bottleneck contention, QoS
+weighted arbitration, ECMP multipath, pooled address mapping, the
+multi-host driver, and the vectorized congestion estimator."""
 
 import numpy as np
 import pytest
@@ -15,8 +15,11 @@ from repro.core.fabric import (
     Topology,
     build_topology,
     direct,
+    flow_choices,
+    flow_hash,
     mesh,
     single_switch,
+    spine_leaf,
     two_level,
 )
 from repro.core.workloads.driver import MultiHostDriver, TraceDriver
@@ -306,3 +309,224 @@ class TestLinkCongestionSim:
                                     [0.5, 1.0, 2.0, 4.0])
         util = out["max_link_utilization"]
         assert np.all(np.diff(util) < 0)  # faster links -> lower utilization
+
+
+# --------------------------------------------------------- QoS arbitration
+def _qos_pool(weights, num_hosts):
+    fab = Fabric.build("single_switch", num_hosts=num_hosts, num_devices=1,
+                       qos_weights=weights)
+    pool = MemoryPool(fab, {"d0": DRAMDevice()})
+    return fab, pool.views([f"h{i}" for i in range(num_hosts)])
+
+
+class TestQoS:
+    def test_equal_weights_reproduce_fcfs_exactly(self):
+        """The acceptance criterion: all-equal weights on a single path are
+        bit-identical to the pre-QoS FCFS discipline."""
+        traces = [stream_trace(3000, base=h << 30) for h in range(2)]
+
+        def go(weights):
+            _, views = _qos_pool(weights, 2)
+            res = MultiHostDriver(views, outstanding=64).run(traces)
+            return [(r.elapsed_ticks, r.sum_latency_ticks, r.end_tick)
+                    for r in res.per_host]
+
+        assert go(None) == go({"h0": 2.0, "h1": 2.0}) == \
+            go({"h0": 1.0, "h1": 1.0})
+
+    def test_weighted_split_orders_by_weight(self):
+        """Under contention the heavy host finishes its trace measurably
+        faster, and its contended-phase bandwidth approaches its share."""
+        traces = [stream_trace(6000, base=h << 30) for h in range(2)]
+        _, views = _qos_pool({"h0": 3.0, "h1": 1.0}, 2)
+        res = MultiHostDriver(views, outstanding=32).run(traces)
+        heavy, light = res.per_host
+        assert heavy.end_tick < light.end_tick * 0.7
+        # heavy's own-window bandwidth lands near 3/4 of the 16 GB/s port
+        assert heavy.bandwidth_gbps > 10.0
+        # and the port is never left idling: the light host reclaims the
+        # full port after the heavy trace drains, so no aggregate collapse
+        assert res.aggregate_bandwidth_gbps > 9.0
+
+    def test_lone_host_on_weighted_fabric_is_fcfs_exact(self):
+        """Work conservation: a lone origin is never regulated, even on a
+        fabric with unequal weights configured."""
+        trace = [stream_trace(2500)]
+
+        def go(weights):
+            _, views = _qos_pool(weights, 2)
+            res = MultiHostDriver(views[:1]).run(trace)
+            return (res.per_host[0].elapsed_ticks,
+                    res.per_host[0].sum_latency_ticks)
+
+        assert go({"h0": 5.0, "h1": 1.0}) == go(None)
+
+    def test_weight_validation(self):
+        port = Fabric(single_switch(2, 1)).ports[("s0", "d0")]
+        with pytest.raises(ValueError):
+            port.set_weights({"h0": 0.0})
+        with pytest.raises(ValueError):
+            port.set_weights({"h0": -1.0})
+
+    def test_partial_weight_map_rejected(self):
+        """A map that skips a host would silently disable the implied
+        default-1.0 share (the all-equal gate sees configured values only),
+        so the fabric requires every host be weighted explicitly."""
+        fab = Fabric(single_switch(3, 1))
+        with pytest.raises(ValueError, match="h2"):
+            fab.set_qos_weights({"h0": 2.0, "h1": 2.0})
+        with pytest.raises(ValueError, match="not a host"):
+            fab.set_qos_weights({"h0": 1.0, "h1": 1.0, "h2": 1.0,
+                                 "d0": 2.0})
+        fab.set_qos_weights({"h0": 2.0, "h1": 2.0, "h2": 1.0})
+
+    def test_set_weights_after_traffic_rejected(self):
+        fab = Fabric(single_switch(1, 1))
+        fab.traverse(0, "h0", "d0", 64)
+        with pytest.raises(ValueError):
+            fab.set_qos_weights({"h0": 2.0})
+        fab.reset()
+        fab.set_qos_weights({"h0": 2.0})    # fine on a reset fabric
+
+    def test_port_report_echoes_weights(self):
+        fab, views = _qos_pool({"h0": 3.0, "h1": 1.0}, 2)
+        MultiHostDriver(views).run(
+            [stream_trace(200, base=h << 30) for h in range(2)])
+        rows = {r["port"]: r for r in fab.port_report(1)}
+        assert rows["s0->d0"]["qos_weights"] == {"h0": 3.0, "h1": 1.0}
+
+
+# ------------------------------------------------------------ ECMP routing
+class TestECMP:
+    def test_spine_leaf_enumerates_all_spines(self):
+        fab = Fabric(spine_leaf(2, 2, num_leaves=2, num_spines=4), ecmp=True)
+        paths = fab.paths("h0", "d0")
+        assert len(paths) == 4
+        hops = {len(p) for p in paths}
+        assert hops == {5}                      # all equal cost
+        assert {p[2] for p in paths} == {"sp0", "sp1", "sp2", "sp3"}
+        # lexicographic order, primary path unchanged
+        assert paths == sorted(paths)
+        assert fab.path("h0", "d0") == paths[0]
+
+    def test_ecmp_off_keeps_single_path(self):
+        fab = Fabric(spine_leaf(1, 1, num_leaves=2, num_spines=3))
+        assert fab.paths("h0", "d0") == [fab.path("h0", "d0")]
+
+    def test_flow_hash_deterministic_and_scalar_vector_agree(self):
+        lines = np.arange(4096, dtype=np.int64)
+        v1 = flow_choices("h0", "d3", lines, 5)
+        v2 = flow_choices("h0", "d3", lines, 5)
+        assert (v1 == v2).all()
+        scalar = np.array([flow_hash("h0", "d3", int(x)) % 5 for x in lines])
+        assert (v1 == scalar).all()
+        # different flow pair -> different (salted) spreading
+        assert (v1 != flow_choices("h1", "d3", lines, 5)).any()
+        # choices actually spread across the path set
+        assert set(np.unique(v1)) == set(range(5))
+
+    def test_ecmp_spreads_traffic_across_spines(self):
+        fab = Fabric(spine_leaf(1, 1, num_leaves=2, num_spines=3), ecmp=True)
+        dev = fab.mount("h0", "d0", DRAMDevice())
+        TraceDriver(dev, outstanding=32).run(stream_trace(3000))
+        spine_bytes = {s: fab.ports[("s0", s)].bytes
+                       for s in ("sp0", "sp1", "sp2")}
+        assert all(b > 0 for b in spine_bytes.values())
+        # single-path routing would put every byte on one spine
+        total = sum(spine_bytes.values())
+        assert max(spine_bytes.values()) < 0.6 * total
+
+    def test_ecmp_lifts_aggregate_on_parallel_spines(self):
+        """Two hosts with uplink-bound cross-leaf traffic: ECMP across two
+        spines must beat the single deterministic path measurably (thin
+        uplinks make the spine tier the bottleneck; with full-rate uplinks
+        the edge links bound both modes identically)."""
+        def agg(ecmp):
+            fab = Fabric(spine_leaf(2, 2, num_leaves=2, num_spines=2,
+                                    uplink_bw_gbps=6.0), ecmp=ecmp)
+            pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+            res = MultiHostDriver(pool.views(["h0", "h1"]),
+                                  outstanding=64).run(
+                [stream_trace(6000, base=h << 30) for h in range(2)])
+            return res.aggregate_bandwidth_gbps
+
+        assert agg(True) > agg(False) * 1.3
+
+    def test_mesh_equal_cost_paths_are_all_shortest(self):
+        fab = Fabric(mesh(1, 1, rows=3, cols=3), ecmp=True)
+        paths = fab.paths("h0", "d0")
+        assert len(paths) > 1
+        want = len(fab.path("h0", "d0"))
+        for p in paths:
+            assert len(p) == want
+            for u, v in zip(p, p[1:]):          # every hop is a real link
+                assert (u, v) in fab.ports
+
+
+# --------------------------------------------- QoS/ECMP property tests
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    WEIGHTS = st.lists(st.sampled_from([0.5, 1.0, 2.0, 3.0, 7.0]),
+                       min_size=3, max_size=3)
+    PAGES = st.lists(st.integers(0, 63), min_size=96, max_size=96)
+
+    @settings(max_examples=12, deadline=None)
+    @given(weights=WEIGHTS, pages=PAGES)
+    def test_property_qos_bytes_conserved_no_starvation(weights, pages):
+        """Bytes conservation per-origin and no starvation under positive
+        weights, for arbitrary weight mixes and traffic."""
+        wmap = {f"h{i}": w for i, w in enumerate(weights)}
+        fab, views = _qos_pool(wmap, 3)
+        traces = [[((h << 30) + p * LINE, LINE, p % 3 == 0) for p in pages]
+                  for h in range(3)]
+        res = MultiHostDriver(views, outstanding=8).run(traces)
+        # no starvation: every access of every host completed
+        for host in res.per_host:
+            assert host.accesses == len(pages)
+            assert host.end_tick < 1 << 50
+            assert host.sum_latency_ticks >= 0
+        # bytes conservation: per-origin attribution sums to the port total
+        for port in fab.ports.values():
+            if port.packets:
+                assert sum(port.bytes_by_origin.values()) == port.bytes
+
+    @settings(max_examples=8, deadline=None)
+    @given(w=st.sampled_from([0.5, 1.0, 2.0, 5.0]), pages=PAGES)
+    def test_property_equal_weights_degenerate_to_fcfs(w, pages):
+        traces = [[((h << 30) + p * LINE, LINE, p % 3 == 0) for p in pages]
+                  for h in range(2)]
+
+        def go(weights):
+            _, views = _qos_pool(weights, 2)
+            res = MultiHostDriver(views, outstanding=8).run(traces)
+            return [(r.elapsed_ticks, r.sum_latency_ticks, r.end_tick)
+                    for r in res.per_host]
+
+        assert go({"h0": w, "h1": w}) == go(None)
+
+    @settings(max_examples=16, deadline=None)
+    @given(lines=st.lists(st.integers(0, 1 << 40), min_size=4, max_size=64),
+           spines=st.integers(2, 5))
+    def test_property_ecmp_paths_shortest_and_hash_deterministic(
+            lines, spines):
+        fab = Fabric(spine_leaf(1, 1, num_leaves=2, num_spines=spines),
+                     ecmp=True)
+        paths = fab.paths("h0", "d0")
+        shortest = len(paths[0])
+        assert len(paths) == spines
+        assert len({tuple(p) for p in paths}) == spines   # all distinct
+        arr = np.asarray(lines, np.int64)
+        choices = flow_choices("h0", "d0", arr, len(paths))
+        again = flow_choices("h0", "d0", arr, len(paths))
+        assert (choices == again).all()
+        for line, c in zip(lines, choices):
+            chosen = fab.select_path("h0", "d0", line)
+            assert chosen == paths[c]               # same selection rule
+            assert len(chosen) == shortest          # every choice shortest
+            for u, v in zip(chosen, chosen[1:]):
+                assert (u, v) in fab.ports          # over real links

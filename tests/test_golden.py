@@ -1,0 +1,85 @@
+"""Golden-trace conformance: every engine reproduces pinned per-access
+latencies tick-for-tick.
+
+The pairwise property tests (python == scan) can miss *joint* drift — a
+timing-model change that moves both engines together.  These tests compare
+each engine against a committed fixture (``tests/golden/golden_traces.json``)
+covering all five paper devices, directly attached and fabric-mounted, plus
+a multi-host QoS+ECMP scenario.  Regenerate intentionally with
+``PYTHONPATH=src python tests/golden/regen.py``.
+"""
+
+import pytest
+
+from golden import scenarios as sc
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    assert sc.FIXTURE.exists(), \
+        "missing golden fixture; run: PYTHONPATH=src python tests/golden/regen.py"
+    data = sc.load_fixture()
+    assert data["format"] == 1
+    return data["scenarios"]
+
+
+@pytest.fixture(scope="module")
+def names(fixture):
+    got = set(sc.scenario_names())
+    pinned = set(fixture)
+    assert got == pinned, (
+        f"scenario table and fixture disagree (missing={got - pinned}, "
+        f"stale={pinned - got}); regenerate the fixture")
+    return sorted(got)
+
+
+def _assert_match(expected, actual, engine, name):
+    assert actual["elapsed_ticks"] == expected["elapsed_ticks"], \
+        f"{name}/{engine}: elapsed_ticks diverged"
+    assert actual["sum_latency_ticks"] == expected["sum_latency_ticks"], \
+        f"{name}/{engine}: sum_latency_ticks diverged"
+    assert actual["end_tick"] == expected["end_tick"], \
+        f"{name}/{engine}: end_tick diverged"
+    exp, act = expected["latency_ticks"], actual["latency_ticks"]
+    assert len(act) == len(exp), f"{name}/{engine}: access count diverged"
+    bad = [i for i, (a, b) in enumerate(zip(exp, act)) if a != b]
+    assert not bad, (
+        f"{name}/{engine}: {len(bad)} per-access latencies diverged "
+        f"(first at access {bad[0]}: pinned {exp[bad[0]]}, got "
+        f"{act[bad[0]]})")
+
+
+@pytest.mark.parametrize("name", sc.scenario_names())
+def test_python_engine_matches_golden(fixture, name):
+    expected = fixture[name]["python_scan"]
+    actual = sc.run_python(name)
+    if name == "multihost-qos-ecmp":
+        for h, (e, a) in enumerate(zip(expected, actual)):
+            _assert_match(e, a, "python", f"{name}[h{h}]")
+    else:
+        _assert_match(expected, actual, "python", name)
+
+
+@pytest.mark.parametrize("name", sc.scenario_names())
+def test_scan_engine_matches_golden(fixture, name):
+    expected = fixture[name]["python_scan"]
+    actual = sc.run_scan(name)
+    if name == "multihost-qos-ecmp":
+        for h, (e, a) in enumerate(zip(expected, actual)):
+            _assert_match(e, a, "scan", f"{name}[h{h}]")
+    else:
+        _assert_match(expected, actual, "scan", name)
+
+
+@pytest.mark.parametrize("name",
+                         [n for n in sc.scenario_names()
+                          if sc.pallas_supported(n)])
+def test_pallas_engine_matches_golden(fixture, name):
+    expected = fixture[name]["pallas"]
+    actual = sc.run_pallas(name)
+    _assert_match(expected, actual, "pallas", name)
+
+
+def test_fixture_scenarios_in_sync(names):
+    """`names` already cross-checks table vs fixture; keep it referenced."""
+    assert names

@@ -312,3 +312,114 @@ def test_replay_smoke_all_engines():
                                ways=CACHE_KW["capacity_bytes"] // 4096,
                                policy="lru").run(pages, writes)
     assert (np.asarray(hits) == pl_res.hit_flags).all()
+
+
+# ------------------------------------------------- QoS + ECMP (tentpole)
+def _qos_views(nh=3, weights=None):
+    fab = Fabric.build("single_switch", num_hosts=nh, num_devices=1,
+                       qos_weights=weights or {"h0": 3.0, "h1": 1.0,
+                                               "h2": 2.0})
+    pool = MemoryPool(fab, {"d0": DRAMDevice()})
+    return pool.views([f"h{i}" for i in range(nh)])
+
+
+def _ecmp_views(qos=False):
+    fab = Fabric.build("spine_leaf", num_hosts=2, num_devices=2,
+                       num_leaves=2, num_spines=3, ecmp=True,
+                       qos_weights={"h0": 3.0, "h1": 1.0} if qos else None)
+    pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+    return pool.views(["h0", "h1"])
+
+
+def _assert_multi_equal(py, rp):
+    assert py.elapsed_ticks == rp.elapsed_ticks
+    for a, b in zip(py.per_host, rp.per_host):
+        _assert_equal(a, b)
+
+
+def test_multihost_qos_exact():
+    traces = [_trace(60 + h, n=900) for h in range(3)]
+    py = MultiHostDriver(_qos_views()).run(traces)
+    rp = MultiHostReplay(_qos_views()).run(traces)
+    _assert_multi_equal(py, rp)
+
+
+def test_multihost_ecmp_exact():
+    traces = [_trace(64 + h, n=900) for h in range(2)]
+    py = MultiHostDriver(_ecmp_views()).run(traces)
+    rp = MultiHostReplay(_ecmp_views()).run(traces)
+    _assert_multi_equal(py, rp)
+
+
+def test_multihost_qos_plus_ecmp_exact():
+    traces = [_trace(66 + h, n=900) for h in range(2)]
+    py = MultiHostDriver(_ecmp_views(qos=True)).run(traces)
+    rp = MultiHostReplay(_ecmp_views(qos=True)).run(traces)
+    _assert_multi_equal(py, rp)
+
+
+def test_singlehost_ecmp_replay_engine_exact():
+    def mk():
+        fab = Fabric.build("spine_leaf", num_hosts=1, num_devices=1,
+                           num_leaves=2, num_spines=3, ecmp=True)
+        return fab.mount("h0", "d0", DRAMDevice())
+
+    trace = _trace(68, n=900)
+    py = TraceDriver(mk(), outstanding=8).run(trace)
+    rp = ReplayEngine(mk(), outstanding=8).run(trace)
+    _assert_equal(py, rp)
+
+
+def test_singlehost_on_qos_fabric_exact_without_mirror():
+    """A lone origin's QoS floor provably never binds, so ReplayEngine
+    needs no QoS state at all — but the outputs must still agree with the
+    interpreted path, which *does* run the arbitration arithmetic."""
+    def mk():
+        fab = Fabric.build("single_switch", num_hosts=2, num_devices=1,
+                           qos_weights={"h0": 7.0, "h1": 1.0})
+        return fab.mount("h0", "d0", DRAMDevice())
+
+    trace = _trace(69, n=900)
+    py = TraceDriver(mk(), outstanding=8).run(trace)
+    rp = ReplayEngine(mk(), outstanding=8).run(trace)
+    _assert_equal(py, rp)
+
+
+def test_qos_duplicate_host_names_rejected():
+    views = _qos_views()
+    with pytest.raises(ReplayUnsupported):
+        MultiHostReplay([views[0], views[0]]).run(
+            [_trace(70, n=64), _trace(71, n=64)])
+
+
+def test_qos_negative_start_tick_rejected():
+    with pytest.raises(ReplayUnsupported):
+        MultiHostReplay(_qos_views()).run(
+            [_trace(72, n=64) for _ in range(3)], start_tick=-5)
+
+
+if HAVE_HYPOTHESIS:
+    WEIGHT = st.sampled_from([0.5, 1.0, 2.0, 3.0, 7.0])
+
+    @settings(max_examples=8, deadline=None)
+    @given(pages=PAGES, writes=WRITES, w0=WEIGHT, w1=WEIGHT, w2=WEIGHT)
+    def test_property_qos_scan_matches_python(pages, writes, w0, w1, w2):
+        """The tentpole acceptance criterion, property-tested: arbitrary
+        weight mixes stay tick-identical between the interpreted driver
+        and the fused scan (including the all-equal FCFS degeneration)."""
+        weights = {"h0": w0, "h1": w1, "h2": w2}
+        traces = [[(p * 4096, 64, w) for p, w in zip(pages, writes)]
+                  for _ in range(3)]
+        py = MultiHostDriver(_qos_views(weights=weights)).run(traces)
+        rp = MultiHostReplay(_qos_views(weights=weights)).run(traces)
+        _assert_multi_equal(py, rp)
+
+    @settings(max_examples=6, deadline=None)
+    @given(pages=PAGES, writes=WRITES)
+    def test_property_ecmp_scan_matches_python(pages, writes):
+        traces = [[(p * 4096 + o * 64, 64, w)
+                   for p, o, w in zip(pages, range(256), writes)]
+                  for _ in range(2)]
+        py = MultiHostDriver(_ecmp_views(qos=True)).run(traces)
+        rp = MultiHostReplay(_ecmp_views(qos=True)).run(traces)
+        _assert_multi_equal(py, rp)
