@@ -12,6 +12,13 @@ from __future__ import annotations
 import importlib
 import sys
 
+from xla_flags import enable_cpu_native_codegen
+
+# CPU-native codegen for the scan-heavy replay lanes (see replay_bench):
+# must be in the environment before any section initializes the XLA CPU
+# client, so set it here rather than relying on module import order.
+enable_cpu_native_codegen()
+
 MODULES = [
     "benchmarks.paper_figures",
     "benchmarks.trace_sim_speed",

@@ -1,0 +1,33 @@
+"""XLA:CPU whole-loop codegen opt-in for scan-heavy replay benchmarks.
+
+XLA:CPU's default thunk runtime dispatches each op of a ``lax.scan`` body
+per step (~1 us floor per step measured on the replay engines); the legacy
+emitter compiles the whole loop into one native function instead, worth
+5-10x on the scan lanes at zero fidelity cost (tick-exactness is asserted
+either way).
+
+This module must stay import-side-effect-free except for the environment
+mutation: the flag is read exactly once, when the XLA CPU client is
+created, so benchmark entry points import it BEFORE anything that pulls in
+``repro``/``jax`` computations.  (Both ``benchmarks/run.py`` and direct
+``python benchmarks/replay_bench.py`` runs have this directory on
+``sys.path``, so a plain ``import xla_flags`` works everywhere.)
+"""
+
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_cpu_use_thunk_runtime=false"
+
+
+def enable_cpu_native_codegen() -> None:
+    """Append the whole-loop codegen flag to ``XLA_FLAGS`` (idempotent).
+
+    No-op if the user already pinned ``--xla_cpu_use_thunk_runtime``
+    themselves; silently ineffective if the XLA CPU client was already
+    initialized.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_cpu_use_thunk_runtime" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}".strip()

@@ -1,31 +1,50 @@
 """Fused, vectorized device-stack trace replay.
 
-The hot path of trace-driven evaluation, collapsed into one compiled
-program: DRAM-cache decisions, CXL link/fabric occupancy, and SSD channel
-service times all advance inside a single :func:`jax.lax.scan` (one step
-per access), tick-identical to the interpreted
-:class:`~repro.core.workloads.driver.TraceDriver` path.
+The hot path of trace-driven evaluation, collapsed into compiled programs
+that are tick-identical to the interpreted
+:class:`~repro.core.workloads.driver.TraceDriver` path:
 
 * :class:`ReplayEngine` — single host, any of the five paper devices,
-  directly attached or fabric-mounted.
+  directly attached or fabric-mounted, one :func:`jax.lax.scan` step per
+  access (``block_size=B`` replays B accesses per sequential step,
+  amortizing the per-step dispatch floor — tick-identical at any B).
+* :class:`AssocReplayEngine` — the log-depth lane for stateless DRAM/PMEM
+  media: every busy-until chain lowered to associative max-plus scans,
+  zero sequential scan steps; certified tick-exact or it refuses
+  (:mod:`repro.core.replay.assoc`).
 * :class:`MultiHostReplay` — N hosts interleaved onto shared fabric ports
-  and pooled DRAM media (the :class:`MultiHostDriver` fast path).
+  and pooled DRAM media (the :class:`MultiHostDriver` fast path), blocked
+  the same way.
 * :mod:`repro.core.replay.sweep` — vmap-batched design-space sweeps over
   timing parameters, replacement policy, capacity, and topology.
 """
 
+from repro.core.replay.assoc import (
+    AssocReplayEngine,
+    busy_until,
+    port_busy_until,
+)
 from repro.core.replay.engine import ReplayEngine, ReplayResult
 from repro.core.replay.multihost import MultiHostReplay
-from repro.core.replay.spec import ReplayUnsupported, StackConfig, build_stack
+from repro.core.replay.spec import (
+    ReplayUnsupported,
+    StackConfig,
+    build_stack,
+    validate_block_size,
+)
 from repro.core.replay.sweep import cache_design_sweep, host_count_sweep
 
 __all__ = [
+    "AssocReplayEngine",
     "ReplayEngine",
     "ReplayResult",
     "MultiHostReplay",
     "ReplayUnsupported",
     "StackConfig",
     "build_stack",
+    "busy_until",
     "cache_design_sweep",
     "host_count_sweep",
+    "port_busy_until",
+    "validate_block_size",
 ]

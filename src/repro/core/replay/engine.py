@@ -59,6 +59,7 @@ from repro.core.replay.spec import (
     StackConfig,
     build_stack,
     trace_to_arrays,
+    validate_block_size,
 )
 from repro.core.workloads.driver import TraceResult
 
@@ -383,11 +384,15 @@ def _media_init(cfg: StackConfig):
 
 # ------------------------------------------------------------------ runner
 def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
-                routes=None):
+                routes=None, block=1):
     """The scan proper, parameterized by the initial media state so sweeps
     can vary it per vmap lane (e.g. capacity via disabled frames).
     ``routes`` is the per-access ECMP choice column (required when
-    ``cfg.num_routes > 1``, ignored otherwise)."""
+    ``cfg.num_routes > 1``, ignored otherwise).  ``block`` is the blocked
+    replay width: the scan body replays ``block`` accesses per sequential
+    step (scan unroll), with the carry crossing block seams untouched —
+    tick-identical at any block size, but the per-step dispatch floor is
+    paid once per block instead of once per access."""
     dev_step = _STEPS[cfg.kind]
     ecmp = cfg.num_routes > 1
     if ecmp and routes is None:
@@ -425,20 +430,22 @@ def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
                 (issue, done, flags.astype(jnp.int32)))
 
     xs = (addrs, writes, routes) if ecmp else (addrs, writes)
-    carry, (issues, dones, flags) = jax.lax.scan(step, init, xs)
+    carry, (issues, dones, flags) = jax.lax.scan(step, init, xs, unroll=block)
     return issues, dones, flags, carry[4]
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _run_stack(cfg: StackConfig, p: Dict, addrs, writes, start_tick):
-    return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick)
-
-
-@functools.partial(jax.jit, static_argnums=(0,))
-def _run_stack_ecmp(cfg: StackConfig, p: Dict, addrs, writes, routes,
-                    start_tick):
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def _run_stack(cfg: StackConfig, p: Dict, addrs, writes, start_tick,
+               block: int = 1):
     return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick,
-                       routes=routes)
+                       block=block)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def _run_stack_ecmp(cfg: StackConfig, p: Dict, addrs, writes, routes,
+                    start_tick, block: int = 1):
+    return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick,
+                       routes=routes, block=block)
 
 
 # ------------------------------------------------------------------ facade
@@ -467,11 +474,12 @@ class ReplayEngine:
 
     def __init__(self, device, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
-                 posted_writes: bool = True) -> None:
+                 posted_writes: bool = True, block_size: int = 1) -> None:
         self.device = device
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
+        self.block_size = validate_block_size(block_size)
 
     def run(self, trace, start_tick: int = 0) -> ReplayResult:
         addrs, writes, size = trace_to_arrays(trace)
@@ -482,6 +490,8 @@ class ReplayEngine:
                    size: int = 64, start_tick: int = 0) -> ReplayResult:
         addrs = np.asarray(addrs, np.int64)
         writes = np.asarray(writes, bool)
+        if addrs.size == 0:
+            raise ReplayUnsupported("empty trace")
         if addrs.size > MAX_ACCESSES:
             raise ReplayUnsupported(
                 f"trace longer than {MAX_ACCESSES} accesses (packed-stamp "
@@ -504,11 +514,11 @@ class ReplayEngine:
                 routes = access_route_choices(self.device, addrs)
                 issues, dones, flags, _ = _run_stack_ecmp(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
-                    jnp.asarray(routes), _i64(start_tick))
+                    jnp.asarray(routes), _i64(start_tick), self.block_size)
             else:
                 issues, dones, flags, _ = _run_stack(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
-                    _i64(start_tick))
+                    _i64(start_tick), self.block_size)
             issues = np.asarray(issues)
             dones = np.asarray(dones)
             flags = np.asarray(flags)

@@ -47,7 +47,8 @@ from repro.core.fabric.fabric import LINE_BYTES, Fabric, FabricAttachedDevice
 from repro.core.fabric.pool import HostPortView
 from repro.core.fabric.routing import flow_choices
 from repro.core.fabric.switch import ACTIVE_WINDOW_OCC
-from repro.core.replay.spec import ReplayUnsupported, trace_to_arrays
+from repro.core.replay.spec import (ReplayUnsupported, trace_to_arrays,
+                                    validate_block_size)
 from repro.core.workloads.driver import MultiHostResult, TraceResult
 
 BIG = 1 << 62
@@ -218,8 +219,9 @@ def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
     return dev64.astype(np.int32), local
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick):
+@functools.partial(jax.jit, static_argnums=(0, 7))
+def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
+               block: int = 1):
     H, O = cfg.num_hosts, cfg.outstanding
     init = (jnp.full((H, O), start_tick, jnp.int64),   # per-host LFB slots
             jnp.full(H, start_tick, jnp.int64),        # per-host issue clock
@@ -286,9 +288,14 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick):
         return ((slots, now, idx, port_busy, dev_busy, vft, last_arr),
                 (i, issue, done))
 
+    # Blocked replay: `block` steps per sequential scan iteration (unroll).
+    # The carry — including the per-host candidate race state (slots, now,
+    # idx) — crosses block seams untouched, so the earliest-candidate-host
+    # selection and its lowest-index tie-break behave identically whether a
+    # tie lands mid-block or exactly on a seam (regression-tested).
     n_total = addrs.shape[0] * addrs.shape[1]
     carry, (who, issues, dones) = jax.lax.scan(
-        step, init, None, length=n_total)
+        step, init, None, length=n_total, unroll=block)
     return who, issues, dones
 
 
@@ -300,13 +307,14 @@ class MultiHostReplay:
 
     def __init__(self, targets: Sequence, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
-                 posted_writes: bool = True) -> None:
+                 posted_writes: bool = True, block_size: int = 1) -> None:
         if not targets:
             raise ReplayUnsupported("need at least one host target")
         self.targets = list(targets)
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
+        self.block_size = validate_block_size(block_size)
 
     def prepare(self, traces: Sequence):
         """Extract (cfg, params, devs, addrs, writes, lens, size) tensors —
@@ -393,7 +401,8 @@ class MultiHostReplay:
             pj = jax.tree.map(jnp.asarray, params)
             who, issues, dones = _run_multi(
                 cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
-                jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick))
+                jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
+                self.block_size)
         return (np.asarray(who), np.asarray(issues), np.asarray(dones),
                 lens, size)
 

@@ -71,12 +71,20 @@ def pallas_params(device, issue_overhead_ns: float) -> dict:
 def run_pallas(device, addrs: np.ndarray, writes: np.ndarray, *,
                size: int = 64, outstanding: int = 32,
                issue_overhead_ns: float = 0.5, start_tick: int = 0,
-               interpret: bool | None = None):
+               interpret: bool | None = None, validate: bool = False):
     """Replay (addrs, writes) through the fused Pallas kernel; returns a
     :class:`~repro.core.replay.engine.ReplayResult`.
 
     ``interpret=None`` auto-detects: the real kernel on a TPU backend,
-    op-level interpret emulation elsewhere (CPU/GPU)."""
+    op-level interpret emulation elsewhere (CPU/GPU).
+
+    ``validate=True`` recomputes the latency stream from the kernel's own
+    decisions + arrivals through the associative busy-until formulation
+    shared with the replay engines
+    (:func:`repro.kernels.cache_sim.fill_latency_assoc`) and raises if the
+    two disagree bit-for-bit — a cheap end-to-end cross-check of the
+    in-kernel sequential chain, run on every golden-trace conformance
+    pass."""
     import jax
 
     from repro.core.replay.engine import ReplayResult
@@ -106,6 +114,17 @@ def run_pallas(device, addrs: np.ndarray, writes: np.ndarray, *,
         interpret=interpret, **kw)
     hits = np.asarray(hits)
     evicts = np.asarray(evicts)
+    if validate:
+        from repro.kernels.cache_sim import fill_latency_assoc
+        lat2 = np.asarray(fill_latency_assoc(
+            hits, evicts, arr_ns, hit_ns=kw["hit_ns"], miss_ns=kw["miss_ns"],
+            miss_occ_ns=kw["miss_occ_ns"], wb_ns=kw["wb_ns"]))
+        if not np.array_equal(lat2, np.asarray(lat_ns)):
+            bad = int(np.flatnonzero(lat2 != np.asarray(lat_ns))[0])
+            raise AssertionError(
+                f"pallas kernel latency diverged from the associative "
+                f"reconstruction at access {bad}: kernel "
+                f"{int(np.asarray(lat_ns)[bad])}, assoc {int(lat2[bad])}")
     lat = np.asarray(lat_ns).astype(np.int64) * TICKS_PER_NS
     issues = start_tick + np.asarray(arr_ns).astype(np.int64) * TICKS_PER_NS
     dones = issues + lat

@@ -47,7 +47,16 @@ from repro.core.ssd.hil import HIL
 
 
 class ReplayUnsupported(ValueError):
-    """The device/trace combination has no exact fused fast path."""
+    """The device/trace combination has no exact fused fast path.
+
+    Every fast lane raises this instead of ever diverging silently; the
+    message names the widest lane that still covers the shape.  The lane
+    ladder, widest to fastest:
+
+    ``python`` (everything) > ``scan``/blocked scan (all five devices,
+    fabric/ECMP/QoS mounts) > ``assoc`` (stateless DRAM/PMEM media on a
+    single route, bandwidth-bound traces).
+    """
 
 
 # media kinds the fused step function branches on (static)
@@ -55,6 +64,22 @@ DRAM = "dram"
 PMEM = "pmem"
 SSD_BUF = "ssd-buf"        # cxl-ssd: page-register buffer straight to flash
 SSD_CACHE = "ssd-cache"    # cxl-ssd-cache: DRAM cache + MSHR + writeback
+
+# media kinds with no per-access state beyond busy-until chains — the
+# stacks the log-depth associative lane (repro.core.replay.assoc) covers
+ASSOC_KINDS = (DRAM, PMEM)
+
+
+def validate_block_size(block_size) -> int:
+    """Blocked-replay knob: the scan body replays ``block_size`` accesses
+    per sequential step (``lax.scan`` unroll), amortizing XLA:CPU's
+    per-step thunk dispatch by ~B.  Purely a lowering change — the carry
+    crosses block seams untouched, so any block size is tick-identical
+    (tested for B in {1, 8, 64, len(trace)})."""
+    b = int(block_size)
+    if b < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size!r}")
+    return b
 
 
 @dataclass(frozen=True)

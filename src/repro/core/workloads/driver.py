@@ -45,7 +45,7 @@ class TraceResult:
         return self.bytes_moved / self.elapsed_s / 1e9 if self.elapsed_ticks else 0.0
 
 
-ENGINES = ("python", "scan", "pallas")
+ENGINES = ("python", "scan", "assoc", "pallas")
 
 
 class TraceDriver:
@@ -59,7 +59,15 @@ class TraceDriver:
     ``scan``     the fused :mod:`repro.core.replay` lax.scan — one compiled
                  program for the whole stack, tick-identical to ``python``
                  for supported shapes (raises
-                 :class:`~repro.core.replay.ReplayUnsupported` otherwise);
+                 :class:`~repro.core.replay.ReplayUnsupported` otherwise).
+                 ``block_size=B`` replays B accesses per sequential scan
+                 step (tick-identical at any B; amortizes XLA:CPU's
+                 per-step dispatch floor);
+    ``assoc``    the log-depth associative lane
+                 (:mod:`repro.core.replay.assoc`) — zero sequential scan
+                 steps; tick-identical where certified (stateless
+                 DRAM/PMEM media, bandwidth-bound traces), refuses with
+                 :class:`ReplayUnsupported` otherwise;
     ``pallas``   the fused Pallas cache+latency kernel — bit-identical
                  hit/evict decisions, analytic open-loop latency (see
                  :mod:`repro.core.replay.pallas_engine`).
@@ -67,14 +75,22 @@ class TraceDriver:
 
     def __init__(self, device: MemDevice, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5, posted_writes: bool = True,
-                 engine: str = "python") -> None:
+                 engine: str = "python", block_size: int = 1) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+        from repro.core.replay.spec import validate_block_size
+
         self.device = device
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
         self.engine = engine
+        self.block_size = validate_block_size(block_size)
+        if self.block_size > 1 and engine != "scan":
+            # blocking shapes the sequential scan's lowering only; accepting
+            # it elsewhere would silently run identical replays
+            raise ValueError(
+                f"block_size applies to engine='scan', not {engine!r}")
 
     def run(self, trace: Iterable[Access], start_tick: int = 0) -> TraceResult:
         rows = list(trace) if self.engine != "python" else trace
@@ -99,11 +115,21 @@ class TraceDriver:
                               outstanding=self.outstanding,
                               issue_overhead_ns=self.issue_overhead_ns,
                               start_tick=start_tick)
+        if self.engine == "assoc":
+            from repro.core.replay.assoc import AssocReplayEngine
+            # no silent fallback: the caller asked for the log-depth lane,
+            # so a shape it cannot certify raises ReplayUnsupported naming
+            # the wider lane (engine='scan')
+            return AssocReplayEngine(
+                self.device, outstanding=self.outstanding,
+                issue_overhead_ns=self.issue_overhead_ns,
+                posted_writes=self.posted_writes).run(rows, start_tick)
         try:
             return ReplayEngine(
                 self.device, outstanding=self.outstanding,
                 issue_overhead_ns=self.issue_overhead_ns,
-                posted_writes=self.posted_writes).run(rows, start_tick)
+                posted_writes=self.posted_writes,
+                block_size=self.block_size).run(rows, start_tick)
         except ReplayUnsupported as single_host_reason:
             # pool views and shared-fabric targets live in the multi-host
             # engine; a single host is its degenerate case
@@ -111,7 +137,8 @@ class TraceDriver:
                 return MultiHostReplay(
                     [self.device], outstanding=self.outstanding,
                     issue_overhead_ns=self.issue_overhead_ns,
-                    posted_writes=self.posted_writes).run(
+                    posted_writes=self.posted_writes,
+                    block_size=self.block_size).run(
                         [rows], start_tick).per_host[0]
             except ReplayUnsupported:
                 # the single-host diagnosis (e.g. an unsupported policy) is
@@ -189,17 +216,24 @@ class MultiHostDriver:
 
     def __init__(self, targets: Sequence[MemDevice], outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
-                 posted_writes: bool = True, engine: str = "python") -> None:
+                 posted_writes: bool = True, engine: str = "python",
+                 block_size: int = 1) -> None:
         if not targets:
             raise ValueError("need at least one host target")
         if engine not in ("python", "scan"):
             raise ValueError(f"multi-host engine must be python|scan, "
                              f"got {engine!r}")
+        from repro.core.replay.spec import validate_block_size
+
         self.targets = list(targets)
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
         self.engine = engine
+        self.block_size = validate_block_size(block_size)
+        if self.block_size > 1 and engine != "scan":
+            raise ValueError(
+                f"block_size applies to engine='scan', not {engine!r}")
 
     def run(self, traces: Sequence[Iterable[Access]],
             start_tick: int = 0) -> MultiHostResult:
@@ -210,7 +244,8 @@ class MultiHostDriver:
             return MultiHostReplay(
                 self.targets, outstanding=self.outstanding,
                 issue_overhead_ns=self.issue_overhead_ns,
-                posted_writes=self.posted_writes).run(
+                posted_writes=self.posted_writes,
+                block_size=self.block_size).run(
                     [list(t) for t in traces], start_tick)
 
         if len(traces) != len(self.targets):

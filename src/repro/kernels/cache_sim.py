@@ -229,6 +229,34 @@ def _cache_sim_fused_kernel(pages_ref, writes_ref, hits_ref, evicts_ref,
     jax.lax.fori_loop(0, chunk, body, 0)
 
 
+def fill_latency_assoc(hits, evicts, arr_ns, *, hit_ns: int, miss_ns: int,
+                       miss_occ_ns: int, wb_ns: int):
+    """Recompute the fused kernel's latency stream from its decisions and
+    arrivals with the associative busy-until formulation shared with the
+    replay engines (:func:`repro.core.replay.assoc.busy_until`).
+
+    The kernel's fill path is a gated max-plus chain — misses occupy the
+    cache-DRAM fill stage for ``miss_occ_ns`` each, hits bypass it — so
+    given the arrival stream the whole latency recurrence is one
+    associative scan, **bit-identical** to the sequential in-kernel chain
+    (tested against both the kernel and the ref twin).  Used by
+    ``run_pallas(validate=True)`` to cross-check every kernel run in the
+    golden-trace suite.
+    """
+    from repro.core.replay.assoc import busy_until
+
+    hits = jnp.asarray(hits, bool)
+    evicts = jnp.asarray(evicts, bool)
+    arr = jnp.asarray(arr_ns)
+    miss = ~hits
+    free = busy_until(arr, jnp.full(arr.shape, miss_occ_ns, arr.dtype),
+                      active=miss, init=0)
+    start = free - miss_occ_ns                  # fill-stage grant per miss
+    lat = jnp.where(hits, hit_ns,
+                    start - arr + miss_ns + jnp.where(evicts, wb_ns, 0))
+    return lat.astype(arr.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "num_sets", "ways", "policy", "chunk", "interpret", "outstanding",
     "issue_ns", "hit_ns", "miss_ns", "miss_occ_ns", "wb_ns"))

@@ -2,9 +2,17 @@
 
     PYTHONPATH=src python tests/golden/regen.py
 
-Refuses to write if the interpreted and scan engines disagree — a fixture
-must never pin a divergence.  Rerun only after an *intentional*
-timing-model change, and mention the regeneration in the commit message.
+Two refusal rules protect the pins:
+
+* **No lane divergence** — the interpreted driver, the fused scan, the
+  blocked scan, and (where it certifies the stack) the associative lane
+  must agree tick-for-tick before anything is written; the pallas runner's
+  built-in cross-check (``validate=True``) guards its analytic chain.
+* **No silent rewrites** — any scenario already pinned in the existing
+  fixture must regenerate to *exactly* the same values; a mismatch aborts.
+  New scenarios may be appended, history is never rewritten.  After an
+  intentional timing-model change, delete the stale fixture entries first
+  and mention the regeneration in the commit message.
 """
 
 from __future__ import annotations
@@ -19,17 +27,35 @@ from golden import scenarios as sc  # noqa: E402
 
 
 def regen() -> dict:
+    old = sc.load_fixture()["scenarios"] if sc.FIXTURE.exists() else {}
+    dropped = sorted(set(old) - set(sc.scenario_names()))
+    if dropped:
+        raise SystemExit(
+            f"scenario(s) {dropped} are pinned but gone from the scenario "
+            "table — refusing to drop committed history (delete the stale "
+            "fixture entries first if the removal is intentional)")
     fixture = {"format": 1, "scenarios": {}}
     for name in sc.scenario_names():
         py = sc.run_python(name)
-        scan = sc.run_scan(name)
-        if py != scan:
+        for lane, run in (("scan", sc.run_scan),
+                          ("scan[blocked]", sc.run_scan_blocked)):
+            got = run(name)
+            if py != got:
+                raise SystemExit(
+                    f"{name}: python and {lane} engines disagree — refusing "
+                    "to pin a divergence (fix the engines first)")
+        if sc.assoc_supported(name) and py != sc.run_assoc(name):
             raise SystemExit(
-                f"{name}: python and scan engines disagree — refusing to "
+                f"{name}: python and assoc engines disagree — refusing to "
                 "pin a divergence (fix the engines first)")
         entry = {"python_scan": py}
         if sc.pallas_supported(name):
             entry["pallas"] = sc.run_pallas(name)
+        if name in old and old[name] != entry:
+            raise SystemExit(
+                f"{name}: regenerated values differ from the committed pin "
+                "— refusing to rewrite history (delete the stale entry "
+                "first if the timing-model change is intentional)")
         fixture["scenarios"][name] = entry
         print(f"  {name}: ok")
     return fixture

@@ -8,17 +8,27 @@ pairwise python==scan property tests cannot catch.
 
 Contracts pinned per scenario:
 
-* ``python_scan`` — per-access latency ticks that BOTH the interpreted
-  ``TraceDriver``/``MultiHostDriver`` path and the fused lax.scan replay
-  must reproduce exactly (they are tick-identical by construction; the
-  fixture pins them to a fixed history).
+* ``python_scan`` — per-access latency ticks that the interpreted
+  ``TraceDriver``/``MultiHostDriver`` path, the fused lax.scan replay, the
+  **blocked** scan (``block_size=BLOCK_SIZE``), and the **associative**
+  log-depth lane (where it certifies the stack — stateless DRAM/PMEM
+  media) must ALL reproduce exactly.  One pin, every tick-exact lane.
 * ``pallas`` — the Pallas engine's own per-access latencies where the
   engine supports the stack (cached CXL-SSD).  Its analytic latency model
   is *not* tick-identical to python; pinning its output separately catches
-  silent regressions in that model too.
+  silent regressions in that model too.  The golden runner passes
+  ``validate=True`` so every conformance pass also cross-checks the
+  in-kernel latency chain against the shared associative reconstruction.
+
+The ``@stream`` scenarios replay with ``outstanding=32`` — the
+bandwidth-bound regime the associative lane is built for (it converges in
+a couple of sweeps there, vs. crawling through the LFB feedback on the
+``outstanding=8`` scenarios).
 
 Regenerate with ``PYTHONPATH=src python tests/golden/regen.py`` after an
-intentional timing-model change, and say so in the commit message.
+intentional timing-model change, and say so in the commit message.  Regen
+refuses to alter any previously pinned scenario — history can only be
+extended, never silently rewritten.
 """
 
 from __future__ import annotations
@@ -34,6 +44,9 @@ CACHE_KW = dict(capacity_bytes=16 * 4096, mshr_entries=4, writeback_buffer=2)
 DEVICES = ["dram", "cxl-dram", "pmem", "cxl-ssd", "cxl-ssd-cache"]
 N_ACCESSES = 160
 OUTSTANDING = 8
+STREAM_OUTSTANDING = 32      # @stream scenarios: bandwidth-bound issue depth
+BLOCK_SIZE = 8               # blocked-scan lane pinned alongside B=1
+ASSOC_SWEEPS = 256           # short traces afford a generous Kleene budget
 
 # multi-host tentpole scenario: QoS weights + ECMP on a spine-leaf pool
 MULTI = dict(num_hosts=3, num_leaves=2, num_spines=2,
@@ -44,7 +57,12 @@ def scenario_names():
     names = [f"{d}@{attach}" for d in DEVICES
              for attach in ("direct", "fabric")]
     names.append("multihost-qos-ecmp")
+    names += ["dram@stream", "pmem@stream"]
     return names
+
+
+def scenario_outstanding(name: str) -> int:
+    return STREAM_OUTSTANDING if name.endswith("@stream") else OUTSTANDING
 
 
 def make_trace(seed: int, n: int = N_ACCESSES, pages: int = 24,
@@ -66,7 +84,8 @@ def _mk_device(name: str):
 
 
 def make_target(name: str):
-    """Fresh device for ``<device>@<attach>`` scenarios."""
+    """Fresh device for ``<device>@<attach>`` scenarios (``@stream`` is
+    directly attached, replayed at the streaming issue depth)."""
     from repro.core.fabric import Fabric
 
     device, attach = name.split("@")
@@ -132,31 +151,61 @@ def run_python(name: str):
         return [_summ(tap.latencies, host)
                 for tap, host in zip(taps, res.per_host)]
     tap = ServiceTap(make_target(name))
-    res = TraceDriver(tap, outstanding=OUTSTANDING).run(
+    res = TraceDriver(tap, outstanding=scenario_outstanding(name)).run(
         make_trace(hash_seed(name)))
     return _summ(tap.latencies, res)
 
 
-def run_scan(name: str):
-    """Fused lax.scan replay: per-access latencies + scalar summary."""
+def run_scan(name: str, block_size: int = 1):
+    """Fused lax.scan replay (optionally blocked): per-access latencies +
+    scalar summary.  Any ``block_size`` must match the ``python_scan``
+    pins exactly."""
     from repro.core.replay import MultiHostReplay, ReplayEngine
 
     if name == "multihost-qos-ecmp":
-        eng = MultiHostReplay(make_multi_targets(), outstanding=OUTSTANDING)
+        eng = MultiHostReplay(make_multi_targets(), outstanding=OUTSTANDING,
+                              block_size=block_size)
         res, lat = eng.run_recorded(multi_traces())
         return [_summ(l.tolist(), host)
                 for l, host in zip(lat, res.per_host)]
-    res = ReplayEngine(make_target(name), outstanding=OUTSTANDING).run(
+    res = ReplayEngine(make_target(name),
+                       outstanding=scenario_outstanding(name),
+                       block_size=block_size).run(make_trace(hash_seed(name)))
+    return _summ(res.latency_ticks.tolist(), res)
+
+
+def run_scan_blocked(name: str):
+    """Blocked-scan lane (``block_size=BLOCK_SIZE``): must match the
+    ``python_scan`` pins — block seams are tick-invisible."""
+    return run_scan(name, block_size=BLOCK_SIZE)
+
+
+def run_assoc(name: str):
+    """Log-depth associative lane: must match the ``python_scan`` pins on
+    every stack it certifies (stateless DRAM/PMEM media)."""
+    from repro.core.replay import AssocReplayEngine
+
+    res = AssocReplayEngine(make_target(name),
+                            outstanding=scenario_outstanding(name),
+                            max_sweeps=ASSOC_SWEEPS).run(
         make_trace(hash_seed(name)))
     return _summ(res.latency_ticks.tolist(), res)
 
 
-def run_pallas(name: str):
-    """Pallas engine (cached CXL-SSD only): its own pinned latencies."""
-    from repro.core.workloads.driver import TraceDriver
+def assoc_supported(name: str) -> bool:
+    return name.split("@")[0] in ("dram", "cxl-dram", "pmem") \
+        and name != "multihost-qos-ecmp"
 
-    res = TraceDriver(make_target(name), outstanding=OUTSTANDING,
-                      engine="pallas").run(make_trace(hash_seed(name)))
+
+def run_pallas(name: str):
+    """Pallas engine (cached CXL-SSD only): its own pinned latencies, with
+    the associative latency reconstruction cross-check enabled."""
+    from repro.core.replay.pallas_engine import run_pallas as _run
+    from repro.core.replay.spec import trace_to_arrays
+
+    addrs, writes, size = trace_to_arrays(make_trace(hash_seed(name)))
+    res = _run(make_target(name), addrs, writes, size=size,
+               outstanding=scenario_outstanding(name), validate=True)
     return _summ(res.latency_ticks.tolist(), res)
 
 

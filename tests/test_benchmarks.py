@@ -40,3 +40,43 @@ def test_trace_generator_explicitly_seeded():
     t2 = fabric_sweep._stream_trace(3, n=500)
     assert t1 == t2
     assert t1 != fabric_sweep._stream_trace(4, n=500)
+
+
+# Perf-floor guard over the RECORDED replay benchmark (deterministic — it
+# reads the committed results/BENCH_replay.json, so CI compares simulation
+# artifacts, never runner-to-runner wall-clock noise).  A PR that commits a
+# regressed artifact — a lost exactness bit or a DRAM-lane speedup below
+# the pinned floor — fails here.
+SPEEDUP_FLOORS = {"dram": 20.0, "pmem": 20.0, "cxl-ssd-cache": 10.0}
+
+
+def _load_replay_report():
+    path = Path(__file__).resolve().parents[1] / "results" / "BENCH_replay.json"
+    assert path.exists(), \
+        "missing results/BENCH_replay.json; run benchmarks/replay_bench.py"
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def test_replay_bench_exactness_flags_recorded_true():
+    report = _load_replay_report()
+    for dev, lanes in report["devices"].items():
+        for lane, v in lanes.items():
+            if isinstance(v, dict) and "tick_exact_vs_python" in v:
+                assert v["tick_exact_vs_python"], \
+                    f"{dev}/{lane} recorded as not tick-exact"
+    assert report["devices"]["cxl-ssd-cache"]["pallas"]["decisions_exact"]
+
+
+def test_replay_bench_speedups_meet_pinned_floor():
+    report = _load_replay_report()
+    assert report["meets_target"] is True
+    # the benchmark's own targets must match this guard's pins — a target
+    # bumped in replay_bench.py without updating the floor (or vice versa)
+    # would make meets_target and CI test different thresholds
+    assert report["target_speedup"] == SPEEDUP_FLOORS
+    for dev, floor in SPEEDUP_FLOORS.items():
+        best = report["devices"][dev]["best_exact_speedup"]
+        assert best >= floor, \
+            f"{dev}: recorded best exact-lane speedup {best:.1f}x fell " \
+            f"below the pinned {floor:.0f}x floor"

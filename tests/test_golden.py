@@ -71,6 +71,30 @@ def test_scan_engine_matches_golden(fixture, name):
         _assert_match(expected, actual, "scan", name)
 
 
+@pytest.mark.parametrize("name", sc.scenario_names())
+def test_blocked_scan_engine_matches_golden(fixture, name):
+    """The blocked scan (B accesses per sequential step) reuses the
+    python_scan pins verbatim: block seams must be tick-invisible."""
+    expected = fixture[name]["python_scan"]
+    actual = sc.run_scan_blocked(name)
+    if name == "multihost-qos-ecmp":
+        for h, (e, a) in enumerate(zip(expected, actual)):
+            _assert_match(e, a, "scan[blocked]", f"{name}[h{h}]")
+    else:
+        _assert_match(expected, actual, "scan[blocked]", name)
+
+
+@pytest.mark.parametrize("name",
+                         [n for n in sc.scenario_names()
+                          if sc.assoc_supported(n)])
+def test_assoc_engine_matches_golden(fixture, name):
+    """The log-depth associative lane reuses the python_scan pins verbatim
+    on every stack it certifies (stateless DRAM/PMEM media)."""
+    expected = fixture[name]["python_scan"]
+    actual = sc.run_assoc(name)
+    _assert_match(expected, actual, "assoc", name)
+
+
 @pytest.mark.parametrize("name",
                          [n for n in sc.scenario_names()
                           if sc.pallas_supported(n)])

@@ -12,7 +12,9 @@ import pytest
 from repro.core.cache.dram_cache import DRAMCacheConfig
 from repro.core.devices import DRAMDevice, make_device
 from repro.core.fabric import Fabric, MemoryPool
-from repro.core.replay import MultiHostReplay, ReplayEngine, ReplayUnsupported
+from repro.core.replay import (AssocReplayEngine, MultiHostReplay,
+                               ReplayEngine, ReplayUnsupported, busy_until,
+                               port_busy_until)
 from repro.core.workloads.driver import MultiHostDriver, TraceDriver
 
 # One cache geometry reused everywhere so the jitted replay program is
@@ -173,6 +175,15 @@ def test_unsupported_shapes_raise():
         ReplayEngine(dev).run(_trace(8, n=64))
 
 
+def test_empty_trace_refused_on_array_entry_points():
+    empty = np.array([], np.int64)
+    nowrites = np.array([], bool)
+    with pytest.raises(ReplayUnsupported, match="empty"):
+        ReplayEngine(_mk("dram")).run_arrays(empty, nowrites)
+    with pytest.raises(ReplayUnsupported, match="empty"):
+        AssocReplayEngine(_mk("dram")).run_arrays(empty, nowrites)
+
+
 def test_fabric_with_prior_traffic_raises():
     """Shared ports carry busy-until state from other mounts; a zeroed
     replay would silently diverge, so it must refuse instead."""
@@ -296,15 +307,22 @@ if HAVE_HYPOTHESIS:
 # --------------------------------------------------------- CI smoke (sat.)
 @pytest.mark.slow
 def test_replay_smoke_all_engines():
-    """Benchmark smoke: tiny trace through all three engines.  scan must be
-    tick-exact; pallas must agree on hit/evict decisions with the cache
-    oracle.  (Gated behind the slow marker; CI runs it in a dedicated job.)"""
+    """Benchmark smoke: tiny trace through every engine lane.  scan,
+    blocked scan and assoc must be tick-exact; pallas must agree on
+    hit/evict decisions with the cache oracle.  (Gated behind the slow
+    marker; CI runs it in a dedicated job.)"""
     from repro.core.cache.trace_sim import TraceCacheSim
 
     trace = _trace(60, n=512)
     py = TraceDriver(_mk("cxl-ssd-cache")).run(trace)
     sc = TraceDriver(_mk("cxl-ssd-cache"), engine="scan").run(trace)
     _assert_equal(py, sc)
+    bl = TraceDriver(_mk("cxl-ssd-cache"), engine="scan",
+                     block_size=8).run(trace)
+    _assert_equal(py, bl)
+    py_d = TraceDriver(_mk("dram")).run(trace)
+    av = TraceDriver(_mk("dram"), engine="assoc").run(trace)
+    _assert_equal(py_d, av)
     pl_res = TraceDriver(_mk("cxl-ssd-cache"), engine="pallas").run(trace)
     pages = np.asarray([a // 4096 for a, _, _ in trace], np.int32)
     writes = np.asarray([w for _, _, w in trace])
@@ -312,6 +330,240 @@ def test_replay_smoke_all_engines():
                                ways=CACHE_KW["capacity_bytes"] // 4096,
                                policy="lru").run(pages, writes)
     assert (np.asarray(hits) == pl_res.hit_flags).all()
+
+
+# ----------------------------------------- assoc lane (log-depth replay)
+def test_assoc_matches_python_stateless_devices():
+    """The associative lane is tick-identical on bandwidth-bound DRAM/PMEM
+    replays (outstanding=32: the streaming regime the drivers are sized
+    for)."""
+    trace = _trace(80)
+    for name in ("dram", "pmem"):
+        for st in (0, 12345):
+            py = TraceDriver(_mk(name)).run(trace, start_tick=st)
+            rp = AssocReplayEngine(_mk(name)).run(trace, start_tick=st)
+            _assert_equal(py, rp)
+
+
+def test_assoc_pmem_row_hits_exact():
+    """Row-buffer locality is elementwise data in the assoc lane; a
+    line-sequential trace exercises it heavily."""
+    trace = [(i * 64, 64, i % 3 == 0) for i in range(1200)]
+    dev = _mk("pmem")
+    py = TraceDriver(dev).run(trace)
+    rp = AssocReplayEngine(_mk("pmem")).run(trace)
+    _assert_equal(py, rp)
+    assert dev.stats["row_hits"] > 0
+    assert int(rp.hit_flags.sum()) == dev.stats["row_hits"]
+
+
+def test_assoc_non_posted_writes_exact():
+    trace = _trace(81, write_frac=0.5)
+    py = TraceDriver(_mk("dram"), posted_writes=False).run(trace)
+    rp = AssocReplayEngine(_mk("dram"), posted_writes=False).run(trace)
+    _assert_equal(py, rp)
+
+
+def test_assoc_refuses_latency_bound_instead_of_diverging():
+    """A small LFB makes the completion feedback chain through the whole
+    trace; the Kleene budget runs out and the lane must refuse — never
+    return an uncertified result."""
+    with pytest.raises(ReplayUnsupported, match="not certified"):
+        AssocReplayEngine(_mk("cxl-dram"), outstanding=4).run(_trace(82))
+
+
+def test_assoc_refuses_stateful_media():
+    for name in ("cxl-ssd", "cxl-ssd-cache"):
+        with pytest.raises(ReplayUnsupported, match="per-access state"):
+            AssocReplayEngine(_mk(name)).run(_trace(83, n=64))
+
+
+def test_assoc_refuses_ecmp_routes():
+    fab = Fabric.build("spine_leaf", num_hosts=1, num_devices=1,
+                       num_leaves=2, num_spines=3, ecmp=True)
+    target = fab.mount("h0", "d0", DRAMDevice())
+    with pytest.raises(ReplayUnsupported, match="ECMP"):
+        AssocReplayEngine(target).run(_trace(84, n=64))
+
+
+def test_driver_assoc_engine_dispatch():
+    trace = _trace(85)
+    py = TraceDriver(_mk("dram")).run(trace)
+    ap = TraceDriver(_mk("dram"), engine="assoc").run(trace)
+    _assert_equal(py, ap)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_assoc_solver_backends_agree(backend):
+    """The solver core is one formula set behind an ops shim; both the
+    numpy (CPU) and eager-jnp (accelerator) instantiations must be
+    tick-identical to the interpreted driver."""
+    trace = _trace(89, n=900)
+    for name in ("dram", "pmem"):
+        py = TraceDriver(_mk(name)).run(trace)
+        rp = AssocReplayEngine(_mk(name), backend=backend).run(trace)
+        _assert_equal(py, rp)
+
+
+def test_local_sort_equals_full_sort_for_bounded_displacement():
+    """The accelerator path's two-pass block sort: exact on any stream
+    whose elements sit within block//2 of their sorted slot (the
+    completion-stream shape: monotone chain + bounded tails)."""
+    from jax.experimental import enable_x64
+
+    from repro.core.replay.assoc import _local_sort
+
+    rng = np.random.default_rng(7)
+    with enable_x64():
+        for _ in range(20):
+            n = int(rng.integers(5, 700))
+            occ = int(rng.integers(1, 40))
+            spread = int(rng.integers(0, 1500))
+            base = np.cumsum(rng.integers(occ, occ + 25, n))
+            x = (base + rng.integers(0, spread + 1, n)).astype(np.int64)
+            block = max(8, 2 * (spread // occ + 1))
+            got = np.asarray(_local_sort(x, block))
+            np.testing.assert_array_equal(got, np.sort(x))
+
+
+# ------------------------------------------------- blocked replay (B > 1)
+def test_block_size_invariance():
+    """B in {1, 8, 64, len(trace)}: the carry crosses block seams
+    untouched, so every block size is tick-identical."""
+    trace = _trace(86, n=80)
+    py = TraceDriver(_mk("cxl-dram"), outstanding=8).run(trace)
+    for b in (1, 8, 64, len(trace)):
+        rp = ReplayEngine(_mk("cxl-dram"), outstanding=8,
+                          block_size=b).run(trace)
+        _assert_equal(py, rp)
+
+
+def test_blocked_stateful_stack_exact():
+    trace = _trace(87, n=600, write_frac=0.5)
+    py = TraceDriver(_mk("cxl-ssd-cache"), outstanding=8).run(trace)
+    rp = ReplayEngine(_mk("cxl-ssd-cache"), outstanding=8,
+                      block_size=8).run(trace)
+    _assert_equal(py, rp)
+
+
+def test_block_size_validated():
+    with pytest.raises(ValueError):
+        ReplayEngine(_mk("dram"), block_size=0)
+    with pytest.raises(ValueError):
+        TraceDriver(_mk("dram"), engine="scan", block_size=-3)
+    # blocking only shapes the scan lowering; other engines refuse loudly
+    # instead of silently ignoring the knob
+    for eng in ("python", "assoc", "pallas"):
+        with pytest.raises(ValueError, match="engine='scan'"):
+            TraceDriver(_mk("dram"), engine=eng, block_size=8)
+    with pytest.raises(ValueError, match="engine='scan'"):
+        MultiHostDriver([_mk("dram")], engine="python", block_size=8)
+
+
+def test_multihost_blocked_seam_reproduces_issue_race_ties():
+    """Satellite regression: identical per-host traces tie the
+    earliest-candidate-host race on EVERY step, so host selection relies
+    purely on the lowest-index tie-break; with block_size=7 over 3x30
+    steps the seams land mid-tie (step 7, 14, ... are all ties).  The
+    blocked multi-host scan must reproduce the interpreted race exactly
+    across those seams."""
+    tr = _trace(88, n=30)
+    traces = [list(tr) for _ in range(3)]
+
+    def views():
+        fab = Fabric.build("single_switch", num_hosts=3, num_devices=1)
+        pool = MemoryPool(fab, {"d0": DRAMDevice()})
+        return pool.views(["h0", "h1", "h2"])
+
+    py = MultiHostDriver(views()).run(traces)
+    for b in (1, 7):
+        rp = MultiHostReplay(views(), block_size=b).run(traces)
+        _assert_multi_equal(py, rp)
+    # the tie-break really is exercised: every host issued work
+    assert all(h.accesses == 30 for h in py.per_host)
+
+
+# ------------------------- associative transport primitive (satellite)
+def _busy_fold(arr, svc, act, init):
+    f, out = init, []
+    for a, s, m in zip(arr, svc, act):
+        if m:
+            f = max(int(a), f) + int(s)
+        out.append(f)
+    return np.asarray(out, np.int64)
+
+
+def _port_fold(arr, svc, ports, num_ports, init):
+    f = [init] * num_ports
+    out = []
+    for a, s, p in zip(arr, svc, ports):
+        f[p] = max(int(a), f[p]) + int(s)
+        out.append(f[p])
+    return np.asarray(out, np.int64)
+
+
+def _random_transport_case(seed, n=257):
+    """Random arrival/service sequences, including QoS-weighted service
+    shapes: the weighted virtual-finish-time update ``vft = max(arr, vft)
+    + pace`` is exactly this fold with per-access paces."""
+    rng = np.random.default_rng(seed)
+    arr = np.sort(rng.integers(0, 50_000, n)) - 10_000   # negatives too
+    rng.shuffle(arr[: n // 4])                           # local disorder
+    weights = rng.choice([1, 2, 3, 7], n)                # QoS weight mix
+    svc = rng.integers(0, 900, n) * weights              # weighted paces
+    act = rng.random(n) < 0.8
+    ports = rng.integers(0, 5, n)                        # ECMP route choice
+    return arr.astype(np.int64), svc.astype(np.int64), act, ports
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_assoc_busy_until_matches_sequential_fold(seed):
+    from jax.experimental import enable_x64
+
+    arr, svc, act, _ = _random_transport_case(seed)
+    with enable_x64():
+        got = np.asarray(busy_until(arr, svc, active=act, init=0))
+        ungated = np.asarray(busy_until(arr, svc))
+    assert (got == _busy_fold(arr, svc, act, 0)).all()
+    # default init never binds: identical to a fold seeded below min(arr)
+    ref = _busy_fold(arr, svc, np.ones_like(act), int(arr.min()) - 1)
+    assert (ungated == ref).all()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_assoc_port_busy_until_matches_sequential_fold(seed):
+    """ECMP route-choice case: each access occupies one of P interleaved
+    port chains; the one-hot affine-max scan must equal the per-port
+    fold."""
+    from jax.experimental import enable_x64
+
+    arr, svc, _, ports = _random_transport_case(seed)
+    with enable_x64():
+        got = np.asarray(port_busy_until(arr, svc, ports, 5, init=0))
+    ref = _port_fold(arr, svc, ports, 5, 0)
+    assert (got == ref).all()
+
+
+def test_fill_latency_assoc_matches_kernel_and_ref():
+    """The shared associative formulation reproduces the Pallas kernel's
+    in-pass latency chain bit-for-bit (and hence the ref twin)."""
+    from repro.kernels.cache_sim import cache_sim_fused, fill_latency_assoc
+    from repro.kernels.ref import cache_sim_fused_ref
+
+    rng = np.random.default_rng(42)
+    pages = rng.integers(0, 256, 4000).astype(np.int32)
+    writes = rng.random(4000) < 0.4
+    kw = dict(num_sets=16, ways=4, policy="lru", outstanding=4, issue_ns=3,
+              hit_ns=50, miss_ns=5213, miss_occ_ns=213, wb_ns=87)
+    h, e, lat, arr = cache_sim_fused(pages, writes, **kw)
+    lat_assoc = fill_latency_assoc(np.asarray(h), np.asarray(e),
+                                   np.asarray(arr), hit_ns=kw["hit_ns"],
+                                   miss_ns=kw["miss_ns"],
+                                   miss_occ_ns=kw["miss_occ_ns"],
+                                   wb_ns=kw["wb_ns"])
+    np.testing.assert_array_equal(np.asarray(lat_assoc), np.asarray(lat))
+    _, _, lat_ref = cache_sim_fused_ref(pages, writes, **kw)
+    np.testing.assert_array_equal(np.asarray(lat_assoc), np.asarray(lat_ref))
 
 
 # ------------------------------------------------- QoS + ECMP (tentpole)
@@ -423,3 +675,49 @@ if HAVE_HYPOTHESIS:
         py = MultiHostDriver(_ecmp_views(qos=True)).run(traces)
         rp = MultiHostReplay(_ecmp_views(qos=True)).run(traces)
         _assert_multi_equal(py, rp)
+
+    ARRIVALS = st.lists(st.integers(-5_000, 100_000), min_size=64,
+                        max_size=64)
+    SERVICES = st.lists(st.integers(0, 3_000), min_size=64, max_size=64)
+    GATES = st.lists(st.booleans(), min_size=64, max_size=64)
+    PORTS = st.lists(st.integers(0, 3), min_size=64, max_size=64)
+
+    @settings(max_examples=30, deadline=None)
+    @given(arr=ARRIVALS, svc=SERVICES, act=GATES, ports=PORTS,
+           weights=st.lists(st.sampled_from([1, 2, 3, 7]), min_size=64,
+                            max_size=64))
+    def test_property_assoc_transport_matches_fold(arr, svc, act, ports,
+                                                   weights):
+        """Satellite property: the associative max-plus transport equals
+        the sequential busy-until fold for arbitrary arrival/service
+        sequences — including QoS-weighted paces (service = occ * W/w, the
+        virtual-finish-time update) and ECMP route choices (per-access
+        port selection)."""
+        from jax.experimental import enable_x64
+
+        arr = np.asarray(arr, np.int64)
+        paced = np.asarray(svc, np.int64) * np.asarray(weights, np.int64)
+        act = np.asarray(act)
+        ports = np.asarray(ports)
+        with enable_x64():
+            gated = np.asarray(busy_until(arr, paced, active=act, init=0))
+            perport = np.asarray(port_busy_until(arr, paced, ports, 4,
+                                                 init=0))
+        assert (gated == _busy_fold(arr, paced, act, 0)).all()
+        assert (perport == _port_fold(arr, paced, ports, 4, 0)).all()
+
+    @settings(max_examples=6, deadline=None)
+    @given(pages=PAGES, writes=WRITES, offs=OFFSETS,
+           name=st.sampled_from(["dram", "pmem"]))
+    def test_property_assoc_matches_python_or_refuses(pages, writes, offs,
+                                                      name):
+        """The assoc lane either reproduces the interpreted driver
+        tick-for-tick or raises — silence is never an option."""
+        trace = [(p * 4096 + o * 64, 64, w)
+                 for p, o, w in zip(pages, offs, writes)]
+        py = TraceDriver(_mk(name)).run(trace)
+        try:
+            rp = AssocReplayEngine(_mk(name)).run(trace)
+        except ReplayUnsupported:
+            return
+        _assert_equal(py, rp)
