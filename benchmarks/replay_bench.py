@@ -5,7 +5,10 @@ Three device classes, every fast lane the repo has, one JSON artifact:
 * ``dram`` / ``pmem`` — python vs scan vs blocked scan (block-size sweep)
   vs the log-depth associative lane (``repro.core.replay.assoc``);
 * ``cxl-ssd-cache`` — python vs scan vs blocked scan vs the Pallas kernel
-  (interpret mode on CPU).
+  (interpret mode on CPU);
+* ``multihost`` — cached CXL-SSD behind a shared fabric at 2 and 4 hosts
+  (private per-host mounts), interpreted ``MultiHostDriver`` vs the fused
+  ``MultiHostReplay`` stacked-state scan, exactness asserted per lane.
 
 Methodology (the numbers this file writes are compared across PRs):
 
@@ -56,6 +59,9 @@ FOOTPRINT_PAGES = 1024      # 4 MB working set -> ~45% hit rate
 WRITE_FRAC = 0.3
 BLOCK_SIZES = (8, 32)       # blocked-scan sweep
 TARGETS = {"dram": 20.0, "pmem": 20.0, "cxl-ssd-cache": 10.0}
+MULTI_HOSTS = (2, 4)        # multihost lane: cached CXL-SSD x host count
+MULTI_N = 50_000            # accesses per host
+MULTI_TARGET = 5.0          # fused speedup floor (CI-guarded)
 OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir, "results",
                         "BENCH_replay.json")
 
@@ -158,6 +164,61 @@ def _bench_device(name: str, trace, addrs, writes) -> dict:
     return lanes
 
 
+def _multi_targets(nh: int):
+    from repro.core.fabric import Fabric
+
+    fab = Fabric.build("two_level", num_hosts=nh, num_devices=nh,
+                       num_leaves=2)
+    return [fab.mount(f"h{i}", f"d{i}", _mk_device("cxl-ssd-cache"))
+            for i in range(nh)]
+
+
+def _multi_exact(py, rp) -> bool:
+    return (py.elapsed_ticks == rp.elapsed_ticks
+            and all(a.elapsed_ticks == b.elapsed_ticks
+                    and a.sum_latency_ticks == b.sum_latency_ticks
+                    and a.end_tick == b.end_tick
+                    for a, b in zip(py.per_host, rp.per_host)))
+
+
+def _bench_multihost(nh: int) -> dict:
+    """Cached CXL-SSD x ``nh`` hosts: the stacked-state multi-host scan
+    (per-host private cache over per-host flash) vs the interpreted
+    interleaving driver, on one shared two-level fabric."""
+    from repro.core.replay import MultiHostReplay
+    from repro.core.workloads.driver import MultiHostDriver
+
+    rng = np.random.default_rng(7)
+    traces = []
+    for h in range(nh):
+        pages = rng.integers(0, FOOTPRINT_PAGES, MULTI_N)
+        addrs = pages * 4096 + rng.integers(0, 64, MULTI_N) * 64
+        writes = rng.random(MULTI_N) < WRITE_FRAC
+        traces.append([(int(a), 64, bool(w))
+                       for a, w in zip(addrs, writes)])
+    n_total = nh * MULTI_N
+    t0 = time.perf_counter()
+    py = MultiHostDriver(_multi_targets(nh)).run(traces)
+    py_s = time.perf_counter() - t0
+    block = BLOCK_SIZES[0]
+    first, steady, rp = _steady(
+        lambda: MultiHostReplay(_multi_targets(nh),
+                                block_size=block).run(traces))
+    exact = _multi_exact(py, rp)
+    assert exact, "multi-host fused replay diverged from the driver"
+    return {
+        "hosts": nh,
+        "accesses_per_host": MULTI_N,
+        "block_size": block,
+        "python_seconds": py_s,
+        "steady_seconds": steady,
+        "compile_seconds": max(0.0, first - steady),
+        "acc_per_sec": n_total / steady,
+        "speedup_vs_python": py_s / steady,
+        "tick_exact_vs_python": bool(exact),
+    }
+
+
 def bench_replay() -> List[Row]:
     trace = _trace(N)
     addrs = np.asarray([a for a, _, _ in trace], np.int64)
@@ -193,14 +254,27 @@ def bench_replay() -> List[Row]:
             rows.append((f"replay/{name}/{lane}", s * 1e6 / N,
                          f"{v['speedup_vs_python']:.1f}x,{tag}"))
 
+    report["multihost"] = {}
+    for nh in MULTI_HOSTS:
+        lane = report["multihost"][f"cxl-ssd-cache x{nh}"] = \
+            _bench_multihost(nh)
+        rows.append((f"replay/multihost/cxl-ssd-cache-x{nh}",
+                     lane["steady_seconds"] * 1e6 / (nh * MULTI_N),
+                     f"{lane['speedup_vs_python']:.1f}x,exact"))
+    report["multihost_target_speedup"] = MULTI_TARGET
+    report["multihost_meets_target"] = all(
+        v["speedup_vs_python"] >= MULTI_TARGET
+        for v in report["multihost"].values())
+
     report["speedup_dram_best"] = report["devices"]["dram"][
         "best_exact_speedup"]
     report["speedup_pmem_best"] = report["devices"]["pmem"][
         "best_exact_speedup"]
     report["speedup_cxl_ssd_cache_best"] = report["devices"][
         "cxl-ssd-cache"]["best_exact_speedup"]
-    report["meets_target"] = all(report["devices"][d]["meets_target"]
-                                 for d in TARGETS)
+    report["meets_target"] = all(
+        report["devices"][d]["meets_target"] for d in TARGETS) and \
+        report["multihost_meets_target"]
     os.makedirs(os.path.dirname(os.path.abspath(OUT_JSON)), exist_ok=True)
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)

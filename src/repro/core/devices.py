@@ -260,7 +260,13 @@ class CXLSSDDevice(MemDevice):
 
 
 class CachedCXLSSDDevice(MemDevice):
-    """The paper's contribution: CXL-SSD fronted by the DRAM cache layer."""
+    """The paper's contribution: CXL-SSD fronted by the DRAM cache layer.
+
+    ``hil=`` mounts an *existing* flash backend instead of building a fresh
+    one: several cached front-ends sharing one ``HIL`` model the pooled
+    CXL-SSD shape — per-host private DRAM caches over shared FTL/PAL flash
+    — where cross-host contention emerges from the shared die/channel
+    busy-until state (and the shared free-block pool under GC)."""
 
     name = "cxl-ssd-cache"
     is_cxl = True
@@ -268,9 +274,13 @@ class CachedCXLSSDDevice(MemDevice):
     def __init__(self, engine: Optional[EventEngine] = None,
                  ssd_cfg: SSDConfig | None = None,
                  cache_cfg: DRAMCacheConfig | None = None,
-                 link: CXLLink | None = None) -> None:
+                 link: CXLLink | None = None,
+                 hil: HIL | None = None) -> None:
         super().__init__(engine)
-        self.hil = HIL(ssd_cfg or _memory_semantic_ssd())
+        if hil is not None and ssd_cfg is not None:
+            raise ValueError("pass ssd_cfg or a shared hil, not both")
+        self.hil = hil if hil is not None else HIL(ssd_cfg or
+                                                  _memory_semantic_ssd())
         self.cache = DRAMCache(cache_cfg or DRAMCacheConfig(), self.hil)
         self.link = link or CXLLink()
 

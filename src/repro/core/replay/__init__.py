@@ -13,10 +13,16 @@ that are tick-identical to the interpreted
   zero sequential scan steps; certified tick-exact or it refuses
   (:mod:`repro.core.replay.assoc`).
 * :class:`MultiHostReplay` — N hosts interleaved onto shared fabric ports
-  and pooled DRAM media (the :class:`MultiHostDriver` fast path), blocked
-  the same way.
+  and pooled media (the :class:`MultiHostDriver` fast path), blocked the
+  same way — any stack-layer media, cached CXL-SSD with private or shared
+  flash included.
+* :mod:`repro.core.replay.stack` — the host-stackable device-state layer
+  both engines consume (``init_state(cfg, n_hosts)`` / ``step(state,
+  access)`` pytrees with a leading host axis; greedy FTL GC inside the
+  scan).
 * :mod:`repro.core.replay.sweep` — vmap-batched design-space sweeps over
-  timing parameters, replacement policy, capacity, and topology.
+  timing parameters, replacement policy, capacity, topology, and host
+  count.
 """
 
 from repro.core.replay.assoc import (
@@ -30,8 +36,10 @@ from repro.core.replay.spec import (
     ReplayUnsupported,
     StackConfig,
     build_stack,
+    media_stack,
     validate_block_size,
 )
+from repro.core.replay.stack import init_state, media_init, media_step, step
 from repro.core.replay.sweep import cache_design_sweep, host_count_sweep
 
 __all__ = [
@@ -45,6 +53,11 @@ __all__ = [
     "busy_until",
     "cache_design_sweep",
     "host_count_sweep",
+    "init_state",
+    "media_init",
+    "media_stack",
+    "media_step",
     "port_busy_until",
+    "step",
     "validate_block_size",
 ]

@@ -6,16 +6,23 @@ per-port busy-until occupancy, then the device media — DRAM timing, PMEM
 row-buffer, the CXL-SSD page-register buffer, or the full DRAM-cache layer
 (fully-associative LRU/FIFO or direct-mapped frames, MSHR coalescing and
 stalls, bounded writeback buffer) backed by the HIL/FTL/PAL flash model
-(log-append allocation, per-die array occupancy with program suspend,
+(log-append allocation with greedy garbage collection when the trace can
+outrun the headroom, per-die array occupancy with program suspend,
 per-channel bus occupancy).
 
+The stateful media/flash machinery lives in :mod:`repro.core.replay.stack`
+— the host-stackable state layer this engine consumes at ``H=1`` and
+:class:`~repro.core.replay.multihost.MultiHostReplay` consumes at ``H=N``.
 The step function mirrors the interpreted path *operation for operation* —
 every ``max(now, busy_until)``, every separately-rounded ``ns()`` constant —
 so the replay is **tick-identical** to
 :meth:`repro.core.workloads.driver.TraceDriver.run` over the same device
 (property-tested in ``tests/test_replay.py``).  Scope cuts are host-checked
 at spec time so they can never silently diverge (one 64 B line per access,
-no FTL garbage collection, packed-field ranges).
+packed-field ranges); runtime-only divergence (a GC free-pool underrun,
+where the interpreted FTL raises "out of space") surfaces as
+:class:`ReplayUnsupported` via the stack's sticky ``bad`` flag — refuse,
+never drift.
 
 Performance notes (XLA:CPU executes a scan body as a sequence of fusion
 thunks, so the step is written to minimize thunks and buffer copies):
@@ -27,7 +34,8 @@ thunks, so the step is written to minimize thunks and buffer copies):
   one scatter;
 * the entire miss machinery (MSHR allocate/stall, eviction writeback queue,
   FTL/PAL flash timing) sits behind one :func:`jax.lax.cond`, which
-  passes the big carry buffers through untouched on hits;
+  passes the big carry buffers through untouched on hits — and the greedy-GC
+  migration loop sits behind a second cond inside that one;
 * MSHR/writeback tables use value sentinels (page ``-1`` = free slot,
   ready ``BIG``) instead of separate mask arrays;
 * transport port busy-until state is a tuple of scalars (hop *h* always
@@ -35,8 +43,10 @@ thunks, so the step is written to minimize thunks and buffer copies):
   elementwise work.
 
 Tick arithmetic runs in int64 under :func:`jax.experimental.enable_x64`
-(scoped — the rest of the process keeps JAX's default 32-bit types); at
-1 tick = 1 ps, int32 would overflow after 2.1 ms of simulated time.
+(scoped — the rest of the process keeps JAX's default 32-bit types; the
+golden suite also runs under ambient ``JAX_ENABLE_X64=1`` in CI to guard
+both entry modes); at 1 tick = 1 ps, int32 would overflow after 2.1 ms of
+simulated time.
 """
 
 from __future__ import annotations
@@ -50,35 +60,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.core.replay import stack
 from repro.core.replay.spec import (
-    DRAM,
-    PMEM,
-    SSD_BUF,
-    SSD_CACHE,
     ReplayUnsupported,
     StackConfig,
     build_stack,
     trace_to_arrays,
     validate_block_size,
 )
+# The packed-frame layout and sentinels are owned by the stack layer now;
+# importers take them from repro.core.replay.stack directly.
+from repro.core.replay.stack import MAX_ACCESSES, _i64
 from repro.core.workloads.driver import TraceResult
-
-# Plain ints: they stay weakly typed so they promote to int64 inside the
-# enable_x64 scope (a jnp.int64 built at import time would truncate to int32).
-BIG = 1 << 62          # order-infinity that survives additions
-FREE = -1              # free-slot sentinel (pages/addresses are >= 0)
-
-# Packed cache-frame layout: stamp-major so argmin == OrderedDict order.
-STAMP_SHIFT = 39
-PAGE_BITS = 38
-PAGE_FIELD = ((1 << PAGE_BITS) - 1) << 1      # bits [38:1]
-STAMP_FIELD = -(1 << STAMP_SHIFT)             # bits [63:39] (sign-extended ok)
-MAX_PAGE = (1 << PAGE_BITS) - 2               # strict: all-ones is reserved
-MAX_ACCESSES = (1 << 23) - 1                  # stamp<<39 must stay positive
-
-
-def _i64(x):
-    return jnp.asarray(x, jnp.int64)
 
 
 # ---------------------------------------------------------------- transport
@@ -109,291 +102,18 @@ def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route):
     return pb, t + p["rt_extra"]
 
 
-# -------------------------------------------------------------- flash (PAL)
-def _pal_read(cfg: StackConfig, p: Dict, f: Dict, t, ppn, en):
-    """Mirror of :meth:`PAL._schedule` (read path, program-suspend rule)."""
-    C, D = cfg.channels, cfg.dies_per_channel
-    ch = ppn % C
-    i = ch * D + (ppn // C) % D
-    db, dp, cb = f["die_busy"], f["die_prog"], f["chan_busy"]
-    dbi, dpi, cbi = db[i], dp[i], cb[ch]
-    ds = jnp.maximum(t, dbi)
-    resume = jnp.minimum(dpi, ds + p["sus_t"])
-    ds = jnp.where(dpi > ds, resume, ds)
-    array_done = ds + p["read_t"]
-    new_dp = jnp.where(dpi > ds, dpi + p["read_t"], dpi)
-    bus_start = jnp.maximum(array_done, cbi)
-    done = bus_start + p["xfer_page"]
-    f = {**f,
-         "die_busy": db.at[i].set(jnp.where(en, done, dbi)),
-         "die_prog": dp.at[i].set(jnp.where(en, new_dp, dpi)),
-         "chan_busy": cb.at[ch].set(jnp.where(en, done, cbi))}
-    return f, done
-
-
-def _pal_prog(cfg: StackConfig, p: Dict, f: Dict, t, ppn, en):
-    """Mirror of :meth:`PAL._schedule` (program path: bus in, then array)."""
-    C, D = cfg.channels, cfg.dies_per_channel
-    ch = ppn % C
-    i = ch * D + (ppn // C) % D
-    db, dp, cb = f["die_busy"], f["die_prog"], f["chan_busy"]
-    dbi, dpi, cbi = db[i], dp[i], cb[ch]
-    ds = jnp.maximum(jnp.maximum(t, dbi), dpi)
-    bus_start = jnp.maximum(ds, cbi)
-    bus_done = bus_start + p["xfer_page"]
-    done = bus_done + p["prog_t"]
-    f = {**f,
-         "die_busy": db.at[i].set(jnp.where(en, bus_done, dbi)),
-         "die_prog": dp.at[i].set(jnp.where(en, done, dpi)),
-         "chan_busy": cb.at[ch].set(jnp.where(en, bus_done, cbi))}
-    return f, done
-
-
-def _hil_write(cfg: StackConfig, p: Dict, f: Dict, t, lpn, en):
-    """HIL overhead + FTL log-append write.  (FTL ``_invalidate`` only moves
-    valid-page counts, which are timing-neutral until GC — and GC-prone
-    traces are rejected at spec time.)"""
-    t0 = t + p["hil_ov"]
-    need = f["wpp"] >= cfg.pages_per_block
-    wpb = jnp.where(need, f["nfree"], f["wpb"])
-    nfree = jnp.where(need, f["nfree"] + 1, f["nfree"])
-    wpp = jnp.where(need, 0, f["wpp"])
-    ppn = wpb * cfg.pages_per_block + wpp
-    f = {**f,
-         "wpb": jnp.where(en, wpb, f["wpb"]),
-         "nfree": jnp.where(en, nfree, f["nfree"]),
-         "wpp": jnp.where(en, wpp + 1, f["wpp"]),
-         "l2p": f["l2p"].at[lpn].set(
-             jnp.where(en, ppn.astype(jnp.int32), f["l2p"][lpn]))}
-    return _pal_prog(cfg, p, f, t0, ppn, en)
-
-
-def _hil_read(cfg: StackConfig, p: Dict, f: Dict, t, ppn, en):
-    """HIL overhead + FTL read of a programmed page (callers check the
-    mapping table first, exactly like the cache's ``is_written`` gate)."""
-    return _pal_read(cfg, p, f, t + p["hil_ov"], jnp.maximum(ppn, 0), en)
-
-
-# ------------------------------------------------------------- device steps
-def _dram_step(cfg: StackConfig, p: Dict, md: Dict, t, addr, wr, posted, ctr):
-    start = jnp.maximum(t, md["busy"])
-    occ_done = start + p["occ"]
-    done = occ_done + jnp.where(posted, p["pack"], p["load"])
-    md = {**md, "busy": occ_done}
-    false = jnp.zeros((), bool)
-    return md, done, false, false
-
-
-def _pmem_step(cfg: StackConfig, p: Dict, md: Dict, t, addr, wr, posted, ctr):
-    row = addr // p["row_bytes"]
-    row_hit = row == md["row"]
-    lat = p["lat"][jnp.where(wr, 1, 0), jnp.where(row_hit, 1, 0)]
-    start = jnp.maximum(t, md["busy"])
-    occ_done = start + p["occ"]
-    done = occ_done + jnp.where(posted, p["pack"], lat)
-    md = {**md, "busy": occ_done, "row": row}
-    return md, done, row_hit, jnp.zeros((), bool)
-
-
-def _buf_step(cfg: StackConfig, p: Dict, md: Dict, t, addr, wr, posted, ctr):
-    """CXL-SSD page-register buffer: LRU over a handful of open pages;
-    misses amplify to 4 KB flash ops (read-modify-write for writes)."""
-    page = addr // cfg.page_bytes
-    frames = md["frames"]
-    pfield = page << 1
-    match = (frames & PAGE_FIELD) == pfield
-    match = match & (frames >= 0)
-    fidx = jnp.argmax(match)
-    hit = match[fidx]
-    miss = ~hit
-    old = frames[fidx]
-
-    def miss_fn(op):
-        frames, f = op
-        vic = jnp.argmin(frames)
-        vval = frames[vic]
-        ev_dirty = (vval >= 0) & ((vval & 1) > 0)
-        ev_page = (vval & PAGE_FIELD) >> 1
-        ppn = f["l2p"][page]
-        was_written = ppn >= 0
-        f, rdone = _hil_read(cfg, p, f, t, _i64(ppn), was_written)
-        done0 = jnp.where(was_written, rdone, t)
-        f, _ = _hil_write(cfg, p, f, done0, ev_page, ev_dirty)
-        return f, done0, vic, ev_dirty
-
-    def hit_fn(op):
-        frames, f = op
-        return f, t, fidx, jnp.zeros((), bool)
-
-    f, done0, vic, flushed = jax.lax.cond(miss, miss_fn, hit_fn,
-                                          (frames, md["flash"]))
-
-    # single commit: LRU touch on hit, insert over the victim on miss
-    touch_val = (ctr << STAMP_SHIFT) | pfield | ((old & 1) | wr)
-    insert_val = (ctr << STAMP_SHIFT) | pfield | wr
-    idx = jnp.where(miss, vic, fidx)
-    val = jnp.where(miss, insert_val, touch_val)
-    frames = frames.at[idx].set(val)
-
-    done = done0 + p["internal"]
-    md = {**md, "frames": frames, "flash": f}
-    return md, done, hit, flushed
-
-
-def _cache_step(cfg: StackConfig, p: Dict, md: Dict, t, addr, wr, posted, ctr):
-    """The paper's DRAM cache layer, one access: MSHR coalesce -> resident
-    hit -> miss (MSHR stall, evict + writeback queue, flash fill).  Mirrors
-    :meth:`repro.core.cache.dram_cache.DRAMCache.access` branch for branch."""
-    page = addr // cfg.page_bytes
-    frames = md["frames"]
-    pfield = page << 1
-
-    # ---- MSHR lookup (in-flight fill rides the existing SSD read)
-    mm = md["mpage"] == page
-    m_idx = jnp.argmax(mm)
-    m_exists = mm[m_idx]
-    m_ready = md["mready"][m_idx]
-    coalesce = m_exists & (m_ready > t)
-
-    # ---- residency
-    if cfg.cache_assoc:
-        match = ((frames & PAGE_FIELD) == pfield) & (frames >= 0)
-        fidx = jnp.argmax(match)
-        resident = match[fidx]
-    else:
-        fidx = page % p["cap"]
-        fv = frames[fidx]
-        resident = (fv >= 0) & ((fv & PAGE_FIELD) == pfield)
-    hit = (~coalesce) & resident
-    miss = (~coalesce) & (~resident)
-    old = frames[fidx]
-
-    # ---- hit: 64 B transfer occupies cache-DRAM bandwidth
-    xstart = jnp.maximum(t, md["dram_busy"])
-    xdone = xstart + p["line_xfer"]
-
-    # ---- miss machinery behind one cond (hits pass the buffers through)
-    def miss_fn(op):
-        frames, mpage, mready, wtick, f = op
-        # MSHR allocate (stall if the table is full)
-        mfull = jnp.sum(mpage >= 0) >= cfg.mshr_entries
-        vic_ready = jnp.min(mready)             # free slots hold BIG
-        start1 = jnp.where(mfull, jnp.maximum(t, vic_ready), t)
-        kill = mfull & (mready <= vic_ready)
-        mpage = jnp.where(kill, FREE, mpage)
-        mready = jnp.where(kill, BIG, mready)
-        # write-allocate insert: victim = argmin of packed stamps (invalid
-        # frames are -1, below every valid packed value)
-        vic = jnp.argmin(frames) if cfg.cache_assoc else fidx
-        vval = frames[vic]
-        ev_valid = vval >= 0
-        ev_page = (vval & PAGE_FIELD) >> 1
-        do_wb = ev_valid & ((vval & 1) > 0)
-        # writeback queue: background flash write, stall only if full.
-        # Mutations are gated on do_wb — Python touches the queue only via
-        # _queue_writeback, which clean misses never call.
-        dead = wtick <= start1                   # reap(now)
-        wtick = jnp.where(do_wb & dead, FREE, wtick)
-        wfull = jnp.sum(~dead) >= cfg.wb_slots
-        wmin = jnp.min(jnp.where(dead, BIG, wtick))
-        stall = jnp.where(wfull, wmin, start1)
-        wtick = jnp.where(do_wb & wfull & (wtick <= stall), FREE, wtick)
-        f, wdone = _hil_write(cfg, p, f, stall, ev_page, do_wb)
-        wslot = jnp.argmin(wtick)
-        wtick = wtick.at[wslot].set(jnp.where(do_wb, wdone, wtick[wslot]))
-        start2 = jnp.where(do_wb, jnp.maximum(start1, stall), start1)
-        # fill from flash (virgin pages skip the read), then cache-DRAM
-        ppn = f["l2p"][page]
-        was_written = ppn >= 0
-        f, rdone = _hil_read(cfg, p, f, start2, _i64(ppn), was_written)
-        flash_done = jnp.where(was_written, rdone, start2)
-        fill_done = jnp.maximum(flash_done, md["dram_busy"]) + p["page_xfer"]
-        # MSHR insert (dict semantics: existing key overwrites) + expiry
-        slot = jnp.where(m_exists, m_idx, jnp.argmin(mpage))
-        mpage = mpage.at[slot].set(page)
-        mready = mready.at[slot].set(fill_done)
-        kill2 = mready <= t
-        mpage = jnp.where(kill2, FREE, mpage)
-        mready = jnp.where(kill2, BIG, mready)
-        return (mpage, mready, wtick, f, start2, fill_done, vic, do_wb)
-
-    def pass_fn(op):
-        frames, mpage, mready, wtick, f = op
-        return (mpage, mready, wtick, f, t, t, fidx, jnp.zeros((), bool))
-
-    mpage, mready, wtick, f, start2, fill_done, vic, do_wb = jax.lax.cond(
-        miss, miss_fn, pass_fn,
-        (frames, md["mpage"], md["mready"], md["wtick"], md["flash"]))
-
-    # ---- single frame commit: touch (hit / coalesced store) or insert
-    touch_en = (coalesce & wr & resident) | hit
-    stamp_bits = jnp.where(p["is_lru"], ctr << STAMP_SHIFT, old & STAMP_FIELD)
-    touch_val = stamp_bits | pfield | ((old & 1) | wr)
-    insert_val = (ctr << STAMP_SHIFT) | pfield | wr
-    idx = jnp.where(miss, vic, fidx)
-    val = jnp.where(miss, insert_val, jnp.where(touch_en, touch_val, old))
-    frames = frames.at[idx].set(val)
-
-    dram_busy = jnp.where(hit, xdone,
-                          jnp.where(miss, fill_done, md["dram_busy"]))
-    ret_co = jnp.where(wr, t + p["hit_lat"], m_ready + p["hit_lat"])
-    ret_hit = jnp.where(wr,
-                        jnp.where(posted, t + p["pack10"], t + p["hit_lat"]),
-                        jnp.maximum(xdone, t + p["hit_lat"]))
-    ret_miss = jnp.where(wr, start2 + p["hit_lat"], fill_done + p["hit_lat"])
-    ret = jnp.where(coalesce, ret_co, jnp.where(hit, ret_hit, ret_miss))
-
-    md = {**md, "frames": frames, "mpage": mpage, "mready": mready,
-          "wtick": wtick, "dram_busy": dram_busy, "flash": f}
-    return md, jnp.maximum(t, ret), hit, do_wb
-
-
-_STEPS = {DRAM: _dram_step, PMEM: _pmem_step, SSD_BUF: _buf_step,
-          SSD_CACHE: _cache_step}
-
-
-# -------------------------------------------------------------- state init
-def _flash_init(cfg: StackConfig):
-    C, D = cfg.channels, cfg.dies_per_channel
-    return {
-        "l2p": jnp.full(cfg.num_pages, -1, jnp.int32),
-        "wpb": _i64(0), "wpp": _i64(0), "nfree": _i64(1),
-        "die_busy": jnp.zeros(C * D, jnp.int64),
-        "die_prog": jnp.zeros(C * D, jnp.int64),
-        "chan_busy": jnp.zeros(C, jnp.int64),
-    }
-
-
-def _media_init(cfg: StackConfig):
-    if cfg.kind == DRAM:
-        return {"busy": _i64(0)}
-    if cfg.kind == PMEM:
-        return {"busy": _i64(0), "row": _i64(-1)}
-    if cfg.kind == SSD_BUF:
-        return {"frames": jnp.full(cfg.buf_entries, -1, jnp.int64),
-                "flash": _flash_init(cfg)}
-    if cfg.kind == SSD_CACHE:
-        return {"frames": jnp.full(cfg.cache_frames, -1, jnp.int64),
-                "mpage": jnp.full(cfg.mshr_entries, FREE, jnp.int64),
-                "mready": jnp.full(cfg.mshr_entries, BIG, jnp.int64),
-                "wtick": jnp.full(cfg.wb_slots, FREE, jnp.int64),
-                "dram_busy": _i64(0),
-                "flash": _flash_init(cfg)}
-    raise ValueError(cfg.kind)
-
-
 # ------------------------------------------------------------------ runner
-def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
+def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
                 routes=None, block=1):
-    """The scan proper, parameterized by the initial media state so sweeps
+    """The scan proper, parameterized by the initial stacked state so sweeps
     can vary it per vmap lane (e.g. capacity via disabled frames).
-    ``routes`` is the per-access ECMP choice column (required when
-    ``cfg.num_routes > 1``, ignored otherwise).  ``block`` is the blocked
-    replay width: the scan body replays ``block`` accesses per sequential
-    step (scan unroll), with the carry crossing block seams untouched —
-    tick-identical at any block size, but the per-step dispatch floor is
-    paid once per block instead of once per access."""
-    dev_step = _STEPS[cfg.kind]
+    ``state`` is a :func:`repro.core.replay.stack.init_state` pytree with
+    one media lane.  ``routes`` is the per-access ECMP choice column
+    (required when ``cfg.num_routes > 1``, ignored otherwise).  ``block``
+    is the blocked replay width: the scan body replays ``block`` accesses
+    per sequential step (scan unroll), with the carry crossing block seams
+    untouched — tick-identical at any block size, but the per-step dispatch
+    floor is paid once per block instead of once per access."""
     ecmp = cfg.num_routes > 1
     if ecmp and routes is None:
         # callers without a route column (e.g. cache_design_sweep) follow
@@ -408,10 +128,10 @@ def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
             # elementwise work), an indexable vector under ECMP
             jnp.zeros(cfg.num_ports, jnp.int64) if ecmp
             else tuple(_i64(0) for _ in range(cfg.num_ports)),
-            media)
+            state)
 
     def step(carry, x):
-        slots, now, ctr, pb, md = carry
+        slots, now, ctr, pb, st = carry
         if ecmp:
             addr, wr, route = x
         else:
@@ -423,10 +143,13 @@ def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
             pb, t = _transport_ecmp(cfg, p, pb, issue, route)
         else:
             pb, t = _transport(cfg, p, pb, issue)
-        md, done, hit, evict = dev_step(cfg, p, md, t, addr, wr, posted, ctr)
+        st, out = stack.step(cfg, p, st, dict(
+            lane=0, flash_lane=0, t=t, addr=addr, write=wr, posted=posted,
+            ctr=ctr))
+        done = out["done"]
         slots = slots.at[k].set(done)
-        flags = jnp.where(hit, 1, 0) | jnp.where(evict, 2, 0)
-        return ((slots, issue + p["issue_ov"], ctr + 1, pb, md),
+        flags = jnp.where(out["hit"], 1, 0) | jnp.where(out["evict"], 2, 0)
+        return ((slots, issue + p["issue_ov"], ctr + 1, pb, st),
                 (issue, done, flags.astype(jnp.int32)))
 
     xs = (addrs, writes, routes) if ecmp else (addrs, writes)
@@ -437,15 +160,15 @@ def _scan_stack(cfg: StackConfig, p: Dict, media, addrs, writes, start_tick,
 @functools.partial(jax.jit, static_argnums=(0, 5))
 def _run_stack(cfg: StackConfig, p: Dict, addrs, writes, start_tick,
                block: int = 1):
-    return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick,
-                       block=block)
+    return _scan_stack(cfg, p, stack.init_state(cfg), addrs, writes,
+                       start_tick, block=block)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 6))
 def _run_stack_ecmp(cfg: StackConfig, p: Dict, addrs, writes, routes,
                     start_tick, block: int = 1):
-    return _scan_stack(cfg, p, _media_init(cfg), addrs, writes, start_tick,
-                       routes=routes, block=block)
+    return _scan_stack(cfg, p, stack.init_state(cfg), addrs, writes,
+                       start_tick, routes=routes, block=block)
 
 
 # ------------------------------------------------------------------ facade
@@ -457,6 +180,7 @@ class ReplayResult(TraceResult):
     latency_ticks: Optional[np.ndarray] = None   # done - issue, per access
     hit_flags: Optional[np.ndarray] = None
     evict_flags: Optional[np.ndarray] = None
+    gc_runs: int = 0                             # flash GC collections run
 
     @property
     def hits(self) -> int:
@@ -468,8 +192,9 @@ class ReplayEngine:
 
     ``run`` is tick-identical to ``TraceDriver(device, ...).run`` for the
     supported stacks (all five paper devices, directly attached or mounted
-    behind a switch fabric; cache policies lru/fifo/direct).  Unsupported
-    shapes raise :class:`ReplayUnsupported` so callers can fall back.
+    behind a switch fabric; cache policies lru/fifo/direct; FTL greedy GC
+    included).  Unsupported shapes raise :class:`ReplayUnsupported` so
+    callers can fall back.
     """
 
     def __init__(self, device, outstanding: int = 32,
@@ -512,16 +237,23 @@ class ReplayEngine:
             if cfg.num_routes > 1:
                 from repro.core.replay.spec import access_route_choices
                 routes = access_route_choices(self.device, addrs)
-                issues, dones, flags, _ = _run_stack_ecmp(
+                issues, dones, flags, final = _run_stack_ecmp(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
                     jnp.asarray(routes), _i64(start_tick), self.block_size)
             else:
-                issues, dones, flags, _ = _run_stack(
+                issues, dones, flags, final = _run_stack(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
                     _i64(start_tick), self.block_size)
+            bad, gcs = stack.flash_health(final)
+            bad, gcs = bool(bad), int(gcs)
             issues = np.asarray(issues)
             dones = np.asarray(dones)
             flags = np.asarray(flags)
+        if bad:
+            raise ReplayUnsupported(
+                "FTL ran out of free blocks during GC (device overfilled) — "
+                "the interpreted path raises there too; shrink the trace or "
+                "use engine='python' for the exact error")
         first = int(issues[0])
         last = max(int(dones.max(initial=0)), start_tick)
         return ReplayResult(
@@ -533,4 +265,5 @@ class ReplayEngine:
             latency_ticks=dones - issues,
             hit_flags=(flags & 1).astype(bool),
             evict_flags=(flags & 2).astype(bool),
+            gc_runs=gcs,
         )

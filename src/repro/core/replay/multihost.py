@@ -5,9 +5,17 @@ global issue ordering exactly: each step selects the host with the earliest
 candidate issue tick (``max(own clock, own oldest LFB slot)``, ties to the
 lowest host index — the heap's ``(tick, index)`` order), pops that host's
 next access, walks its precomputed route over the *shared* per-port
-busy-until vector, and serializes on the target device's media occupancy.
+busy-until vector, and serializes on the target device's media state.
 Contention between hosts therefore emerges from the same shared state as in
 the interpreted driver, tick for tick.
+
+The device media is the stackable state layer of
+:mod:`repro.core.replay.stack`: one private media lane per mounted device
+(per host in mount mode, per pool device in pool mode) over zero or more
+flash instances — so the full cached-CXL-SSD stack replays fused, including
+the pooled-flash shape (per-host private DRAM caches sharing one FTL/PAL
+flash array, built by handing several :class:`CachedCXLSSDDevice` front
+ends one ``hil=``) and greedy FTL garbage collection.
 
 QoS and ECMP are mirrored operation-for-operation:
 
@@ -22,12 +30,14 @@ QoS and ECMP are mirrored operation-for-operation:
   physical port walk is untouched, exactly like the interpreted path.
 
 Supported targets (homogeneous): :class:`FabricAttachedDevice` mounts and
-:class:`HostPortView` pool views whose inner media is DRAM-class
-(``DRAMDevice``, or ``CXLDRAMDevice`` with its private link detached by the
-fabric mount).  The pool's address mapper is applied host-side (it is a pure
-function of the address), so interleave and segment modes cost nothing in
-the scan.  Anything else raises :class:`ReplayUnsupported` — callers fall
-back to the Python driver.
+:class:`HostPortView` pool views over any media the stack layer models —
+DRAM-class (heterogeneous timing allowed), PMEM, CXL-SSD, cached CXL-SSD
+(lru/fifo/direct, identical configuration across targets).  The pool's
+address mapper is applied host-side (it is a pure function of the address),
+so interleave and segment modes cost nothing in the scan.  Anything else
+raises :class:`ReplayUnsupported` naming the widest lane that still covers
+the shape (the ``engine='python'`` fallback) — lanes refuse, they never
+silently diverge.
 """
 
 from __future__ import annotations
@@ -41,24 +51,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from repro.core.devices import CXLDRAMDevice, DRAMDevice, NullLink, POSTED_ACK_NS
+from repro.core.devices import (CXLDRAMDevice, DRAMDevice, NullLink,
+                                POSTED_ACK_NS)
 from repro.core.engine import ns
 from repro.core.fabric.fabric import LINE_BYTES, Fabric, FabricAttachedDevice
 from repro.core.fabric.pool import HostPortView
 from repro.core.fabric.routing import flow_choices
 from repro.core.fabric.switch import ACTIVE_WINDOW_OCC
-from repro.core.replay.spec import (ReplayUnsupported, trace_to_arrays,
+from repro.core.replay import stack
+from repro.core.replay.spec import (DRAM, ReplayUnsupported, StackConfig,
+                                    media_stack, trace_to_arrays,
                                     validate_block_size)
+from repro.core.replay.stack import MAX_ACCESSES, _i64
 from repro.core.workloads.driver import MultiHostResult, TraceResult
 
 BIG = 1 << 62
 # "never arrived" sentinel for the QoS last-arrival carry: far enough below
 # zero that sentinel + activity window can never exceed a valid tick.
 NEVER = -(1 << 61)
-
-
-def _i64(x):
-    return jnp.asarray(x, jnp.int64)
 
 
 @dataclass(frozen=True)
@@ -69,23 +79,13 @@ class MultiCfg:
     num_ports: int
     max_hops: int
     num_devs: int
+    stack: StackConfig           # media/flash statics (transportless)
+    n_flash: int = 0             # flash instances (0 for flash-less media)
     max_routes: int = 1
     qos: bool = False
     # host indices in sorted-host-name order: the QoS weight sum must add
     # floats in exactly the order SwitchPort.qos_update's sorted() walk does
     host_order: Tuple[int, ...] = ()
-
-
-def _unwrap_dram(dev) -> DRAMDevice:
-    """Accept DRAM-class media: bare DRAM, or CXL-DRAM whose private link
-    was neutralized by the fabric mount."""
-    if isinstance(dev, DRAMDevice):
-        return dev
-    if isinstance(dev, CXLDRAMDevice) and isinstance(dev.link, NullLink):
-        return dev.dram
-    raise ReplayUnsupported(
-        f"multi-host fused replay supports DRAM-class media, got "
-        f"{type(dev).__name__}")
 
 
 def _port_index(fabric: Fabric) -> Dict[Tuple[str, str], int]:
@@ -111,7 +111,9 @@ def _route_rows(fabric: Fabric, host: str, node: str, size: int,
 
 
 def _extract_targets(targets: Sequence, size: int):
-    """Shared fabric + route/device/QoS tensors for mounts or pool views."""
+    """Shared fabric + route/QoS tensors and metadata for mounts or pool
+    views (the media half is extracted separately by :func:`_media_setup`,
+    which needs the mapped address range)."""
     first = targets[0]
     if isinstance(first, FabricAttachedDevice):
         fabric = first.fabric
@@ -120,7 +122,7 @@ def _extract_targets(targets: Sequence, size: int):
             raise ReplayUnsupported("hosts must share one fabric")
         hosts = [t.host for t in targets]
         nodes = [t.device_node for t in targets]
-        drams = [_unwrap_dram(t.inner) for t in targets]
+        inners = [t.inner for t in targets]
         dev_of = {n: i for i, n in enumerate(nodes)}
         if len(dev_of) != len(nodes):
             raise ReplayUnsupported(
@@ -135,16 +137,14 @@ def _extract_targets(targets: Sequence, size: int):
         fabric = pool.fabric
         hosts = [t.host for t in targets]
         nodes = pool.device_nodes
-        drams = [_unwrap_dram(d) for d in pool.devices]
+        inners = list(pool.devices)
         mapper = pool.mapper
     else:
         raise ReplayUnsupported(
             f"multi-host fused replay supports FabricAttachedDevice / "
-            f"HostPortView targets, got {type(first).__name__}")
-    inner_devs = ([t.inner for t in targets]
-                  if isinstance(first, FabricAttachedDevice)
-                  else list(first.pool.devices))
-    for t in list(targets) + inner_devs:
+            f"HostPortView targets, got {type(first).__name__}; "
+            "use engine='python'")
+    for t in list(targets) + inners:
         if t.stats.get("bytes", 0):
             raise ReplayUnsupported("targets must be fresh (no prior traffic)")
     if fabric.stats.get("transfers", 0):
@@ -182,10 +182,6 @@ def _extract_targets(targets: Sequence, size: int):
         "hop_port": hop_port, "hop_occ": hop_occ, "hop_after": hop_after,
         "hop_on": hop_on,
         "rt_extra": ns(fabric.rt_extra_ns),
-        "dev_occ": np.asarray([ns(size / d.t.bw_gbps) for d in drams],
-                              np.int64),
-        "dev_load": np.asarray([ns(d.t.load_ns) for d in drams], np.int64),
-        "dev_pack": np.asarray([ns(POSTED_ACK_NS)] * NDEV, np.int64),
     }
     host_order: Tuple[int, ...] = ()
     if qos:
@@ -198,25 +194,64 @@ def _extract_targets(targets: Sequence, size: int):
         host_order = tuple(int(j) for j in
                            sorted(range(H), key=lambda j: hosts[j]))
     meta = dict(fabric=fabric, mapper=mapper, hosts=hosts, nodes=nodes,
-                route_count=route_count, qos=qos, host_order=host_order,
-                num_ports=len(pidx), max_hops=max_hops, max_routes=K,
-                num_devs=NDEV)
+                inners=inners, route_count=route_count, qos=qos,
+                host_order=host_order, num_ports=len(pidx),
+                max_hops=max_hops, max_routes=K, num_devs=NDEV)
     return params, meta
 
 
-def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
-    """Host-side pool address mapping (pure per-address arithmetic)."""
-    if mapper is None:
-        return np.full(addrs.shape, host_idx, np.int32), addrs
-    if mapper.mode == "interleave":
-        frame, off = np.divmod(addrs, mapper.granularity)
-        dev = (frame % mapper.num_devices).astype(np.int32)
-        local = (frame // mapper.num_devices) * mapper.granularity + off
-        return dev, local
-    dev64, local = np.divmod(addrs, mapper.segment_bytes)
-    if (dev64 >= mapper.num_devices).any():
-        raise ReplayUnsupported("address beyond pool capacity")
-    return dev64.astype(np.int32), local
+def _dram_class(dev):
+    """Bare DRAM, or CXL-DRAM whose private link the fabric mount
+    neutralized (the only shapes with per-device timing arrays)."""
+    if isinstance(dev, DRAMDevice):
+        return dev
+    if isinstance(dev, CXLDRAMDevice) and isinstance(dev.link, NullLink):
+        return dev.dram
+    return None
+
+
+def _params_equal(a: Dict, b: Dict) -> bool:
+    return set(a) == set(b) and all(np.array_equal(a[k], b[k]) for k in a)
+
+
+def _media_setup(inners: Sequence, *, size: int, outstanding: int,
+                 posted_writes: bool, n_accesses: int, max_addr: int):
+    """The media half of the multi-host stack: one
+    :class:`~repro.core.replay.spec.StackConfig` shared by every target,
+    media timing params, and the media-lane -> flash-instance map (deduped
+    by the backing :class:`HIL` object, so front ends built over one shared
+    ``hil=`` contend on one flash state — exactly like the interpreted
+    path).  Heterogeneous timing is allowed for DRAM-class media (per-device
+    arrays); every other kind must be identically configured."""
+    specs = [media_stack(d, size=size, outstanding=outstanding,
+                         posted_writes=posted_writes, n_accesses=n_accesses,
+                         max_addr=max_addr) for d in inners]
+    cfg0, mp0 = specs[0]
+    for k, (cfgk, mpk) in enumerate(specs[1:], start=1):
+        if cfgk != cfg0 or (cfg0.kind != DRAM
+                            and not _params_equal(mpk, mp0)):
+            raise ReplayUnsupported(
+                f"multi-host targets must be identically configured "
+                f"({cfg0.kind!r} media differs at target {k}); "
+                "use engine='python'")
+    if cfg0.kind == DRAM:
+        drams = [_dram_class(d) for d in inners]
+        media_params = {
+            "dev_occ": np.asarray([ns(size / d.t.bw_gbps) for d in drams],
+                                  np.int64),
+            "dev_load": np.asarray([ns(d.t.load_ns) for d in drams],
+                                   np.int64),
+            "dev_pack": np.asarray([ns(POSTED_ACK_NS)] * len(drams),
+                                   np.int64),
+        }
+        return cfg0, media_params, np.zeros(len(inners), np.int32), 0
+    if not stack.has_flash(cfg0):
+        return cfg0, mp0, np.zeros(len(inners), np.int32), 0
+    flash_lane: Dict[int, int] = {}
+    flash_of = np.zeros(len(inners), np.int32)
+    for i, d in enumerate(inners):
+        flash_of[i] = flash_lane.setdefault(id(d.hil), len(flash_lane))
+    return cfg0, mp0, flash_of, len(flash_lane)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 7))
@@ -227,13 +262,16 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
             jnp.full(H, start_tick, jnp.int64),        # per-host issue clock
             jnp.zeros(H, jnp.int64),                   # per-host trace index
             jnp.zeros(cfg.num_ports, jnp.int64),       # shared port busy
-            jnp.zeros(cfg.num_devs, jnp.int64),        # shared media busy
+            _i64(1),                                   # global stamp counter
+            # stacked media/flash state: one lane per mounted device
+            stack.init_state(cfg.stack, cfg.num_devs,
+                             cfg.n_flash if cfg.n_flash else None),
             # QoS: per-port per-host virtual finish + last arrival
             jnp.zeros((cfg.num_ports, H), jnp.int64),
             jnp.full((cfg.num_ports, H), NEVER, jnp.int64))
 
     def step(carry, _):
-        slots, now, idx, port_busy, dev_busy, vft, last_arr = carry
+        slots, now, idx, port_busy, ctr, st, vft, last_arr = carry
         cand = jnp.where(idx < lens,
                          jnp.maximum(now, jnp.min(slots, axis=1)), BIG)
         i = jnp.argmin(cand)                 # ties -> lowest host index
@@ -275,18 +313,25 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
                 jnp.where(on, done_h, port_busy[pi]))
             t = jnp.where(on, done_h + p["hop_after"][i, dev, r, h], t)
         t = t + p["rt_extra"]
-        start = jnp.maximum(t, dev_busy[dev])
-        occ_done = start + p["dev_occ"][dev]
-        dev_busy = dev_busy.at[dev].set(occ_done)
-        done = occ_done + jnp.where(posted, p["dev_pack"][dev],
-                                    p["dev_load"][dev])
+        if cfg.stack.kind == DRAM:
+            # DRAM-class media keeps per-device timing arrays (heterogeneous
+            # pools); the stack step reads its scalar names
+            p_med = {"occ": p["dev_occ"][dev], "load": p["dev_load"][dev],
+                     "pack": p["dev_pack"][dev]}
+        else:
+            p_med = p
+        st, out = stack.step(cfg.stack, p_med, st, dict(
+            lane=dev, flash_lane=(p["flash_of"][dev] if cfg.n_flash else 0),
+            t=t, addr=a, write=wr, posted=posted, ctr=ctr))
+        done = out["done"]
         if cfg.qos:
             done = jnp.maximum(done, floor)   # ack floor, data path untouched
+        bad, gcs = stack.flash_health(st)
         slots = slots.at[i, k].set(done)
         now = now.at[i].set(issue + p["issue_ov"])
         idx = idx.at[i].set(idx[i] + 1)
-        return ((slots, now, idx, port_busy, dev_busy, vft, last_arr),
-                (i, issue, done))
+        return ((slots, now, idx, port_busy, ctr + 1, st, vft, last_arr),
+                (i, issue, done, bad, gcs))
 
     # Blocked replay: `block` steps per sequential scan iteration (unroll).
     # The carry — including the per-host candidate race state (slots, now,
@@ -294,16 +339,32 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
     # selection and its lowest-index tie-break behave identically whether a
     # tie lands mid-block or exactly on a seam (regression-tested).
     n_total = addrs.shape[0] * addrs.shape[1]
-    carry, (who, issues, dones) = jax.lax.scan(
+    carry, (who, issues, dones, bad, gcs) = jax.lax.scan(
         step, init, None, length=n_total, unroll=block)
-    return who, issues, dones
+    return who, issues, dones, bad, gcs
+
+
+def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
+    """Host-side pool address mapping (pure per-address arithmetic)."""
+    if mapper is None:
+        return np.full(addrs.shape, host_idx, np.int32), addrs
+    if mapper.mode == "interleave":
+        frame, off = np.divmod(addrs, mapper.granularity)
+        dev = (frame % mapper.num_devices).astype(np.int32)
+        local = (frame // mapper.num_devices) * mapper.granularity + off
+        return dev, local
+    dev64, local = np.divmod(addrs, mapper.segment_bytes)
+    if (dev64 >= mapper.num_devices).any():
+        raise ReplayUnsupported("address beyond pool capacity")
+    return dev64.astype(np.int32), local
 
 
 class MultiHostReplay:
-    """Fused, vectorized stand-in for :class:`MultiHostDriver` (DRAM-class
-    pooled or per-host fabric targets, QoS weights and ECMP included).
-    ``run`` is tick-identical to the interpreted driver for supported
-    shapes."""
+    """Fused, vectorized stand-in for :class:`MultiHostDriver` (pooled or
+    per-host fabric targets over any stack-layer media — DRAM-class, PMEM,
+    CXL-SSD, cached CXL-SSD with private or shared flash — QoS weights,
+    ECMP, and greedy FTL GC included).  ``run`` is tick-identical to the
+    interpreted driver for supported shapes."""
 
     def __init__(self, targets: Sequence, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
@@ -315,6 +376,7 @@ class MultiHostReplay:
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
         self.block_size = validate_block_size(block_size)
+        self.last_gc_runs = 0    # flash GC collections in the last run
 
     def prepare(self, traces: Sequence):
         """Extract (cfg, params, devs, addrs, writes, lens, size) tensors —
@@ -349,12 +411,24 @@ class MultiHostReplay:
                     routes[i, :a.size][m] = flow_choices(
                         meta["hosts"][i], meta["nodes"][d],
                         local[m] // LINE_BYTES, int(route_count[i, d]))
+        stack_cfg, media_params, flash_of, n_flash = _media_setup(
+            meta["inners"], size=size, outstanding=self.outstanding,
+            posted_writes=self.posted_writes, n_accesses=int(lens.sum()),
+            max_addr=int(addrs.max(initial=0)))
+        if stack.has_flash(stack_cfg) and H * L > MAX_ACCESSES:
+            raise ReplayUnsupported(
+                f"multi-host SSD replay of {H}x{L} steps exceeds the "
+                f"packed-stamp budget ({MAX_ACCESSES}); split the traces "
+                "or use engine='python'")
+        params.update(media_params)
+        params["flash_of"] = flash_of
         params["issue_ov"] = ns(self.issue_overhead_ns)
         params["route"] = routes
         cfg = MultiCfg(num_hosts=H, outstanding=self.outstanding,
                        posted_writes=self.posted_writes,
                        num_ports=meta["num_ports"],
                        max_hops=meta["max_hops"], num_devs=meta["num_devs"],
+                       stack=stack_cfg, n_flash=n_flash,
                        max_routes=meta["max_routes"], qos=meta["qos"],
                        host_order=meta["host_order"])
         return cfg, params, devs, addrs, writes, lens, size
@@ -399,10 +473,21 @@ class MultiHostReplay:
                 "arrival sentinels assume non-negative ticks)")
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
-            who, issues, dones = _run_multi(
+            who, issues, dones, bad, gcs = _run_multi(
                 cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
                 jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
                 self.block_size)
+            bad = np.asarray(bad)
+            gcs = np.asarray(gcs)
+        # padded steps (beyond sum(lens)) replay past the end and may dirty
+        # the sticky flash flags — judge health at the last *valid* step
+        total = int(np.asarray(lens).sum())
+        self.last_gc_runs = int(gcs[total - 1]) if total else 0
+        if total and bool(bad[total - 1]):
+            raise ReplayUnsupported(
+                "FTL ran out of free blocks during GC (device overfilled) — "
+                "the interpreted path raises there too; shrink the traces "
+                "or use engine='python' for the exact error")
         return (np.asarray(who), np.asarray(issues), np.asarray(dones),
                 lens, size)
 

@@ -17,9 +17,12 @@ corresponding device method evaluates (``ns(size / bw)``, ``ns(nbytes *
 (1.0 / bw))``, ...) so rounding agrees bit-for-bit and the fused replay stays
 tick-identical to the interpreted path.
 
-Unsupported shapes (2Q/LFRU policies, multi-line accesses, traces long
-enough to trigger FTL garbage collection) raise :class:`ReplayUnsupported`
-— the driver falls back to the Python path instead of silently diverging.
+Unsupported shapes (2Q/LFRU policies, multi-line accesses, heterogeneous
+multi-host targets) raise :class:`ReplayUnsupported` — the driver falls
+back to the Python path instead of silently diverging.  Traces that could
+outrun the FTL's log-append headroom no longer refuse: they select the
+GC-capable stack lane (``StackConfig.gc``), whose scan twin runs the same
+greedy collection the Python FTL does (see :mod:`repro.core.replay.stack`).
 """
 
 from __future__ import annotations
@@ -53,9 +56,10 @@ class ReplayUnsupported(ValueError):
     message names the widest lane that still covers the shape.  The lane
     ladder, widest to fastest:
 
-    ``python`` (everything) > ``scan``/blocked scan (all five devices,
-    fabric/ECMP/QoS mounts) > ``assoc`` (stateless DRAM/PMEM media on a
-    single route, bandwidth-bound traces).
+    ``python`` (everything) > ``scan``/blocked scan (all five devices —
+    single- AND multi-host, fabric/ECMP/QoS mounts, pool views, shared
+    flash, greedy GC) > ``assoc`` (stateless DRAM/PMEM media on a single
+    route, bandwidth-bound traces).
     """
 
 
@@ -104,6 +108,11 @@ class StackConfig:
     pages_per_block: int = 0
     buf_entries: int = 0         # SSD_BUF page registers
     num_pages: int = 0           # l2p table size (trace footprint, pow2)
+    # greedy-GC lane (selected when the trace could outrun log-append
+    # headroom; see repro.core.replay.stack)
+    gc: bool = False
+    num_blocks: int = 0
+    gc_watermark_blocks: int = 0
 
 
 def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
@@ -186,19 +195,29 @@ def _ssd_params(hil: HIL) -> Dict[str, int]:
         "read_t": t.read_ticks,
         "prog_t": t.prog_ticks,
         "sus_t": us(t.t_suspend_us),
+        "erase_t": t.erase_ticks,
     }
 
 
-def _check_gc_headroom(hil: HIL, n_accesses: int) -> None:
-    """The fused FTL is log-append only; refuse traces that could trigger GC
-    (each access causes at most one flash program)."""
+def _gc_possible(hil: HIL, n_accesses: int) -> bool:
+    """Could this trace trigger FTL GC?  (Each access causes at most one
+    demand flash program; GC's own migrations only run once GC has
+    triggered.)  ``False`` selects the log-append stack — byte-identical to
+    the pre-GC engine; ``True`` selects the GC-capable lane, which carries
+    the full FTL bookkeeping (valid counts, inverse map, FIFO free pool)
+    and runs greedy collection inside the scan."""
     ftl = hil.ftl
     blocks_needed = ftl.write_ptr_block + n_accesses // ftl.pages_per_block + 2
-    if blocks_needed >= ftl.num_blocks - ftl.gc_watermark_blocks:
-        raise ReplayUnsupported(
-            f"trace of {n_accesses} accesses could trigger FTL GC "
-            f"({ftl.num_blocks} blocks, watermark "
-            f"{ftl.gc_watermark_blocks}); use engine='python'")
+    return blocks_needed >= ftl.num_blocks - ftl.gc_watermark_blocks
+
+
+def _gc_fields(hil: HIL, n_accesses: int) -> Dict[str, int]:
+    """The GC statics for :class:`StackConfig` (empty when the headroom
+    check proves GC unreachable, keeping the legacy compiled program)."""
+    if not _gc_possible(hil, n_accesses):
+        return {}
+    return dict(gc=True, num_blocks=hil.ftl.num_blocks,
+                gc_watermark_blocks=hil.ftl.gc_watermark_blocks)
 
 
 def build_stack(device: MemDevice, *, size: int, outstanding: int,
@@ -256,7 +275,6 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
                       num_hops=len(hops), num_ports=max(1, len(hops)))
 
     if isinstance(inner, (DRAMDevice, CXLDRAMDevice)):
-        dram = inner.dram if isinstance(inner, CXLDRAMDevice) else inner
         if isinstance(inner, CXLDRAMDevice) and inner is not device:
             # Mounted behind a fabric with detach_link=False: the private
             # link is a second transport stage after the fabric.
@@ -286,6 +304,28 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
                     [params["hop_after"], [ih[0][2]]]).astype(np.int64)
                 params["rt_extra"] = rt + irt
                 common.update(num_hops=base + 1, num_ports=base + 1)
+
+    if inner is not device and hasattr(inner, "link") \
+            and not isinstance(inner, (DRAMDevice, PMEMDevice,
+                                       CXLDRAMDevice)) \
+            and not isinstance(inner.link, NullLink):
+        raise ReplayUnsupported(
+            "fabric-mounted SSD device keeps a live private link "
+            "(detach_link=False); use engine='python'")
+
+    return _media_config(inner, common, params, size=size,
+                         n_accesses=n_accesses, max_addr=max_addr)
+
+
+def _media_config(inner: MemDevice, common: Dict, params: Dict, *,
+                  size: int, n_accesses: int, max_addr: int
+                  ) -> Tuple[StackConfig, Dict]:
+    """Append the media half of the stack — kind statics + timing params —
+    to an already-built transport ``common``/``params`` pair.  The single
+    definition both :func:`build_stack` (single host, transport attached)
+    and :func:`media_stack` (multi-host, transportless) extract through."""
+    if isinstance(inner, (DRAMDevice, CXLDRAMDevice)):
+        dram = inner.dram if isinstance(inner, CXLDRAMDevice) else inner
         params.update({
             "occ": ns(size / dram.t.bw_gbps),
             "load": ns(dram.t.load_ns),
@@ -319,18 +359,10 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
     n_pages = max(1, max_addr // page_bytes + 1)
     n_pages = 1 << (n_pages - 1).bit_length()   # pow2: stable compilations
 
-    if inner is not device and hasattr(inner, "link") \
-            and not isinstance(inner, CXLDRAMDevice) \
-            and not isinstance(inner.link, NullLink):
-        raise ReplayUnsupported(
-            "fabric-mounted SSD device keeps a live private link "
-            "(detach_link=False); use engine='python'")
-
     if isinstance(inner, CXLSSDDevice):
         from repro.core.cache.policies import LRUPolicy
         if not isinstance(inner._buf, LRUPolicy):
             raise ReplayUnsupported("cxl-ssd page-register buffer must be LRU")
-        _check_gc_headroom(inner.hil, n_accesses)
         params.update(_ssd_params(inner.hil))
         params["internal"] = ns(inner.internal_latency_ns)
         return StackConfig(
@@ -339,17 +371,17 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
             dies_per_channel=inner.hil.cfg.dies_per_channel,
             pages_per_block=inner.hil.ftl.pages_per_block,
             buf_entries=inner._buf.capacity, num_pages=n_pages,
-            **common), params
+            **_gc_fields(inner.hil, n_accesses), **common), params
 
     if isinstance(inner, CachedCXLSSDDevice):
         cache = inner.cache
         pol = cache.policy.name
         if pol not in ("lru", "fifo", "direct"):
             raise ReplayUnsupported(
-                f"fused replay supports lru/fifo/direct, got {pol!r}")
+                f"fused replay supports lru/fifo/direct, got {pol!r}; "
+                "use engine='python'")
         if cache.cfg.mshr_entries < 1 or cache.cfg.writeback_buffer < 1:
             raise ReplayUnsupported("cache needs >= 1 MSHR and wb slot")
-        _check_gc_headroom(inner.hil, n_accesses)
         frames = cache.cfg.capacity_pages
         params.update(_ssd_params(inner.hil))
         per_byte_ns = 1.0 / cache.cfg.dram_bw_gbps
@@ -369,9 +401,31 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
             channels=inner.hil.cfg.channels,
             dies_per_channel=inner.hil.cfg.dies_per_channel,
             pages_per_block=inner.hil.ftl.pages_per_block,
-            num_pages=n_pages, **common), params
+            num_pages=n_pages, **_gc_fields(inner.hil, n_accesses),
+            **common), params
 
-    raise ReplayUnsupported(f"no fused model for {type(inner).__name__}")
+    raise ReplayUnsupported(
+        f"no fused model for {type(inner).__name__}; use engine='python'")
+
+
+def media_stack(inner: MemDevice, *, size: int, outstanding: int,
+                posted_writes: bool, n_accesses: int, max_addr: int
+                ) -> Tuple[StackConfig, Dict]:
+    """Transportless media extraction for the multi-host engine: the stack
+    of one *inner* (already fabric-mounted, link-detached) device, with
+    ``num_hops=0`` — the multi-host scan supplies its own route tensors and
+    walks the shared ports itself.  ``n_accesses`` must count every access
+    that can reach this device's flash (summed over hosts for shared
+    targets), so the GC-lane selection stays conservative."""
+    _require_fresh(inner)
+    if hasattr(inner, "link") and not isinstance(inner.link, NullLink):
+        raise ReplayUnsupported(
+            f"multi-host target {inner.name!r} keeps a live private link "
+            "(mount it with detach_link=True); use engine='python'")
+    common = dict(outstanding=max(1, outstanding),
+                  posted_writes=posted_writes, num_hops=0, num_ports=1)
+    return _media_config(inner, common, {}, size=size,
+                         n_accesses=n_accesses, max_addr=max_addr)
 
 
 def trace_to_arrays(trace, *, line: int = 64) -> Tuple[np.ndarray, np.ndarray, int]:

@@ -30,15 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from repro.core.replay.engine import (
-    MAX_ACCESSES,
-    PAGE_FIELD,
-    _i64,
-    _media_init,
-    _scan_stack,
-)
+from repro.core.replay import stack
+from repro.core.replay.engine import _scan_stack
 from repro.core.replay.multihost import MultiHostReplay, _run_multi
 from repro.core.replay.spec import SSD_CACHE, ReplayUnsupported, build_stack
+from repro.core.replay.stack import MAX_ACCESSES, PAGE_FIELD, _i64
 from repro.core.workloads.driver import MultiHostResult
 
 # A disabled frame: never matches (page field all-ones is reserved) and is
@@ -55,13 +51,13 @@ def _run_cache_lanes(cfg, pj: Dict, trace_args, batched: frozenset,
     a, w = trace_args
 
     def one(p1, a1, w1):
-        media = _media_init(cfg)
+        st = stack.init_state(cfg)
         frames = jnp.where(
             jnp.arange(cfg.cache_frames) < p1["cap"],
             jnp.asarray(-1, jnp.int64),
             jnp.asarray(DISABLED, jnp.int64))
-        return _scan_stack(cfg, p1, {**media, "frames": frames},
-                           a1, w1, _i64(0))
+        st = {**st, "media": {**st["media"], "frames": frames[None]}}
+        return _scan_stack(cfg, p1, st, a1, w1, _i64(0))
 
     return jax.vmap(one, in_axes=(axes, trace_ax, trace_ax))(pj, a, w)
 
@@ -126,12 +122,24 @@ def cache_design_sweep(device, addrs, writes, *,
     trace_ax = 0 if addrs.ndim == 2 else None
     with enable_x64():
         pj = {k: jnp.asarray(v) for k, v in params.items()}
-        issues, dones, flags, _ = _run_cache_lanes(
+        issues, dones, flags, final = _run_cache_lanes(
             cfg, pj, (jnp.asarray(addrs), jnp.asarray(writes)),
             frozenset(batched), trace_ax)
         issues = np.asarray(issues)
         dones = np.asarray(dones)
         flags = np.asarray(flags)
+        flash = final["flash"]
+        if flash is not None and "bad" in flash:
+            # certify-or-refuse, per lane: a lane whose FTL ran out of free
+            # blocks during GC replayed past the point where the
+            # interpreted path raises — its numbers must not escape
+            bad_lanes = [k for k, b in
+                         enumerate(np.asarray(flash["bad"]).reshape(B, -1))
+                         if b.any()]
+            if bad_lanes:
+                raise ReplayUnsupported(
+                    f"sweep lane(s) {bad_lanes}: FTL ran out of free blocks "
+                    "during GC (device overfilled); use engine='python'")
     lat = dones - issues
     return {
         "latency_ticks": lat,
@@ -157,7 +165,9 @@ def host_count_sweep(targets: Sequence, traces: Sequence,
     and media contention it would have caused never happens — identical to
     running the smaller scenario).  Lane k is tick-identical to
     ``MultiHostReplay(targets[:k]).run(traces[:k])`` over the *same shared
-    fabric* (tested against :class:`MultiHostDriver`).
+    fabric* (tested against :class:`MultiHostDriver`).  Any stack-layer
+    media works, cached CXL-SSD included — absent hosts leave their private
+    cache lanes (and the shared flash) untouched.
     """
     eng = MultiHostReplay(targets, outstanding=outstanding,
                           issue_overhead_ns=issue_overhead_ns,
@@ -167,11 +177,18 @@ def host_count_sweep(targets: Sequence, traces: Sequence,
         np.where(np.arange(lens.size) < h, lens, 0) for h in host_counts])
     with enable_x64():
         pj = jax.tree.map(jnp.asarray, params)
-        who, issues, dones = _run_multi_lanes(
+        who, issues, dones, bad, _ = _run_multi_lanes(
             cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
             jnp.asarray(writes), jnp.asarray(lane_lens))
         who = np.asarray(who)
         issues = np.asarray(issues)
         dones = np.asarray(dones)
+        bad = np.asarray(bad)
+    for k in range(len(host_counts)):
+        total = int(lane_lens[k].sum())
+        if total and bool(bad[k, total - 1]):
+            raise ReplayUnsupported(
+                f"host-count lane {host_counts[k]}: FTL ran out of free "
+                "blocks during GC; use engine='python'")
     return [eng.aggregate(who[k], issues[k], dones[k], lane_lens[k], size)
             for k in range(len(host_counts))]

@@ -17,18 +17,36 @@ from repro.core.ssd.pal import PAL
 
 FREE = 0xFFFFFFFF
 
+# GC policy constants — shared with the fused replay's scan twin
+# (repro.core.replay.stack mirrors the greedy discipline these define, so
+# keep the two in sync through these names rather than re-deriving them):
+# * victim = the non-free, non-write-pointer block with the fewest valid
+#   pages, ties to the lowest block id (Python ``min`` == ``argmin``);
+# * GC triggers at block allocation when the free pool has at most
+#   ``gc_watermark_blocks`` entries;
+# * the free-block pool is a FIFO (pop from the front, erased victims
+#   append at the back).
+DEFAULT_OP_RATIO = 0.07          # physical over-provisioning: phys/logical - 1
+DEFAULT_GC_WATERMARK = 0.05      # watermark as a fraction of num_blocks
+MIN_GC_WATERMARK_BLOCKS = 2      # floor of the watermark
+MIN_NUM_BLOCKS = 4               # smallest device the FTL will lay out
+
 
 class FTL:
     def __init__(self, pal: PAL, total_pages: int, pages_per_block: int = 256,
-                 op_ratio: float = 0.07, gc_watermark: float = 0.05) -> None:
+                 op_ratio: float = DEFAULT_OP_RATIO,
+                 gc_watermark: float = DEFAULT_GC_WATERMARK) -> None:
         self.pal = pal
         self.pages_per_block = pages_per_block
         # over-provisioning: physical > logical
         self.logical_pages = total_pages
         phys_pages = int(total_pages * (1 + op_ratio))
-        self.num_blocks = max(4, (phys_pages + pages_per_block - 1) // pages_per_block)
+        self.num_blocks = max(
+            MIN_NUM_BLOCKS,
+            (phys_pages + pages_per_block - 1) // pages_per_block)
         self.phys_pages = self.num_blocks * pages_per_block
-        self.gc_watermark_blocks = max(2, int(self.num_blocks * gc_watermark))
+        self.gc_watermark_blocks = max(MIN_GC_WATERMARK_BLOCKS,
+                                       int(self.num_blocks * gc_watermark))
 
         self.l2p: dict[int, int] = {}
         self.p2l: dict[int, int] = {}
@@ -43,11 +61,18 @@ class FTL:
     def _block_of(self, ppn: int) -> int:
         return ppn // self.pages_per_block
 
-    def _next_ppn(self, now: int) -> tuple[int, int]:
-        """Allocate the next physical page; may trigger GC. Returns (ppn, gc_done_tick)."""
+    def _next_ppn(self, now: int, allow_gc: bool = True) -> tuple[int, int]:
+        """Allocate the next physical page; may trigger GC. Returns (ppn, gc_done_tick).
+
+        ``allow_gc=False`` is the migration-path allocator: GC destination
+        pages draw straight from the (watermark-reserved) free pool, because
+        re-entering ``_collect`` from inside ``_collect`` would recurse on
+        the same victim forever — the watermark exists precisely to reserve
+        blocks for in-flight collections.
+        """
         gc_done = now
         if self.write_ptr_page >= self.pages_per_block:
-            if len(self.free_blocks) <= self.gc_watermark_blocks:
+            if allow_gc and len(self.free_blocks) <= self.gc_watermark_blocks:
                 gc_done = self._collect(now)
             if not self.free_blocks:
                 raise RuntimeError("FTL out of space — device overfilled")
@@ -80,7 +105,7 @@ class FTL:
                 continue
             # migrate valid page
             t = self.pal.read_page(t, ppn)
-            new_ppn, _ = self._next_ppn(t)
+            new_ppn, _ = self._next_ppn(t, allow_gc=False)
             t = self.pal.program_page(t, new_ppn)
             self.p2l.pop(ppn)
             self.l2p[lpn] = new_ppn

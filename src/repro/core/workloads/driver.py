@@ -57,7 +57,9 @@ class TraceDriver:
     ``python``   interpret every access through the device objects (the
                  reference semantics; always available);
     ``scan``     the fused :mod:`repro.core.replay` lax.scan — one compiled
-                 program for the whole stack, tick-identical to ``python``
+                 program for the whole stack (FTL greedy GC included: a
+                 GC-pressure trace selects the GC-capable stack lane
+                 instead of falling back), tick-identical to ``python``
                  for supported shapes (raises
                  :class:`~repro.core.replay.ReplayUnsupported` otherwise).
                  ``block_size=B`` replays B accesses per sequential scan
@@ -212,6 +214,13 @@ class MultiHostDriver:
     next issue tick goes first (ties break on host index).  Running host
     traces back-to-back instead would serialize them through the shared
     busy-until state and hide all contention — the interleave is the point.
+
+    ``engine="scan"`` dispatches to the fused
+    :class:`~repro.core.replay.MultiHostReplay`, which covers every media
+    the stacked-state layer models — DRAM-class, PMEM, CXL-SSD, and cached
+    CXL-SSD (private mounts, pool views, or per-host caches over a shared
+    flash built with ``CachedCXLSSDDevice(hil=...)``), greedy FTL GC
+    included — and refuses anything else with the actionable lane name.
     """
 
     def __init__(self, targets: Sequence[MemDevice], outstanding: int = 32,

@@ -26,14 +26,30 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from golden import scenarios as sc  # noqa: E402
 
 
-def regen() -> dict:
-    old = sc.load_fixture()["scenarios"] if sc.FIXTURE.exists() else {}
-    dropped = sorted(set(old) - set(sc.scenario_names()))
+def check_history(old: dict, names) -> None:
+    """Refuse to *drop* committed history: every pinned scenario must still
+    be in the scenario table (append-only fixture)."""
+    dropped = sorted(set(old) - set(names))
     if dropped:
         raise SystemExit(
             f"scenario(s) {dropped} are pinned but gone from the scenario "
             "table — refusing to drop committed history (delete the stale "
             "fixture entries first if the removal is intentional)")
+
+
+def check_rewrite(name: str, old: dict, entry: dict) -> None:
+    """Refuse to *rewrite* committed history: a regenerated scenario that
+    is already pinned must reproduce the pin byte-for-byte."""
+    if name in old and old[name] != entry:
+        raise SystemExit(
+            f"{name}: regenerated values differ from the committed pin "
+            "— refusing to rewrite history (delete the stale entry "
+            "first if the timing-model change is intentional)")
+
+
+def regen() -> dict:
+    old = sc.load_fixture()["scenarios"] if sc.FIXTURE.exists() else {}
+    check_history(old, sc.scenario_names())
     fixture = {"format": 1, "scenarios": {}}
     for name in sc.scenario_names():
         py = sc.run_python(name)
@@ -51,11 +67,7 @@ def regen() -> dict:
         entry = {"python_scan": py}
         if sc.pallas_supported(name):
             entry["pallas"] = sc.run_pallas(name)
-        if name in old and old[name] != entry:
-            raise SystemExit(
-                f"{name}: regenerated values differ from the committed pin "
-                "— refusing to rewrite history (delete the stale entry "
-                "first if the timing-model change is intentional)")
+        check_rewrite(name, old, entry)
         fixture["scenarios"][name] = entry
         print(f"  {name}: ok")
     return fixture

@@ -52,13 +52,26 @@ ASSOC_SWEEPS = 256           # short traces afford a generous Kleene budget
 MULTI = dict(num_hosts=3, num_leaves=2, num_spines=2,
              qos_weights={"h0": 3.0, "h1": 1.0, "h2": 1.0})
 
+# stacked-state scenarios: multi-host cached CXL-SSD (PR 5 tentpole) —
+# private mounts, a shared pool, per-host caches over one shared flash
+# (GC-triggering), and a single-host GC-pressure trace
+MULTI_SSD_HOSTS = {"multihost-ssd-mounts": 2, "multihost-ssd-pool": 4,
+                   "multihost-ssd-sharedflash": 2}
+
 
 def scenario_names():
     names = [f"{d}@{attach}" for d in DEVICES
              for attach in ("direct", "fabric")]
     names.append("multihost-qos-ecmp")
     names += ["dram@stream", "pmem@stream"]
+    names += sorted(MULTI_SSD_HOSTS)
+    names.append("ssd-gc@direct")
     return names
+
+
+def is_multi(name: str) -> bool:
+    """Multi-host scenarios pin one latency list per host."""
+    return name.startswith("multihost")
 
 
 def scenario_outstanding(name: str) -> int:
@@ -83,12 +96,30 @@ def _mk_device(name: str):
     return make_device(name)
 
 
+def _gc_ssd_cfg(cap_pages: int):
+    """Tiny flash geometry so short pinned traces reach the GC watermark."""
+    from repro.core.ssd.hil import SSDConfig
+    from repro.core.ssd.pal import NANDTiming
+
+    return SSDConfig(capacity_bytes=cap_pages * 4096, page_bytes=4096,
+                     channels=2, dies_per_channel=2, pages_per_block=8,
+                     timing=NANDTiming.low_latency(), hil_overhead_ns=1000.0)
+
+
 def make_target(name: str):
     """Fresh device for ``<device>@<attach>`` scenarios (``@stream`` is
-    directly attached, replayed at the streaming issue depth)."""
+    directly attached, replayed at the streaming issue depth;
+    ``ssd-gc`` is a cached CXL-SSD with a near-full tiny flash)."""
+    from repro.core.cache.dram_cache import DRAMCacheConfig
+    from repro.core.devices import make_device
     from repro.core.fabric import Fabric
 
     device, attach = name.split("@")
+    if device == "ssd-gc":
+        return make_device("cxl-ssd-cache", ssd_cfg=_gc_ssd_cfg(750),
+                           cache_cfg=DRAMCacheConfig(
+                               capacity_bytes=8 * 4096, mshr_entries=4,
+                               writeback_buffer=2))
     dev = _mk_device(device)
     if attach == "fabric":
         fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
@@ -97,21 +128,48 @@ def make_target(name: str):
     return dev
 
 
-def make_multi_targets():
-    """Fresh pool views for the multihost QoS+ECMP scenario."""
-    from repro.core.devices import DRAMDevice
+def make_multi_targets(name: str = "multihost-qos-ecmp"):
+    """Fresh targets + traces builder inputs for the multi-host scenarios."""
+    from repro.core.cache.dram_cache import DRAMCacheConfig
+    from repro.core.devices import CachedCXLSSDDevice, DRAMDevice
     from repro.core.fabric import Fabric, MemoryPool
+    from repro.core.ssd.hil import HIL
 
-    fab = Fabric.build("spine_leaf", num_hosts=MULTI["num_hosts"],
-                       num_devices=2, num_leaves=MULTI["num_leaves"],
-                       num_spines=MULTI["num_spines"], ecmp=True,
-                       qos_weights=MULTI["qos_weights"])
-    pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
-    return pool.views([f"h{i}" for i in range(MULTI["num_hosts"])])
+    if name == "multihost-qos-ecmp":
+        fab = Fabric.build("spine_leaf", num_hosts=MULTI["num_hosts"],
+                           num_devices=2, num_leaves=MULTI["num_leaves"],
+                           num_spines=MULTI["num_spines"], ecmp=True,
+                           qos_weights=MULTI["qos_weights"])
+        pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+        return pool.views([f"h{i}" for i in range(MULTI["num_hosts"])])
+    cache_cfg = dict(policy="lru", **CACHE_KW)
+    if name == "multihost-ssd-pool":
+        fab = Fabric.build("two_level", num_hosts=4, num_devices=2,
+                           num_leaves=2)
+        pool = MemoryPool(fab, {
+            "d0": CachedCXLSSDDevice(
+                cache_cfg=DRAMCacheConfig(**cache_cfg)),
+            "d1": CachedCXLSSDDevice(
+                cache_cfg=DRAMCacheConfig(**cache_cfg))})
+        return pool.views([f"h{i}" for i in range(4)])
+    nh = MULTI_SSD_HOSTS[name]
+    fab = Fabric.build("two_level", num_hosts=nh, num_devices=nh,
+                       num_leaves=2)
+    hil = (HIL(_gc_ssd_cfg(48))
+           if name == "multihost-ssd-sharedflash" else None)
+    return [fab.mount(f"h{i}", f"d{i}", CachedCXLSSDDevice(
+                cache_cfg=DRAMCacheConfig(**cache_cfg), hil=hil))
+            for i in range(nh)]
 
 
-def multi_traces():
-    return [make_trace(100 + h) for h in range(MULTI["num_hosts"])]
+def multi_traces(name: str = "multihost-qos-ecmp"):
+    if name == "multihost-ssd-sharedflash":
+        # write-heavy churn past the 16-page cache: reaches the tiny shared
+        # flash's GC watermark (sustained, clean-victim collections)
+        return [make_trace(300 + h, n=N_ACCESSES, pages=24, write_frac=0.7)
+                for h in range(MULTI_SSD_HOSTS[name])]
+    nh = MULTI_SSD_HOSTS.get(name, MULTI["num_hosts"])
+    return [make_trace(100 + h) for h in range(nh)]
 
 
 class ServiceTap:
@@ -140,19 +198,31 @@ def _summ(latencies, result):
     }
 
 
+def scenario_trace(name: str):
+    """The pinned trace for a single-host scenario (seeded random; the GC
+    scenario uses the deterministic near-full fill + scattered rewrites so
+    victim blocks carry valid pages and the migration path is pinned)."""
+    if name == "ssd-gc@direct":
+        trace = [(p * 4096, 64, True) for p in range(750)]
+        trace += [(((k * 9) % 750) * 4096 + (k % 64) * 64, 64, True)
+                  for k in range(40)]
+        return trace
+    return make_trace(hash_seed(name))
+
+
 def run_python(name: str):
     """Interpreted reference: per-access latencies + scalar summary."""
     from repro.core.workloads.driver import MultiHostDriver, TraceDriver
 
-    if name == "multihost-qos-ecmp":
-        taps = [ServiceTap(t) for t in make_multi_targets()]
+    if is_multi(name):
+        taps = [ServiceTap(t) for t in make_multi_targets(name)]
         res = MultiHostDriver(taps, outstanding=OUTSTANDING).run(
-            multi_traces())
+            multi_traces(name))
         return [_summ(tap.latencies, host)
                 for tap, host in zip(taps, res.per_host)]
     tap = ServiceTap(make_target(name))
     res = TraceDriver(tap, outstanding=scenario_outstanding(name)).run(
-        make_trace(hash_seed(name)))
+        scenario_trace(name))
     return _summ(tap.latencies, res)
 
 
@@ -162,15 +232,16 @@ def run_scan(name: str, block_size: int = 1):
     pins exactly."""
     from repro.core.replay import MultiHostReplay, ReplayEngine
 
-    if name == "multihost-qos-ecmp":
-        eng = MultiHostReplay(make_multi_targets(), outstanding=OUTSTANDING,
+    if is_multi(name):
+        eng = MultiHostReplay(make_multi_targets(name),
+                              outstanding=OUTSTANDING,
                               block_size=block_size)
-        res, lat = eng.run_recorded(multi_traces())
+        res, lat = eng.run_recorded(multi_traces(name))
         return [_summ(l.tolist(), host)
                 for l, host in zip(lat, res.per_host)]
     res = ReplayEngine(make_target(name),
                        outstanding=scenario_outstanding(name),
-                       block_size=block_size).run(make_trace(hash_seed(name)))
+                       block_size=block_size).run(scenario_trace(name))
     return _summ(res.latency_ticks.tolist(), res)
 
 
@@ -188,13 +259,13 @@ def run_assoc(name: str):
     res = AssocReplayEngine(make_target(name),
                             outstanding=scenario_outstanding(name),
                             max_sweeps=ASSOC_SWEEPS).run(
-        make_trace(hash_seed(name)))
+        scenario_trace(name))
     return _summ(res.latency_ticks.tolist(), res)
 
 
 def assoc_supported(name: str) -> bool:
     return name.split("@")[0] in ("dram", "cxl-dram", "pmem") \
-        and name != "multihost-qos-ecmp"
+        and not is_multi(name)
 
 
 def run_pallas(name: str):
@@ -203,7 +274,7 @@ def run_pallas(name: str):
     from repro.core.replay.pallas_engine import run_pallas as _run
     from repro.core.replay.spec import trace_to_arrays
 
-    addrs, writes, size = trace_to_arrays(make_trace(hash_seed(name)))
+    addrs, writes, size = trace_to_arrays(scenario_trace(name))
     res = _run(make_target(name), addrs, writes, size=size,
                outstanding=scenario_outstanding(name), validate=True)
     return _summ(res.latency_ticks.tolist(), res)

@@ -68,6 +68,26 @@ def test_replay_bench_exactness_flags_recorded_true():
     assert report["devices"]["cxl-ssd-cache"]["pallas"]["decisions_exact"]
 
 
+# The multi-host stacked-state lane (cached CXL-SSD x 2/4 hosts) carries a
+# more modest floor than the single-host lanes: the per-step host race adds
+# gather/scatter over the lane axis, and the interpreted baseline is the
+# same per-access python cost.
+MULTI_SPEEDUP_FLOOR = 5.0
+
+
+def test_replay_bench_multihost_lane_recorded():
+    report = _load_replay_report()
+    lanes = report["multihost"]
+    assert set(lanes) == {"cxl-ssd-cache x2", "cxl-ssd-cache x4"}
+    assert report["multihost_target_speedup"] == MULTI_SPEEDUP_FLOOR
+    assert report["multihost_meets_target"] is True
+    for name, v in lanes.items():
+        assert v["tick_exact_vs_python"], f"{name} recorded as not tick-exact"
+        assert v["speedup_vs_python"] >= MULTI_SPEEDUP_FLOOR, \
+            f"{name}: recorded fused speedup {v['speedup_vs_python']:.1f}x " \
+            f"fell below the pinned {MULTI_SPEEDUP_FLOOR:.0f}x floor"
+
+
 def test_replay_bench_speedups_meet_pinned_floor():
     report = _load_replay_report()
     assert report["meets_target"] is True

@@ -53,7 +53,7 @@ def _assert_match(expected, actual, engine, name):
 def test_python_engine_matches_golden(fixture, name):
     expected = fixture[name]["python_scan"]
     actual = sc.run_python(name)
-    if name == "multihost-qos-ecmp":
+    if sc.is_multi(name):
         for h, (e, a) in enumerate(zip(expected, actual)):
             _assert_match(e, a, "python", f"{name}[h{h}]")
     else:
@@ -64,7 +64,7 @@ def test_python_engine_matches_golden(fixture, name):
 def test_scan_engine_matches_golden(fixture, name):
     expected = fixture[name]["python_scan"]
     actual = sc.run_scan(name)
-    if name == "multihost-qos-ecmp":
+    if sc.is_multi(name):
         for h, (e, a) in enumerate(zip(expected, actual)):
             _assert_match(e, a, "scan", f"{name}[h{h}]")
     else:
@@ -77,7 +77,7 @@ def test_blocked_scan_engine_matches_golden(fixture, name):
     python_scan pins verbatim: block seams must be tick-invisible."""
     expected = fixture[name]["python_scan"]
     actual = sc.run_scan_blocked(name)
-    if name == "multihost-qos-ecmp":
+    if sc.is_multi(name):
         for h, (e, a) in enumerate(zip(expected, actual)):
             _assert_match(e, a, "scan[blocked]", f"{name}[h{h}]")
     else:
@@ -107,3 +107,34 @@ def test_pallas_engine_matches_golden(fixture, name):
 def test_fixture_scenarios_in_sync(names):
     """`names` already cross-checks table vs fixture; keep it referenced."""
     assert names
+
+
+def test_fixture_covers_multihost_cached_and_gc(fixture):
+    """The PR-5 scenarios are pinned: multi-host cached CXL-SSD (mounts,
+    pool, shared flash) and the GC-pressure single-host trace."""
+    for name in ("multihost-ssd-mounts", "multihost-ssd-pool",
+                 "multihost-ssd-sharedflash", "ssd-gc@direct"):
+        assert name in fixture, f"{name} missing from golden fixture"
+    assert len(fixture["multihost-ssd-pool"]["python_scan"]) == 4
+    assert len(fixture["multihost-ssd-sharedflash"]["python_scan"]) == 2
+
+
+def test_regen_refuses_dropping_or_rewriting_pins():
+    """The fixture is append-only: regen aborts when a pinned scenario
+    disappears from the table or regenerates to different values."""
+    import importlib.util
+    from pathlib import Path
+
+    spec = importlib.util.spec_from_file_location(
+        "golden_regen", Path(__file__).parent / "golden" / "regen.py")
+    regen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(regen)
+    with pytest.raises(SystemExit, match="refusing to drop"):
+        regen.check_history({"ghost@direct": {}}, ["dram@direct"])
+    pinned = {"dram@direct": {"python_scan": {"elapsed_ticks": 1}}}
+    with pytest.raises(SystemExit, match="refusing to rewrite"):
+        regen.check_rewrite("dram@direct", pinned,
+                            {"python_scan": {"elapsed_ticks": 2}})
+    # unchanged values and new scenarios pass
+    regen.check_rewrite("dram@direct", pinned, pinned["dram@direct"])
+    regen.check_rewrite("new@direct", pinned, {"python_scan": {}})

@@ -483,6 +483,248 @@ def test_multihost_blocked_seam_reproduces_issue_race_ties():
     assert all(h.accesses == 30 for h in py.per_host)
 
 
+# ----------------------------------------- stacked state + GC (tentpole)
+def _gc_ssd_cfg(cap_pages=750):
+    from repro.core.ssd.hil import SSDConfig
+    from repro.core.ssd.pal import NANDTiming
+
+    return SSDConfig(capacity_bytes=cap_pages * 4096, page_bytes=4096,
+                     channels=2, dies_per_channel=2, pages_per_block=8,
+                     timing=NANDTiming.low_latency(), hil_overhead_ns=1000.0)
+
+
+def _gc_device(cap_pages=750):
+    return make_device("cxl-ssd-cache", ssd_cfg=_gc_ssd_cfg(cap_pages),
+                       cache_cfg=DRAMCacheConfig(capacity_bytes=8 * 4096,
+                                                 mshr_entries=4,
+                                                 writeback_buffer=2))
+
+
+def _gc_trace():
+    """Near-full sequential fill, then scattered rewrites — one per flash
+    block, so GC victims carry ~7 valid pages and the migration path
+    (read + re-program + map move) actually runs."""
+    trace = [(p * 4096, 64, True) for p in range(750)]
+    for k in range(40):
+        trace.append((((k * 9) % 750) * 4096 + (k % 64) * 64, 64, True))
+    return trace
+
+
+def test_gc_pressure_scan_exact():
+    """The tentpole acceptance case: a GC-triggering trace that previously
+    fell back to python replays tick-identically in the scan, migrations
+    included, and the collection count matches the interpreted FTL."""
+    dev = _gc_device()
+    py = TraceDriver(dev, outstanding=8).run(_gc_trace())
+    st = dev.hil.ftl.stats
+    assert st["gc_runs"] > 0 and st["gc_writes"] > 0   # migrations ran
+    rp = ReplayEngine(_gc_device(), outstanding=8).run(_gc_trace())
+    _assert_equal(py, rp)
+    assert rp.gc_runs == st["gc_runs"]
+
+
+def test_gc_churn_scan_exact():
+    """Write-heavy churn over a small working set: many collections, all
+    with fully-invalid victims (the steady-state shape)."""
+    rng = np.random.default_rng(0)
+    n = 600
+    addrs = rng.integers(0, 24, n) * 4096 + rng.integers(0, 64, n) * 64
+    writes = rng.random(n) < 0.7
+    trace = [(int(a), 64, bool(w)) for a, w in zip(addrs, writes)]
+    dev = _gc_device(cap_pages=96)
+    py = TraceDriver(dev, outstanding=8).run(trace)
+    assert dev.hil.ftl.stats["gc_runs"] > 0
+    rp = ReplayEngine(_gc_device(cap_pages=96), outstanding=8).run(trace)
+    _assert_equal(py, rp)
+    assert rp.gc_runs == dev.hil.ftl.stats["gc_runs"]
+
+
+def test_gc_overfill_refuses_like_python_raises():
+    """Live data beyond physical capacity: the interpreted FTL raises
+    "out of space"; the scan surfaces the same condition as a refusal via
+    the sticky bad flag — never a silently wrong replay.  The vmapped
+    cache sweep must refuse lane-wise the same way."""
+    from repro.core.replay.sweep import cache_design_sweep
+
+    bad = [(p * 4096, 64, True) for p in range(1100)]
+    with pytest.raises(RuntimeError, match="out of space"):
+        TraceDriver(_gc_device(), outstanding=8).run(bad)
+    with pytest.raises(ReplayUnsupported, match="free blocks"):
+        ReplayEngine(_gc_device(), outstanding=8).run(bad)
+    addrs = np.asarray([a for a, _, _ in bad], np.int64)
+    writes = np.ones(len(bad), bool)
+    with pytest.raises(ReplayUnsupported, match="free blocks"):
+        cache_design_sweep(_gc_device(), addrs, writes,
+                           capacity_frames=[8, 4], is_lru=[True, True])
+
+
+def test_gc_block_size_invariance():
+    """B in {1, 8, len}: the stacked GC state crosses block seams in the
+    carry untouched, so blocked replay stays tick-identical on the
+    GC-capable lane."""
+    # real collections crossing block seams (B=8 over ~30 GCs)
+    rng = np.random.default_rng(0)
+    n = 600
+    addrs = rng.integers(0, 24, n) * 4096 + rng.integers(0, 64, n) * 64
+    writes = rng.random(n) < 0.7
+    churn = [(int(a), 64, bool(w)) for a, w in zip(addrs, writes)]
+    dev = _gc_device(cap_pages=96)
+    py = TraceDriver(dev, outstanding=8).run(churn)
+    assert dev.hil.ftl.stats["gc_runs"] > 0
+    rp = ReplayEngine(_gc_device(cap_pages=96), outstanding=8,
+                      block_size=8).run(churn)
+    _assert_equal(py, rp)
+    # whole-trace unroll (B=len): a short write-heavy trace on a tiny
+    # flash still *selects* the GC-capable stack (headroom check), and
+    # len copies of its step must stay compilable and tick-identical
+    short = churn[:64]
+    from repro.core.replay.spec import build_stack
+    cfg, _ = build_stack(_gc_device(cap_pages=48), size=64, outstanding=8,
+                         issue_overhead_ns=0.5, posted_writes=True,
+                         n_accesses=len(short), max_addr=23 * 4096 + 63 * 64)
+    assert cfg.gc, "short trace must still select the GC-capable lane"
+    py = TraceDriver(_gc_device(cap_pages=48), outstanding=8).run(short)
+    for b in (1, 8, len(short)):
+        rp = ReplayEngine(_gc_device(cap_pages=48), outstanding=8,
+                          block_size=b).run(short)
+        _assert_equal(py, rp)
+
+
+# ------------------------------------- multi-host stacked media (tentpole)
+def _cached_mounts(nh=2, shared_hil=False, policy="lru"):
+    from repro.core.devices import CachedCXLSSDDevice
+    from repro.core.ssd.hil import HIL
+
+    fab = Fabric.build("two_level", num_hosts=nh, num_devices=nh,
+                       num_leaves=2)
+    hil = HIL(_gc_ssd_cfg(96)) if shared_hil else None
+    out = []
+    for i in range(nh):
+        if shared_hil:
+            dev = CachedCXLSSDDevice(cache_cfg=DRAMCacheConfig(
+                policy=policy, **CACHE_KW), hil=hil)
+        else:
+            dev = _mk("cxl-ssd-cache", policy)
+        out.append(fab.mount(f"h{i}", f"d{i}", dev))
+    return out, hil
+
+
+def _cached_pool(nh=4):
+    # fixed 4-host fabric regardless of nh: host-count comparisons must
+    # share one topology (the sweep masks hosts, it doesn't rewire)
+    fab = Fabric.build("two_level", num_hosts=4, num_devices=2,
+                       num_leaves=2)
+    pool = MemoryPool(fab, {"d0": _mk("cxl-ssd-cache"),
+                            "d1": _mk("cxl-ssd-cache")})
+    return pool.views([f"h{i}" for i in range(nh)])
+
+
+def test_multihost_cached_mounts_exact():
+    traces = [_trace(90, n=500), _trace(91, n=400)]
+    py = MultiHostDriver(_cached_mounts()[0]).run(traces)
+    rp = MultiHostReplay(_cached_mounts()[0]).run(traces)
+    _assert_multi_equal(py, rp)
+
+
+def test_multihost_cached_pool_exact():
+    traces = [_trace(92 + h, n=400) for h in range(4)]
+    py = MultiHostDriver(_cached_pool()).run(traces)
+    rp = MultiHostReplay(_cached_pool()).run(traces)
+    _assert_multi_equal(py, rp)
+
+
+def test_multihost_shared_flash_gc_exact():
+    """The acceptance criterion: per-host private DRAM caches over ONE
+    shared flash (CachedCXLSSDDevice(hil=...)), on a GC-triggering
+    write-heavy mix — tick-identical to the interpreted driver, same
+    collection count, contention through the shared FTL/PAL state."""
+    traces = [_trace(95 + h, n=400, pages=24, write_frac=0.7)
+              for h in range(2)]
+    targets, hil = _cached_mounts(shared_hil=True)
+    py = MultiHostDriver(targets).run(traces)
+    assert hil.ftl.stats["gc_runs"] > 0
+    eng = MultiHostReplay(_cached_mounts(shared_hil=True)[0])
+    rp = eng.run(traces)
+    _assert_multi_equal(py, rp)
+    assert eng.last_gc_runs == hil.ftl.stats["gc_runs"]
+
+
+def test_multihost_cached_block_size_invariance():
+    # B=70 is the whole-trace unroll (sum of lens); keep it small — each
+    # unrolled step clones the cache-miss cond into one XLA graph
+    traces = [_trace(97, n=40), _trace(98, n=30)]
+    py = MultiHostDriver(_cached_mounts()[0]).run(traces)
+    for b in (1, 8, 70):
+        rp = MultiHostReplay(_cached_mounts()[0], block_size=b).run(traces)
+        _assert_multi_equal(py, rp)
+
+
+def test_multihost_pmem_pool_exact():
+    """PMEM pools ride the same stacked-state path (open-row state is a
+    per-device lane)."""
+    def views():
+        fab = Fabric.build("single_switch", num_hosts=2, num_devices=2)
+        pool = MemoryPool(fab, {"d0": _mk("pmem"), "d1": _mk("pmem")})
+        return pool.views(["h0", "h1"])
+
+    traces = [_trace(99, n=600), _trace(100, n=500)]
+    py = MultiHostDriver(views()).run(traces)
+    rp = MultiHostReplay(views()).run(traces)
+    _assert_multi_equal(py, rp)
+
+
+def test_multihost_refusals_name_python_lane():
+    # unsupported policy: the lane ladder names the fallback engine
+    targets, _ = _cached_mounts(policy="2q")
+    with pytest.raises(ReplayUnsupported, match="engine='python'"):
+        MultiHostReplay(targets).run([_trace(101, n=64), _trace(102, n=64)])
+    # heterogeneous cached configs must refuse, not silently average
+    fab = Fabric.build("two_level", num_hosts=2, num_devices=2, num_leaves=2)
+    a = fab.mount("h0", "d0", _mk("cxl-ssd-cache"))
+    b = fab.mount("h1", "d1", make_device(
+        "cxl-ssd-cache", cache_cfg=DRAMCacheConfig(
+            capacity_bytes=8 * 4096, mshr_entries=4, writeback_buffer=2)))
+    with pytest.raises(ReplayUnsupported, match="identically configured"):
+        MultiHostReplay([a, b]).run([_trace(103, n=64), _trace(104, n=64)])
+
+
+def test_host_count_sweep_cached_targets():
+    from repro.core.replay.sweep import host_count_sweep
+
+    traces = [_trace(105 + h, n=250) for h in range(4)]
+    lanes = host_count_sweep(_cached_pool(), traces, [1, 2, 4])
+    for h, lane in zip([1, 2, 4], lanes):
+        py = MultiHostDriver(_cached_pool(h)).run(traces[:h])
+        assert py.elapsed_ticks == lane.elapsed_ticks
+        for a, b in zip(py.per_host, lane.per_host[:h]):
+            _assert_equal(a, b)
+
+
+if HAVE_HYPOTHESIS:
+    GC_PAGES = st.lists(st.integers(0, 23), min_size=256, max_size=256)
+
+    @settings(max_examples=6, deadline=None)
+    @given(pages=GC_PAGES, writes=WRITES, offs=OFFSETS)
+    def test_property_gc_scan_matches_python(pages, writes, offs):
+        """Random GC-pressure traces (small over-provisioning, write-heavy):
+        the fused GC is tick-exact against the python FTL — or BOTH sides
+        fail (python raises out-of-space, the scan refuses); the scan never
+        silently diverges."""
+        trace = [(p * 4096 + o * 64, 64, w or i % 2 == 0)
+                 for i, (p, o, w) in enumerate(zip(pages, offs, writes))]
+        dev = _gc_device(cap_pages=96)
+        try:
+            py = TraceDriver(dev, outstanding=4).run(trace)
+        except RuntimeError:
+            with pytest.raises(ReplayUnsupported):
+                ReplayEngine(_gc_device(cap_pages=96),
+                             outstanding=4).run(trace)
+            return
+        rp = ReplayEngine(_gc_device(cap_pages=96), outstanding=4).run(trace)
+        _assert_equal(py, rp)
+        assert rp.gc_runs == dev.hil.ftl.stats["gc_runs"]
+
+
 # ------------------------- associative transport primitive (satellite)
 def _busy_fold(arr, svc, act, init):
     f, out = init, []
