@@ -8,7 +8,11 @@ Three device classes, every fast lane the repo has, one JSON artifact:
   (interpret mode on CPU);
 * ``multihost`` — cached CXL-SSD behind a shared fabric at 2 and 4 hosts
   (private per-host mounts), interpreted ``MultiHostDriver`` vs the fused
-  ``MultiHostReplay`` stacked-state scan, exactness asserted per lane.
+  ``MultiHostReplay`` stacked-state scan, exactness asserted per lane;
+* ``scan_metrics`` — each device's scan re-run with telemetry enabled
+  (``metrics=MetricsSpec()``): records the p50/p99 and counter summaries
+  plus ``overhead_vs_scan``, the relative cost of observability over the
+  bare scan, timed interleaved with it (CI-guarded at <10%).
 
 Methodology (the numbers this file writes are compared across PRs):
 
@@ -47,7 +51,7 @@ import numpy as np
 
 from repro.core.cache.dram_cache import DRAMCacheConfig
 from repro.core.devices import make_device
-from repro.core.replay import AssocReplayEngine, ReplayEngine
+from repro.core.replay import AssocReplayEngine, MetricsSpec, ReplayEngine
 from repro.core.workloads.driver import TraceDriver
 
 Row = Tuple[str, float, str]
@@ -124,6 +128,42 @@ def _bench_device(name: str, trace, addrs, writes) -> dict:
 
     scan = ReplayEngine(_mk_device(name))
     lanes["scan"] = _lane(py, py_s, lambda: scan.run_arrays(addrs, writes))
+
+    # in-scan telemetry lane: same scan with the MetricsSpec carry; records
+    # the percentile/counter summary and its cost over the bare scan
+    # (CI-guarded at <10%)
+    meng = ReplayEngine(_mk_device(name), metrics=MetricsSpec())
+    t0 = time.perf_counter()
+    rp = meng.run_arrays(addrs, writes)
+    first = time.perf_counter() - t0
+    # the overhead is a ratio of two nearly-equal wall times, so time the
+    # two programs interleaved in one loop (same scheduler/thermal window)
+    # rather than reusing the scan lane's earlier window
+    bare = steady = float("inf")
+    for _ in range(2 * REPEATS):
+        t0 = time.perf_counter()
+        scan.run_arrays(addrs, writes)
+        bare = min(bare, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rp = meng.run_arrays(addrs, writes)
+        steady = min(steady, time.perf_counter() - t0)
+    exact = _exact(py, rp)
+    assert exact, "metrics lane diverged from the interpreted driver"
+    mb = rp.metrics
+    lanes["scan_metrics"] = {
+        "steady_seconds": steady,
+        "compile_seconds": max(0.0, first - steady),
+        "acc_per_sec": N / steady,
+        "speedup_vs_python": py_s / steady,
+        "tick_exact_vs_python": bool(exact),
+        "overhead_vs_scan": steady / bare - 1.0,
+        "p50_ticks": mb.percentile_ticks(50),
+        "p99_ticks": mb.percentile_ticks(99),
+        "hit_rate": mb.hit_rate,
+        "write_amplification": mb.write_amplification,
+        "counters": {k: int(v) for k, v in mb.media[0].items()},
+    }
+
     for b in BLOCK_SIZES:
         eng = ReplayEngine(_mk_device(name), block_size=b)
         lanes[f"scan_b{b}"] = _lane(py, py_s,

@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.devices import MemDevice
 from repro.core.engine import ns
-from repro.core.fabric.routing import RoutingTable
+from repro.core.fabric.routing import RoutingTable, flow_hash
 from repro.core.fabric.switch import SwitchPort
 from repro.core.fabric.topology import SWITCH, Topology, build_topology
 
@@ -61,6 +61,9 @@ class Fabric:
         if qos_weights:
             self.set_qos_weights(qos_weights)
         self.stats = {"transfers": 0, "bytes": 0}
+        # ECMP observability: "src->dst" -> per-path selection counts, for
+        # pairs that actually have alternatives (len(paths) > 1)
+        self.ecmp_counts: Dict[str, List[int]] = {}
 
     @classmethod
     def build(cls, kind: str, *, forward_ns: float = DEFAULT_FORWARD_NS,
@@ -151,7 +154,18 @@ class Fabric:
         timestamp fed into shared busy-until state would block other
         hosts' earlier traffic.  ``line_addr`` keys the ECMP flow hash
         (ignored unless the fabric was built with ``ecmp=True``)."""
-        path = self.select_path(src, dst, line_addr)
+        if self.ecmp and line_addr is not None:
+            paths = self.routing.paths(src, dst)
+            if len(paths) > 1:
+                k = flow_hash(src, dst, line_addr) % len(paths)
+                counts = self.ecmp_counts.setdefault(
+                    f"{src}->{dst}", [0] * len(paths))
+                counts[k] += 1
+                path = paths[k]
+            else:
+                path = paths[0]
+        else:
+            path = self.routing.path(src, dst)
         t = now
         floor = 0
         for u, v in zip(path, path[1:]):
@@ -198,6 +212,7 @@ class Fabric:
                 "utilization": p.utilization(elapsed_ticks),
                 "achieved_gbps": p.achieved_gbps(elapsed_ticks),
                 "queued_ticks": p.queued_ticks,
+                "qos_throttle_events": p.qos_throttle_events,
                 "bytes_by_host": dict(sorted(p.bytes_by_origin.items())),
             }
             if p.qos_enabled:
@@ -217,6 +232,7 @@ class Fabric:
         for p in self.ports.values():
             p.reset()
         self.stats = {"transfers": 0, "bytes": 0}
+        self.ecmp_counts = {}
 
 
 class FabricAttachedDevice(MemDevice):

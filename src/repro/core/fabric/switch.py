@@ -61,6 +61,9 @@ class SwitchPort:
     bytes: int = 0
     queued_ticks: int = 0     # total ticks transfers waited for the port
     occupied_ticks: int = 0   # total ticks the port was serializing
+    # QoS observability: transfers whose origin was virtually backlogged
+    # here (qos_update returned a nonzero completion floor)
+    qos_throttle_events: int = 0
     # traffic attribution: originating endpoint -> bytes carried for it
     bytes_by_origin: Dict[str, int] = field(default_factory=dict)
     # QoS weights: originating endpoint -> relative share of this port under
@@ -125,7 +128,10 @@ class SwitchPort:
         pace = int(occ * (w_active / w_self))
         self._vft[origin] = max(prev, now) + pace
         self._last_arr[origin] = now
-        return prev + pace if prev > now else 0
+        if prev > now:
+            self.qos_throttle_events += 1
+            return prev + pace
+        return 0
 
     def transmit(self, now: int, nbytes: int,
                  origin: Optional[str] = None) -> int:
@@ -160,6 +166,7 @@ class SwitchPort:
         self.bytes = 0
         self.queued_ticks = 0
         self.occupied_ticks = 0
+        self.qos_throttle_events = 0
         self.bytes_by_origin = {}
         self._vft = {}
         self._last_arr = {}

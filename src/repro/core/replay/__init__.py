@@ -23,6 +23,11 @@ that are tick-identical to the interpreted
 * :mod:`repro.core.replay.sweep` — vmap-batched design-space sweeps over
   timing parameters, replacement policy, capacity, topology, and host
   count.
+* :mod:`repro.core.replay.metrics` — :class:`MetricsSpec`-configured
+  telemetry accumulated *inside* the scan (latency histograms with
+  p50/p95/p99, component counters, tick-windowed time series), schema- and
+  value-identical to the interpreted drivers' stats dicts; exportable to
+  Perfetto via :mod:`repro.obs`.
 """
 
 from repro.core.replay.assoc import (
@@ -31,6 +36,7 @@ from repro.core.replay.assoc import (
     port_busy_until,
 )
 from repro.core.replay.engine import ReplayEngine, ReplayResult
+from repro.core.replay.metrics import MetricsBundle, MetricsSpec
 from repro.core.replay.multihost import MultiHostReplay
 from repro.core.replay.spec import (
     ReplayUnsupported,
@@ -44,6 +50,8 @@ from repro.core.replay.sweep import cache_design_sweep, host_count_sweep
 
 __all__ = [
     "AssocReplayEngine",
+    "MetricsBundle",
+    "MetricsSpec",
     "ReplayEngine",
     "ReplayResult",
     "MultiHostReplay",

@@ -70,41 +70,51 @@ from repro.core.replay.spec import (
 )
 # The packed-frame layout and sentinels are owned by the stack layer now;
 # importers take them from repro.core.replay.stack directly.
-from repro.core.replay.stack import MAX_ACCESSES, _i64
+from repro.core.replay.stack import BIG, MAX_ACCESSES, _i64
 from repro.core.workloads.driver import TraceResult
 
 
 # ---------------------------------------------------------------- transport
-def _transport(cfg: StackConfig, p: Dict, pb: Tuple, t):
+def _transport(cfg: StackConfig, p: Dict, pb: Tuple, t, qacc=None):
     """Routed store-and-forward transport: the vectorized form of
     :meth:`SwitchPort.transmit` along the precomputed route (hop *h* is
-    port *h*), plus the CXL.mem round-trip extra."""
+    port *h*), plus the CXL.mem round-trip extra.  ``qacc`` (optional, a
+    tuple like ``pb``) accumulates per-port queueing — the
+    ``queued_ticks += start - now`` of :meth:`SwitchPort.transmit` — for
+    the metrics carry."""
     pb = list(pb)
+    q = list(qacc) if qacc is not None else None
     for h in range(cfg.num_hops):
         start = jnp.maximum(t, pb[h])
+        if q is not None:
+            q[h] = q[h] + (start - t)
         done = start + p["hop_occ"][h]
         pb[h] = done
         t = done + p["hop_after"][h]
-    return tuple(pb), t + p["rt_extra"]
+    return tuple(pb), t + p["rt_extra"], (tuple(q) if q is not None
+                                          else None)
 
 
-def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route):
+def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route, qacc=None):
     """ECMP transport: hop *h* of the chosen route occupies the port
     ``hop_port[route, h]`` of the path set's port union, so the busy-until
     state is a vector indexed per access instead of a positional tuple.
-    All equal-cost routes share one hop count (static)."""
+    All equal-cost routes share one hop count (static).  ``qacc``
+    (optional, a vector like ``pb``) accumulates per-port queueing."""
     for h in range(cfg.num_hops):
         pi = p["hop_port"][route, h]
         start = jnp.maximum(t, pb[pi])
+        if qacc is not None:
+            qacc = qacc.at[pi].add(start - t)
         done = start + p["hop_occ"][route, h]
         pb = pb.at[pi].set(done)
         t = done + p["hop_after"][route, h]
-    return pb, t + p["rt_extra"]
+    return pb, t + p["rt_extra"], qacc
 
 
 # ------------------------------------------------------------------ runner
 def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
-                routes=None, block=1):
+                routes=None, block=1, mspec=None, want_lat=True, size=64):
     """The scan proper, parameterized by the initial stacked state so sweeps
     can vary it per vmap lane (e.g. capacity via disabled frames).
     ``state`` is a :func:`repro.core.replay.stack.init_state` pytree with
@@ -113,7 +123,23 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
     is the blocked replay width: the scan body replays ``block`` accesses
     per sequential step (scan unroll), with the carry crossing block seams
     untouched — tick-identical at any block size, but the per-step dispatch
-    floor is paid once per block instead of once per access."""
+    floor is paid once per block instead of once per access.
+
+    ``mspec`` (a :class:`~repro.core.replay.metrics.MetricsSpec`, static)
+    grows the carry with the telemetry accumulators.  With per-access
+    outputs (``want_lat=True``) that is *only* the per-port queueing
+    scalars: every media counter is packed as an event bit into the flags
+    column (:data:`metrics.FLAG_EVENT_BITS`) and the histogram/window/
+    counter fold is deferred to first bundle access, so the metrics lane
+    stays within a few percent of the bare scan.  In streaming mode the
+    histogram+window scatter and the media counter-vector add ride the
+    carry instead — O(buckets+windows) state, no per-access outputs to
+    fold.  ``want_lat=False`` drops the per-access
+    stacked outputs entirely (``ys=None``), carrying only first-issue /
+    last-done / latency-sum scalars — O(buckets+windows) output for a
+    trace of any length.  Both knobs default off, leaving the compiled
+    no-metrics program byte-identical to the legacy body (the aux carry is
+    an empty pytree)."""
     ecmp = cfg.num_routes > 1
     if ecmp and routes is None:
         # callers without a route column (e.g. cache_design_sweep) follow
@@ -121,6 +147,20 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
         raise ReplayUnsupported(
             "ECMP stack needs a per-access route column; this entry point "
             "supports single-route mounts only (use engine='python')")
+    aux0 = {}
+    if mspec is not None:
+        from repro.core.replay import metrics as _metrics
+        if not want_lat:
+            aux0["acc"] = jnp.zeros((_metrics.acc_rows(mspec, 1, 1), 4),
+                                    jnp.int64)
+            aux0["med"] = jnp.zeros(len(_metrics.MEDIA_COUNTERS[cfg.kind]),
+                                    jnp.int64)
+        aux0["q"] = (jnp.zeros(cfg.num_ports, jnp.int64) if ecmp
+                     else tuple(_i64(0) for _ in range(cfg.num_ports)))
+    if not want_lat:
+        aux0["first"] = _i64(BIG)
+        aux0["last"] = _i64(start_tick)
+        aux0["sum"] = _i64(0)
     init = (jnp.full(cfg.outstanding, start_tick, jnp.int64),  # LFB slots
             _i64(start_tick),                                  # issue clock
             _i64(1),                                           # stamp counter
@@ -128,10 +168,11 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
             # elementwise work), an indexable vector under ECMP
             jnp.zeros(cfg.num_ports, jnp.int64) if ecmp
             else tuple(_i64(0) for _ in range(cfg.num_ports)),
-            state)
+            state,
+            aux0)
 
     def step(carry, x):
-        slots, now, ctr, pb, st = carry
+        slots, now, ctr, pb, st, aux = carry
         if ecmp:
             addr, wr, route = x
         else:
@@ -139,36 +180,61 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
         k = jnp.argmin(slots)
         issue = jnp.maximum(now, slots[k])
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
+        qacc = aux.get("q")
         if ecmp:
-            pb, t = _transport_ecmp(cfg, p, pb, issue, route)
+            pb, t, qacc = _transport_ecmp(cfg, p, pb, issue, route, qacc)
         else:
-            pb, t = _transport(cfg, p, pb, issue)
+            pb, t, qacc = _transport(cfg, p, pb, issue, qacc)
         st, out = stack.step(cfg, p, st, dict(
             lane=0, flash_lane=0, t=t, addr=addr, write=wr, posted=posted,
             ctr=ctr))
         done = out["done"]
         slots = slots.at[k].set(done)
+        if mspec is not None:
+            from repro.core.replay import metrics as _metrics
+            aux = {**aux, "q": qacc}
+            if "acc" in aux:
+                aux["med"] = aux["med"] + _metrics.media_increments(
+                    cfg.kind, wr, out)
+                aux["acc"] = _metrics.acc_update(
+                    mspec, aux["acc"], host=0, dev=0, n_hosts=1,
+                    n_devs=1, issue=issue, done=done, size=size,
+                    hit=out["hit"])
+        if not want_lat:
+            aux = {**aux,
+                   "first": jnp.minimum(aux["first"], issue),
+                   "last": jnp.maximum(aux["last"], done),
+                   "sum": aux["sum"] + (done - issue)}
         flags = jnp.where(out["hit"], 1, 0) | jnp.where(out["evict"], 2, 0)
-        return ((slots, issue + p["issue_ov"], ctr + 1, pb, st),
-                (issue, done, flags.astype(jnp.int32)))
+        if mspec is not None and want_lat:
+            from repro.core.replay import metrics as _metrics
+            for bit, key in _metrics.FLAG_EVENT_BITS[cfg.kind]:
+                flags = flags | jnp.where(out[key], 1 << bit, 0)
+        ys = ((issue, done, flags.astype(jnp.int32)) if want_lat else None)
+        return (slots, issue + p["issue_ov"], ctr + 1, pb, st, aux), ys
 
     xs = (addrs, writes, routes) if ecmp else (addrs, writes)
-    carry, (issues, dones, flags) = jax.lax.scan(step, init, xs, unroll=block)
-    return issues, dones, flags, carry[4]
+    carry, ys = jax.lax.scan(step, init, xs, unroll=block)
+    issues, dones, flags = ys if want_lat else (None, None, None)
+    return issues, dones, flags, carry[4], carry[5]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5))
+@functools.partial(jax.jit, static_argnums=(0, 5, 6, 7, 8))
 def _run_stack(cfg: StackConfig, p: Dict, addrs, writes, start_tick,
-               block: int = 1):
+               block: int = 1, mspec=None, want_lat: bool = True,
+               size: int = 64):
     return _scan_stack(cfg, p, stack.init_state(cfg), addrs, writes,
-                       start_tick, block=block)
+                       start_tick, block=block, mspec=mspec,
+                       want_lat=want_lat, size=size)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6))
+@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8, 9))
 def _run_stack_ecmp(cfg: StackConfig, p: Dict, addrs, writes, routes,
-                    start_tick, block: int = 1):
+                    start_tick, block: int = 1, mspec=None,
+                    want_lat: bool = True, size: int = 64):
     return _scan_stack(cfg, p, stack.init_state(cfg), addrs, writes,
-                       start_tick, routes=routes, block=block)
+                       start_tick, routes=routes, block=block, mspec=mspec,
+                       want_lat=want_lat, size=size)
 
 
 # ------------------------------------------------------------------ facade
@@ -199,20 +265,25 @@ class ReplayEngine:
 
     def __init__(self, device, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
-                 posted_writes: bool = True, block_size: int = 1) -> None:
+                 posted_writes: bool = True, block_size: int = 1,
+                 metrics=None) -> None:
         self.device = device
         self.outstanding = max(1, outstanding)
         self.issue_overhead_ns = issue_overhead_ns
         self.posted_writes = posted_writes
         self.block_size = validate_block_size(block_size)
+        self.metrics = metrics        # Optional[MetricsSpec]
 
-    def run(self, trace, start_tick: int = 0) -> ReplayResult:
+    def run(self, trace, start_tick: int = 0,
+            return_latencies: bool = True) -> ReplayResult:
         addrs, writes, size = trace_to_arrays(trace)
         return self.run_arrays(addrs, writes, size=size,
-                               start_tick=start_tick)
+                               start_tick=start_tick,
+                               return_latencies=return_latencies)
 
     def run_arrays(self, addrs: np.ndarray, writes: np.ndarray, *,
-                   size: int = 64, start_tick: int = 0) -> ReplayResult:
+                   size: int = 64, start_tick: int = 0,
+                   return_latencies: bool = True) -> ReplayResult:
         addrs = np.asarray(addrs, np.int64)
         writes = np.asarray(writes, bool)
         if addrs.size == 0:
@@ -227,43 +298,70 @@ class ReplayEngine:
             # binds (see spec._fabric_hops); negative ticks void the proof
             raise ReplayUnsupported(
                 "QoS replay needs start_tick >= 0; use engine='python'")
+        mspec = self.metrics
+        want_lat = bool(return_latencies)
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,
             issue_overhead_ns=self.issue_overhead_ns,
             posted_writes=self.posted_writes, n_accesses=addrs.size,
-            max_addr=int(addrs.max(initial=0)))
+            max_addr=int(addrs.max(initial=0)),
+            counters=mspec is not None)
+        routes = None
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
             if cfg.num_routes > 1:
                 from repro.core.replay.spec import access_route_choices
                 routes = access_route_choices(self.device, addrs)
-                issues, dones, flags, final = _run_stack_ecmp(
+                issues, dones, flags, final, aux = _run_stack_ecmp(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
-                    jnp.asarray(routes), _i64(start_tick), self.block_size)
+                    jnp.asarray(routes), _i64(start_tick), self.block_size,
+                    mspec, want_lat, size)
             else:
-                issues, dones, flags, final = _run_stack(
+                issues, dones, flags, final, aux = _run_stack(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
-                    _i64(start_tick), self.block_size)
+                    _i64(start_tick), self.block_size, mspec, want_lat,
+                    size)
             bad, gcs = stack.flash_health(final)
             bad, gcs = bool(bad), int(gcs)
-            issues = np.asarray(issues)
-            dones = np.asarray(dones)
-            flags = np.asarray(flags)
+            if want_lat:
+                issues = np.asarray(issues)
+                dones = np.asarray(dones)
+                flags = np.asarray(flags)
+            mb = None
+            if mspec is not None:
+                from repro.core.replay import metrics as _metrics
+                fcnt = stack.flash_counters(final)
+                fcnt = np.asarray(fcnt) if fcnt is not None else None
+                if want_lat:
+                    mb = _metrics.bundle_single_deferred(
+                        mspec, self.device, cfg, issues, dones, flags,
+                        writes, aux["q"], fcnt, addrs, routes, size)
+                else:
+                    mb = _metrics.bundle_single_fused(
+                        mspec, self.device, cfg, aux["acc"], aux["med"],
+                        aux["q"], fcnt, addrs, routes, size)
         if bad:
             raise ReplayUnsupported(
                 "FTL ran out of free blocks during GC (device overfilled) — "
                 "the interpreted path raises there too; shrink the trace or "
                 "use engine='python' for the exact error")
-        first = int(issues[0])
-        last = max(int(dones.max(initial=0)), start_tick)
+        if want_lat:
+            first = int(issues[0])
+            last = max(int(dones.max(initial=0)), start_tick)
+            lat_sum = int((dones - issues).sum())
+        else:
+            first = int(aux["first"])
+            last = max(int(aux["last"]), start_tick)
+            lat_sum = int(aux["sum"])
         return ReplayResult(
             accesses=int(addrs.size),
             bytes_moved=int(addrs.size) * size,
             elapsed_ticks=last - first,
-            sum_latency_ticks=int((dones - issues).sum()),
+            sum_latency_ticks=lat_sum,
             end_tick=last,
-            latency_ticks=dones - issues,
-            hit_flags=(flags & 1).astype(bool),
-            evict_flags=(flags & 2).astype(bool),
+            latency_ticks=dones - issues if want_lat else None,
+            hit_flags=(flags & 1).astype(bool) if want_lat else None,
+            evict_flags=(flags & 2).astype(bool) if want_lat else None,
             gc_runs=gcs,
+            metrics=mb,
         )

@@ -1,0 +1,826 @@
+"""In-scan telemetry for the fused replay engines (and the python twin).
+
+The interpreted drivers keep rich component stats — ``DRAMCache.stats``,
+``FTL.stats``, ``Fabric.port_report`` — that the fused lanes silently
+dropped: a compiled replay returned latency arrays and nothing else.  This
+module defines the telemetry layer both paths emit in ONE schema, so a
+fused run is *exactly* as observable as the interpreted run it mirrors:
+
+* **latency histograms** — HDR-style log buckets (4 sub-buckets per
+  octave), accumulated inside the scan per host AND per device, with
+  exact nearest-rank percentile extraction (``p50/p95/p99``) over the
+  bucket counts;
+* **component counters** — the python stats dicts, counter for counter:
+  cache hits/misses/MSHR coalesces/stalls/fills/writebacks/evictions,
+  page-register buffer hits and flash read/RMW/flush amplification, FTL
+  host vs GC writes/erases/runs (write amplification), per-port
+  bytes/packets/occupancy/queueing, QoS throttle events, ECMP path
+  choice counts;
+* **tick-windowed time series** — bytes, latency sum, access count and
+  hits per fixed tick window per host, so bursts are visible without
+  materializing per-access output.
+
+Parity is the contract: :func:`collect_python` builds the bundle from the
+interpreted objects, the fused assemblers from the scan outputs, and the
+golden suite pins that the two are equal on every scenario.  The fused
+side has two collection modes.  With per-access outputs
+(``return_latencies=True``) the scan carries only the per-port queueing
+scalars and packs each media event into the flags column
+(:data:`FLAG_EVENT_BITS`); the histogram/window fold and counter vector
+are then pure functions of the materialized arrays, deferred to first
+bundle access — replay-time overhead is a few percent.  In streaming mode
+(``return_latencies=False``) there are no per-access outputs, so the scan
+carries the whole layer: ONE scatter-add into a combined ``(rows, 4)``
+accumulator plus one counter-vector add per access — O(buckets+windows)
+state for a trace of any length.  Per-port byte/packet/occupancy totals
+are pure functions of the precomputed route choices either way, so they
+are reconstructed host-side with numpy at zero scan cost.
+
+Histogram bucketing (shared by the numpy and jnp twins, property-tested
+equal): values below 8 index themselves (exact small-latency buckets);
+otherwise with ``e = bit_length(v) - 1`` the index is
+``4*e + ((v >> (e-2)) & 3) - 4`` — four linear sub-buckets per power of
+two, continuous across octave boundaries.  The numpy twin derives ``e``
+via ``frexp`` (exact below 2^53), so ``hist_buckets`` is capped at 208
+(indices above that are only reachable past 2^53 ticks ~ 100 days of
+simulated time).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import to_ns
+from repro.core.fabric.fabric import LINE_BYTES, FabricAttachedDevice
+from repro.core.fabric.pool import HostPortView
+from repro.core.replay.spec import DRAM, PMEM, SSD_BUF, SSD_CACHE
+
+# Counter schema per media kind — names match the python stats dicts they
+# mirror (DRAMCache.stats + policy counters, CXLSSDDevice.stats,
+# PMEMDevice.stats).  Order is the fused counter-vector layout.
+MEDIA_COUNTERS: Dict[str, Tuple[str, ...]] = {
+    DRAM: ("accesses", "reads", "writes"),
+    PMEM: ("accesses", "reads", "writes", "row_hits"),
+    SSD_BUF: ("accesses", "reads", "writes", "buf_hits",
+              "flash_reads", "rmw_fills", "flash_writes"),
+    SSD_CACHE: ("accesses", "reads", "writes", "hits", "misses",
+                "mshr_coalesced", "mshr_stalls", "fills", "writebacks",
+                "evictions", "dirty_evictions"),
+}
+
+# FTL.stats, key for key (per flash instance / HIL)
+FLASH_COUNTERS = ("host_reads", "host_writes", "gc_writes", "gc_erases",
+                  "gc_runs")
+
+# per-kind "hit" counter used by MetricsBundle.hit_rate
+_HIT_KEYS = ("hits", "buf_hits", "row_hits")
+
+MAX_HIST_BUCKETS = 208   # numpy frexp stays exact below 2^53 (see module doc)
+
+
+@dataclass(frozen=True)
+class MetricsSpec:
+    """Static (hashable) shape of the telemetry carry.
+
+    ``hist_buckets`` log-latency buckets; time series of ``num_windows``
+    windows of ``window_ticks`` ticks each (completions past the last
+    window clamp into it, so nothing is dropped)."""
+
+    hist_buckets: int = 128
+    window_ticks: int = 1_000_000      # 1 us at 1 tick = 1 ps
+    num_windows: int = 64
+
+    def __post_init__(self) -> None:
+        if not 8 <= self.hist_buckets <= MAX_HIST_BUCKETS:
+            raise ValueError(
+                f"hist_buckets must be in [8, {MAX_HIST_BUCKETS}], got "
+                f"{self.hist_buckets}")
+        if self.window_ticks < 1 or self.num_windows < 1:
+            raise ValueError("window_ticks and num_windows must be >= 1")
+
+
+# ------------------------------------------------------------- bucketing
+def bucket_index(lat, num_buckets: int) -> np.ndarray:
+    """numpy log-bucket index (vectorized); see the module docstring."""
+    v = np.maximum(np.asarray(lat, np.int64), 0)
+    vv = np.maximum(v, 1)
+    _, ex = np.frexp(vv.astype(np.float64))
+    e = ex.astype(np.int64) - 1                      # bit_length(v) - 1
+    sub = (vv >> np.maximum(e - 2, 0).astype(np.int64)) & 3
+    idx = np.where(v < 8, v, 4 * e + sub - 4)
+    return np.minimum(idx, num_buckets - 1).astype(np.int64)
+
+
+def bucket_index_jnp(lat, num_buckets: int):
+    """jnp twin of :func:`bucket_index` (``clz``-based, exact at any
+    int64)."""
+    import jax
+    import jax.numpy as jnp
+
+    v = jnp.maximum(jnp.asarray(lat, jnp.int64), 0)
+    vv = jnp.maximum(v, 1)
+    e = 63 - jax.lax.clz(vv)
+    sub = (vv >> jnp.maximum(e - 2, 0)) & 3
+    idx = jnp.where(v < 8, v, 4 * e + sub - 4)
+    return jnp.minimum(idx, num_buckets - 1)
+
+
+def bucket_bounds(idx: int) -> Tuple[int, int]:
+    """Inclusive ``(lo, hi)`` tick range of bucket ``idx`` (the top bucket
+    of a spec additionally absorbs everything above its ``hi``)."""
+    idx = int(idx)
+    if idx < 8:
+        return idx, idx
+    e = (idx + 4) // 4
+    sub = (idx + 4) % 4
+    lo = (1 << e) + sub * (1 << (e - 2))
+    return lo, lo + (1 << (e - 2)) - 1
+
+
+def percentile_from_hist(hist: np.ndarray, q: float) -> Optional[Dict]:
+    """Nearest-rank percentile over bucket counts: the bucket holding the
+    ``ceil(q/100 * n)``-th smallest sample, as ``{bucket, lo, hi, rank,
+    n}``; ``None`` on an empty histogram.  The true sample at that rank is
+    guaranteed to lie in ``[lo, hi]`` (validated against
+    ``numpy.percentile``'s inverted-CDF method in the tests)."""
+    hist = np.asarray(hist, np.int64)
+    n = int(hist.sum())
+    if n == 0:
+        return None
+    k = max(1, int(math.ceil(q / 100.0 * n)))
+    idx = int(np.searchsorted(np.cumsum(hist), k))
+    lo, hi = bucket_bounds(idx)
+    return {"bucket": idx, "lo": lo, "hi": hi, "rank": k, "n": n}
+
+
+# ------------------------------------------------------ in-scan primitives
+def acc_rows(spec: MetricsSpec, n_hosts: int, n_devs: int) -> int:
+    """Row count of the combined scatter accumulator: per-host histogram +
+    windows, plus a per-device histogram block when devices != hosts."""
+    rows = n_hosts * (spec.hist_buckets + spec.num_windows)
+    if n_devs > 1:
+        rows += n_devs * spec.hist_buckets
+    return rows
+
+
+def acc_update(spec: MetricsSpec, acc, *, host, dev, n_hosts: int,
+               n_devs: int, issue, done, size: int, hit, valid=None):
+    """One access into the combined accumulator: histogram bucket row
+    ``[1,0,0,0]`` and window row ``[bytes, latency, 1, hit]`` (plus the
+    device-histogram row when tracked) in a single scatter-add."""
+    import jax.numpy as jnp
+
+    NB, W = spec.hist_buckets, spec.num_windows
+    lat = done - issue
+    b = bucket_index_jnp(lat, NB)
+    wdx = jnp.clip(done // spec.window_ticks, 0, W - 1)
+    one = jnp.asarray(1, jnp.int64)
+    zero = jnp.asarray(0, jnp.int64)
+    hrow = jnp.stack([one, zero, zero, zero])
+    wrow = jnp.stack([jnp.asarray(size, jnp.int64), lat, one,
+                      jnp.where(hit, one, zero)])
+    base = host * (NB + W)
+    ids = [base + b, base + NB + wdx]
+    vals = [hrow, wrow]
+    if n_devs > 1:
+        ids.append(n_hosts * (NB + W) + dev * NB + b)
+        vals.append(hrow)
+    rows = jnp.stack(vals)
+    if valid is not None:
+        rows = rows * jnp.where(valid, one, zero)
+    return acc.at[jnp.stack(ids)].add(rows)
+
+
+def fold_arrays(spec: MetricsSpec, issues, dones, hits, size: int):
+    """Single-host ``(hist, windows, dev_hist)`` from materialized
+    per-access arrays — the numpy twin of repeated :func:`acc_update`,
+    identical integers by construction.  When the scan already emits
+    ``(issue, done, flags)`` per access (``return_latencies=True``) the
+    histogram/window fold runs here, off the replay hot path (deferred to
+    first bundle access); the in-scan scatter is only carried in streaming
+    mode, where there are no per-access outputs to fold."""
+    NB, W = spec.hist_buckets, spec.num_windows
+    issues = np.asarray(issues, np.int64)
+    dones = np.asarray(dones, np.int64)
+    lat = dones - issues
+    b = bucket_index(lat, NB)
+    hist = np.bincount(b, minlength=NB).astype(np.int64)[None]
+    wdx = np.clip(dones // spec.window_ticks, 0, W - 1)
+    cnt = np.bincount(wdx, minlength=W).astype(np.int64)
+    windows = np.zeros((1, W, 4), np.int64)
+    windows[0, :, 0] = cnt * size
+    np.add.at(windows[0, :, 1], wdx, lat)
+    windows[0, :, 2] = cnt
+    np.add.at(windows[0, :, 3], wdx, np.asarray(hits, np.int64))
+    return hist, windows, hist.copy()
+
+
+# Event booleans the scan packs into the per-access flags word when metrics
+# are enabled with per-access outputs (``return_latencies=True``): every
+# MEDIA_COUNTERS column is then a pure function of (writes, flags), so the
+# counter vector needs no carry at all.  Bits 0/1 are the public hit/evict
+# bits the engine always emits.
+FLAG_EVENT_BITS: Dict[str, Tuple[Tuple[int, str], ...]] = {
+    DRAM: (),
+    PMEM: (),
+    SSD_BUF: ((2, "fill"),),
+    SSD_CACHE: ((2, "miss"), (3, "coalesce"), (4, "stall"),
+                (5, "eviction")),
+}
+
+
+def media_from_flags(kind: str, writes, flags) -> np.ndarray:
+    """:data:`MEDIA_COUNTERS`\\ [kind] vector from the input write column
+    and the scan's (event-bit-widened) flags word — the deferred twin of
+    summing :func:`media_increments` over the trace."""
+    flags = np.asarray(flags)
+    wr = np.asarray(writes, bool)
+    n = int(flags.size)
+    w = int(wr.sum())
+
+    def cnt(bit: int) -> int:
+        return int(((flags >> bit) & 1).sum())
+
+    if kind == DRAM:
+        cols = [n, n - w, w]
+    elif kind == PMEM:
+        cols = [n, n - w, w, cnt(0)]
+    elif kind == SSD_BUF:
+        fill = ((flags >> 2) & 1).astype(bool)
+        cols = [n, n - w, w, cnt(0), int((fill & ~wr).sum()),
+                int((fill & wr).sum()), cnt(1)]
+    elif kind == SSD_CACHE:
+        miss = cnt(2)
+        cols = [n, n - w, w, cnt(0), miss, cnt(3), cnt(4), miss, cnt(1),
+                cnt(5), cnt(1)]
+    else:
+        raise ValueError(kind)
+    return np.asarray(cols, np.int64)
+
+
+def split_acc(spec: MetricsSpec, acc, n_hosts: int, n_devs: int):
+    """Decode the combined accumulator into ``(hist (H,NB), windows
+    (H,W,4), dev_hist (D,NB))`` numpy arrays."""
+    NB, W = spec.hist_buckets, spec.num_windows
+    acc = np.asarray(acc)
+    per = acc[:n_hosts * (NB + W)].reshape(n_hosts, NB + W, 4)
+    hist = per[:, :NB, 0].copy()
+    windows = per[:, NB:, :].copy()
+    if n_devs > 1:
+        dev_hist = acc[n_hosts * (NB + W):].reshape(n_devs, NB, 4)[:, :, 0]
+        dev_hist = dev_hist.copy()
+    else:
+        dev_hist = hist.sum(axis=0, keepdims=True)
+    return hist, windows, dev_hist
+
+
+def media_increments(kind: str, wr, out):
+    """Per-access increment vector for :data:`MEDIA_COUNTERS`\\ [kind],
+    from the stack step's extras dict — one fused elementwise add."""
+    import jax.numpy as jnp
+
+    one = jnp.asarray(1, jnp.int64)
+    zero = jnp.asarray(0, jnp.int64)
+
+    def b(x):
+        return jnp.where(x, one, zero)
+
+    rd, wrt = b(~wr), b(wr)
+    if kind == DRAM:
+        cols = [one, rd, wrt]
+    elif kind == PMEM:
+        cols = [one, rd, wrt, b(out["hit"])]
+    elif kind == SSD_BUF:
+        fill = out["fill"]
+        cols = [one, rd, wrt, b(out["hit"]), b(fill & ~wr), b(fill & wr),
+                b(out["evict"])]
+    elif kind == SSD_CACHE:
+        miss = out["miss"]
+        cols = [one, rd, wrt, b(out["hit"]), b(miss), b(out["coalesce"]),
+                b(out["stall"]), b(miss), b(out["evict"]),
+                b(out["eviction"]), b(out["evict"])]
+    else:
+        raise ValueError(kind)
+    return jnp.stack(cols)
+
+
+# --------------------------------------------------------------- the bundle
+class MetricsBundle:
+    """One run's telemetry, schema-identical between the python driver and
+    the fused lanes (integers only, so golden pins compare exactly).
+
+    ``hist (H, hist_buckets)``, ``dev_hist (D, hist_buckets)`` and
+    ``windows (H, num_windows, 4)`` (bytes/lat/n/hits) are int64 arrays;
+    ``media`` / ``flash`` are per-device / per-flash counter dicts.  Either
+    pass them eagerly, or pass ``deferred`` — a zero-arg callable returning
+    ``(hist, windows, dev_hist, media)`` — and the fold runs once on first
+    access, off the replay hot path (the fused engine defers the O(N)
+    histogram/window/counter fold out of ``run_arrays`` this way)."""
+
+    def __init__(self, *, spec: MetricsSpec, hosts: Sequence[str],
+                 devices: Sequence[str], hist: Optional[np.ndarray] = None,
+                 dev_hist: Optional[np.ndarray] = None,
+                 windows: Optional[np.ndarray] = None,
+                 media: Optional[List[Dict[str, int]]] = None,
+                 flash: Optional[List[Dict[str, int]]] = None,
+                 ports: Optional[Dict[str, Dict]] = None,
+                 ecmp: Optional[Dict[str, List[int]]] = None,
+                 deferred: Optional[Callable] = None) -> None:
+        if deferred is None and (hist is None or dev_hist is None
+                                 or windows is None or media is None):
+            raise ValueError(
+                "MetricsBundle needs hist/dev_hist/windows/media, or a "
+                "deferred fold producing them")
+        self.spec = spec
+        self.hosts = list(hosts)
+        self.devices = list(devices)
+        self.flash = flash if flash is not None else []
+        self.ports = ports if ports is not None else {}
+        self.ecmp = ecmp if ecmp is not None else {}
+        self._hist = hist
+        self._dev_hist = dev_hist
+        self._windows = windows
+        self._media = media
+        self._deferred = deferred
+
+    def _force(self) -> None:
+        if self._deferred is not None:
+            (self._hist, self._windows, self._dev_hist,
+             self._media) = self._deferred()
+            self._deferred = None
+
+    @property
+    def hist(self) -> np.ndarray:
+        self._force()
+        return self._hist
+
+    @property
+    def dev_hist(self) -> np.ndarray:
+        self._force()
+        return self._dev_hist
+
+    @property
+    def windows(self) -> np.ndarray:
+        self._force()
+        return self._windows
+
+    @property
+    def media(self) -> List[Dict[str, int]]:
+        self._force()
+        return self._media
+
+    # ------------------------------------------------------------ analysis
+    def percentile(self, q: float, host: Optional[int] = None,
+                   device: Optional[int] = None) -> Optional[Dict]:
+        """Nearest-rank percentile over one host's, one device's, or the
+        aggregate histogram; ``None`` when empty."""
+        if host is not None:
+            h = self.hist[host]
+        elif device is not None:
+            h = self.dev_hist[device]
+        else:
+            h = self.hist.sum(axis=0)
+        return percentile_from_hist(h, q)
+
+    def percentile_ticks(self, q: float, host: Optional[int] = None,
+                         device: Optional[int] = None) -> Optional[int]:
+        """The percentile bucket's upper edge in ticks (conservative)."""
+        p = self.percentile(q, host=host, device=device)
+        return None if p is None else int(p["hi"])
+
+    def percentile_ns(self, q: float, host: Optional[int] = None,
+                      device: Optional[int] = None) -> Optional[float]:
+        t = self.percentile_ticks(q, host=host, device=device)
+        return None if t is None else to_ns(t)
+
+    @property
+    def accesses(self) -> int:
+        return int(sum(m.get("accesses", 0) for m in self.media))
+
+    @property
+    def hit_rate(self) -> float:
+        """Hits over accesses, summed over devices — using each media
+        kind's own hit counter (cache hits / buffer hits / row hits);
+        0.0 for hit-less media or an empty run."""
+        acc = self.accesses
+        hits = 0
+        for m in self.media:
+            for key in _HIT_KEYS:
+                if key in m:
+                    hits += m[key]
+                    break
+        return hits / acc if acc else 0.0
+
+    @property
+    def write_amplification(self) -> float:
+        """``(host + GC writes) / host writes`` over every flash instance
+        (1.0 with no flash or no host writes, like
+        :meth:`FTL.write_amplification`)."""
+        hw = sum(f["host_writes"] for f in self.flash)
+        gw = sum(f["gc_writes"] for f in self.flash)
+        return (hw + gw) / hw if hw else 1.0
+
+    # ---------------------------------------------------------- export
+    def to_jsonable(self) -> Dict:
+        """Deterministic, integers-only JSON form.  Histograms and windows
+        are sparse ``{index: value}`` maps so golden pins stay compact;
+        ``p50/p95/p99`` per host are included for readability (derived
+        from the histogram, so parity follows from histogram parity)."""
+        def sparse_hist(row):
+            return {str(i): int(v) for i, v in enumerate(row) if v}
+
+        def sparse_windows(rows):
+            return {str(w): [int(x) for x in r]
+                    for w, r in enumerate(rows) if any(r)}
+
+        def pcts(row):
+            out = {}
+            for q in (50, 95, 99):
+                p = percentile_from_hist(row, q)
+                out[f"p{q}"] = None if p is None else int(p["hi"])
+            return out
+
+        return {
+            "spec": {"hist_buckets": self.spec.hist_buckets,
+                     "window_ticks": self.spec.window_ticks,
+                     "num_windows": self.spec.num_windows},
+            "hosts": list(self.hosts),
+            "devices": list(self.devices),
+            "hist": [sparse_hist(r) for r in self.hist],
+            "dev_hist": [sparse_hist(r) for r in self.dev_hist],
+            "windows": [sparse_windows(r) for r in self.windows],
+            "percentiles": [pcts(r) for r in self.hist],
+            "media": [{k: int(v) for k, v in m.items()} for m in self.media],
+            "flash": [{k: int(v) for k, v in f.items()} for f in self.flash],
+            "ports": {k: dict(v) for k, v in sorted(self.ports.items())},
+            "ecmp": {k: list(v) for k, v in sorted(self.ecmp.items())},
+        }
+
+
+# ------------------------------------------------------- python collection
+def _media_hits(dev) -> int:
+    if hasattr(dev, "cache"):
+        return int(dev.cache.policy.hits)
+    s = getattr(dev, "stats", {})
+    for key in ("buf_hits", "row_hits"):
+        if key in s:
+            return int(s[key])
+    return 0
+
+
+def media_counters_of(dev) -> Dict[str, int]:
+    """One device's :data:`MEDIA_COUNTERS` dict from its live stats."""
+    if hasattr(dev, "cache"):
+        c, pol = dev.cache.stats, dev.cache.policy
+        return {"accesses": c["accesses"], "reads": c["reads"],
+                "writes": c["writes"], "hits": pol.hits,
+                "misses": pol.misses,
+                "mshr_coalesced": c["mshr_coalesced"],
+                "mshr_stalls": c["mshr_stalls"], "fills": c["fills"],
+                "writebacks": c["writebacks"], "evictions": pol.evictions,
+                "dirty_evictions": pol.dirty_evictions}
+    s = dev.stats
+    out = {"accesses": s["reads"] + s["writes"], "reads": s["reads"],
+           "writes": s["writes"]}
+    if "buf_hits" in s:
+        out.update(buf_hits=s["buf_hits"], flash_reads=s["flash_reads"],
+                   rmw_fills=s["rmw_fills"], flash_writes=s["flash_writes"])
+    elif "row_hits" in s:
+        out["row_hits"] = s["row_hits"]
+    return {k: int(v) for k, v in out.items()}
+
+
+def flash_counters_of(hil) -> Dict[str, int]:
+    return {k: int(hil.ftl.stats[k]) for k in FLASH_COUNTERS}
+
+
+def _unique_hils(devices: Sequence) -> List:
+    """Flash instances in first-appearance order — the same dedupe order
+    the fused :func:`~repro.core.replay.multihost._media_setup` uses."""
+    seen: Dict[int, object] = {}
+    for d in devices:
+        hil = getattr(d, "hil", None)
+        if hil is not None:
+            seen.setdefault(id(hil), hil)
+    return list(seen.values())
+
+
+def _ports_of(fabric) -> Dict[str, Dict]:
+    """Integer port counters keyed ``"u->v"`` — :meth:`Fabric.port_report`
+    minus the float derivations, same packets>0 filter."""
+    out = {}
+    for key in sorted(fabric.ports):
+        p = fabric.ports[key]
+        if not p.packets:
+            continue
+        out[f"{p.src}->{p.dst}"] = {
+            "bytes": int(p.bytes),
+            "packets": int(p.packets),
+            "occupied_ticks": int(p.occupied_ticks),
+            "queued_ticks": int(p.queued_ticks),
+            "qos_throttle_events": int(
+                getattr(p, "qos_throttle_events", 0)),
+            "bytes_by_host": {h: int(b) for h, b in
+                              sorted(p.bytes_by_origin.items())},
+        }
+    return out
+
+
+def _target_layout(targets: Sequence):
+    """(hosts, device labels, device objects, fabric|None, dev_of fns) for
+    a homogeneous target list — mirrors the fused engines' labeling, and
+    degrades gracefully for plain (fabric-less) devices."""
+    first = targets[0]
+    if isinstance(first, HostPortView):
+        pool = first.pool
+        hosts = [t.host for t in targets]
+        labels = list(pool.device_nodes)
+        devices = list(pool.devices)
+        mapper = pool.mapper
+
+        def dev_of(_i):
+            return lambda addr: mapper.map(addr)[0]
+
+        return (hosts, labels, devices, pool.fabric,
+                [dev_of(i) for i in range(len(targets))])
+    if isinstance(first, FabricAttachedDevice):
+        hosts = [t.host for t in targets]
+        labels = [t.device_node for t in targets]
+        devices = [t.inner for t in targets]
+        return (hosts, labels, devices, first.fabric,
+                [(lambda i: (lambda addr: i))(i)
+                 for i in range(len(targets))])
+    hosts = [f"host{i}" for i in range(len(targets))]
+    if len(targets) == 1:
+        hosts = ["host0"]
+    labels = [t.name for t in targets]
+    return (hosts, labels, list(targets), None,
+            [(lambda i: (lambda addr: i))(i) for i in range(len(targets))])
+
+
+class MetricTap:
+    """Wrap one host target, recording per-access ``(issue, done, size,
+    device, hit-delta)`` — the python side of histogram/window parity —
+    without touching timing."""
+
+    def __init__(self, target, dev_of: Callable[[int], int],
+                 hit_count: Callable[[], int]) -> None:
+        self._dev = target
+        self._dev_of = dev_of
+        self._hits = hit_count
+        self.records: List[Tuple[int, int, int, int, int]] = []
+
+    def __getattr__(self, name):
+        return getattr(self._dev, name)
+
+    def service(self, now, addr, size, write, posted=False):
+        h0 = self._hits()
+        done = self._dev.service(now, addr, size, write, posted)
+        self.records.append((int(now), int(done), int(size),
+                             int(self._dev_of(addr)), self._hits() - h0))
+        return done
+
+
+def attach_taps(targets: Sequence) -> List[MetricTap]:
+    """One :class:`MetricTap` per host target; run the (python) driver over
+    the taps, then hand targets+taps to :func:`collect_python`."""
+    _, _, devices, _, dev_fns = _target_layout(targets)
+
+    def hit_count():
+        return sum(_media_hits(d) for d in devices)
+
+    return [MetricTap(t, fn, hit_count)
+            for t, fn in zip(targets, dev_fns)]
+
+
+def collect_python(spec: MetricsSpec, targets: Sequence,
+                   taps: Sequence[MetricTap]) -> MetricsBundle:
+    """Build the bundle from an interpreted run: tap records give the
+    histograms/windows, the live stats dicts give every counter."""
+    hosts, labels, devices, fabric, _ = _target_layout(targets)
+    NB, W, T = spec.hist_buckets, spec.num_windows, spec.window_ticks
+    H, D = len(hosts), len(labels)
+    hist = np.zeros((H, NB), np.int64)
+    dev_hist = np.zeros((D, NB), np.int64)
+    windows = np.zeros((H, W, 4), np.int64)
+    for i, tap in enumerate(taps):
+        for issue, done, size, dev, hit in tap.records:
+            b = int(bucket_index(done - issue, NB))
+            hist[i, b] += 1
+            dev_hist[dev, b] += 1
+            w = min(max(done // T, 0), W - 1)
+            windows[i, w] += (size, done - issue, 1, hit)
+    bundle = MetricsBundle(
+        spec=spec, hosts=hosts, devices=labels, hist=hist,
+        dev_hist=dev_hist, windows=windows,
+        media=[media_counters_of(d) for d in devices],
+        flash=[flash_counters_of(h) for h in _unique_hils(devices)],
+        ports=_ports_of(fabric) if fabric is not None else {},
+        ecmp={k: list(v) for k, v in
+              sorted(getattr(fabric, "ecmp_counts", {}).items())}
+        if fabric is not None else {},
+    )
+    return bundle
+
+
+# ------------------------------------------------------- fused collection
+def _flash_dicts(flash_cnt) -> List[Dict[str, int]]:
+    if flash_cnt is None:
+        return []
+    return [dict(zip(FLASH_COUNTERS, (int(x) for x in row)))
+            for row in np.asarray(flash_cnt)]
+
+
+def _single_ports(device, queued, addrs: np.ndarray,
+                  routes: Optional[np.ndarray], size: int):
+    """``(host_label, dev_label, ports, ecmp)`` for a single-host fused
+    run: port byte/packet/occupancy totals and ECMP choice counts are
+    reconstructed from the route choices host-side (pure functions of the
+    trace — exact, zero scan cost); ``queued`` is the per-port in-scan
+    queueing accumulator."""
+    n = int(np.asarray(addrs).size)
+    ports: Dict[str, Dict] = {}
+    ecmp: Dict[str, List[int]] = {}
+    if isinstance(device, FabricAttachedDevice):
+        fab, host, node = device.fabric, device.host, device.device_node
+        queued = [int(q) for q in np.asarray(queued).reshape(-1)]
+        if routes is None:
+            for h, (key, occ, _aft) in enumerate(
+                    fab.route_occupancy(host, node, size)):
+                ports[f"{key[0]}->{key[1]}"] = {
+                    "bytes": n * size, "packets": n,
+                    "occupied_ticks": n * int(occ),
+                    "queued_ticks": queued[h],
+                    "qos_throttle_events": 0,   # single origin never floors
+                    "bytes_by_host": {host: n * size}}
+        else:
+            K = len(fab.paths(host, node))
+            per_route = [fab.route_occupancy(host, node, size, choice=k)
+                         for k in range(K)]
+            # same port-union indexing as spec._fabric_route_tensors
+            port_keys = sorted({key for hops in per_route
+                                for key, _, _ in hops})
+            pidx = {key: i for i, key in enumerate(port_keys)}
+            counts = np.bincount(np.asarray(routes), minlength=K)
+            nb = np.zeros(len(port_keys), np.int64)
+            pk = np.zeros(len(port_keys), np.int64)
+            occt = np.zeros(len(port_keys), np.int64)
+            for k, hops in enumerate(per_route):
+                for key, occ, _aft in hops:
+                    j = pidx[key]
+                    nb[j] += int(counts[k]) * size
+                    pk[j] += int(counts[k])
+                    occt[j] += int(counts[k]) * int(occ)
+            for key, j in pidx.items():
+                if not pk[j]:
+                    continue
+                ports[f"{key[0]}->{key[1]}"] = {
+                    "bytes": int(nb[j]), "packets": int(pk[j]),
+                    "occupied_ticks": int(occt[j]),
+                    "queued_ticks": queued[j],
+                    "qos_throttle_events": 0,
+                    "bytes_by_host": {host: int(nb[j]) * size // size}}
+            for key in ports:
+                ports[key]["bytes_by_host"] = {host: ports[key]["bytes"]}
+            if K > 1 and n:
+                ecmp[f"{host}->{node}"] = [int(c) for c in counts]
+        host_label = host
+        dev_label = node
+    else:
+        host_label = "host0"
+        dev_label = device.name
+    return host_label, dev_label, ports, ecmp
+
+
+def bundle_single_fused(spec: MetricsSpec, device, cfg, acc, med, queued,
+                        flash_cnt, addrs: np.ndarray,
+                        routes: Optional[np.ndarray], size: int
+                        ) -> MetricsBundle:
+    """Assemble the bundle after a single-host *streaming* fused run
+    (``return_latencies=False``): ``acc``/``med`` come straight out of the
+    scan carry — O(buckets+windows) output, no per-access arrays."""
+    hist, windows, dev_hist = split_acc(spec, acc, 1, 1)
+    media = [dict(zip(MEDIA_COUNTERS[cfg.kind],
+                      (int(x) for x in np.asarray(med))))]
+    host_label, dev_label, ports, ecmp = _single_ports(
+        device, queued, addrs, routes, size)
+    return MetricsBundle(
+        spec=spec, hosts=[host_label], devices=[dev_label], hist=hist,
+        dev_hist=dev_hist, windows=windows, media=media,
+        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp)
+
+
+def bundle_single_deferred(spec: MetricsSpec, device, cfg, issues, dones,
+                           flags, writes, queued, flash_cnt,
+                           addrs: np.ndarray,
+                           routes: Optional[np.ndarray], size: int
+                           ) -> MetricsBundle:
+    """Assemble the bundle after a single-host fused run with per-access
+    outputs (``return_latencies=True``).  The histogram/window fold and the
+    counter vector are pure functions of the materialized
+    ``(issue, done, flags)`` columns (the scan packs every
+    :data:`FLAG_EVENT_BITS` event into the flags word), so they are
+    deferred to first access — replay pays only the in-scan queueing
+    scalars and a few flag-bit ORs for full telemetry."""
+    host_label, dev_label, ports, ecmp = _single_ports(
+        device, queued, addrs, routes, size)
+
+    def fold():
+        hist, windows, dev_hist = fold_arrays(
+            spec, issues, dones, flags & 1, size)
+        media = [dict(zip(MEDIA_COUNTERS[cfg.kind],
+                          (int(x) for x in
+                           media_from_flags(cfg.kind, writes, flags))))]
+        return hist, windows, dev_hist, media
+
+    return MetricsBundle(
+        spec=spec, hosts=[host_label], devices=[dev_label],
+        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp,
+        deferred=fold)
+
+
+def bundle_multi_fused(spec: MetricsSpec, meta: Dict, mcfg, acc, med,
+                       queued, qthr, flash_cnt, devs: np.ndarray,
+                       routes: np.ndarray, lens: np.ndarray, size: int,
+                       params: Dict) -> MetricsBundle:
+    """Assemble the bundle after a multi-host fused run.  Per-port
+    byte/packet/occupancy and per-host attribution are reconstructed from
+    the hop tensors + route choices (numpy, exact); ``queued``/``qthr``
+    are the in-scan per-port queueing and QoS-throttle accumulators."""
+    hosts, nodes = meta["hosts"], meta["nodes"]
+    fabric = meta["fabric"]
+    H, D = len(hosts), len(nodes)
+    hist, windows, dev_hist = split_acc(spec, acc, H, D)
+    med = np.asarray(med)
+    names = MEDIA_COUNTERS[mcfg.stack.kind]
+    media = [dict(zip(names, (int(x) for x in med[d]))) for d in range(D)]
+
+    port_keys = sorted(fabric.ports)
+    P = len(port_keys)
+    nbytes = np.zeros(P, np.int64)
+    npkts = np.zeros(P, np.int64)
+    nocc = np.zeros(P, np.int64)
+    by_host = np.zeros((P, H), np.int64)
+    hop_port, hop_occ = params["hop_port"], params["hop_occ"]
+    hop_on = params["hop_on"]
+    lens = np.asarray(lens)
+    for i in range(H):
+        L = int(lens[i])
+        if not L:
+            continue
+        d = np.asarray(devs)[i, :L]
+        r = np.asarray(routes)[i, :L]
+        for h in range(mcfg.max_hops):
+            on = hop_on[i, d, r, h]
+            pi = hop_port[i, d, r, h][on]
+            occ = hop_occ[i, d, r, h][on]
+            np.add.at(npkts, pi, 1)
+            np.add.at(nbytes, pi, size)
+            np.add.at(nocc, pi, occ)
+            np.add.at(by_host[:, i], pi, size)
+    queued = np.asarray(queued).reshape(-1)
+    qthr = (np.asarray(qthr).reshape(-1) if qthr is not None
+            else np.zeros(P, np.int64))
+    ports: Dict[str, Dict] = {}
+    for j, key in enumerate(port_keys):
+        if not npkts[j]:
+            continue
+        ports[f"{key[0]}->{key[1]}"] = {
+            "bytes": int(nbytes[j]), "packets": int(npkts[j]),
+            "occupied_ticks": int(nocc[j]),
+            "queued_ticks": int(queued[j]),
+            "qos_throttle_events": int(qthr[j]),
+            "bytes_by_host": {hosts[i]: int(by_host[j, i])
+                              for i in range(H) if by_host[j, i]},
+        }
+
+    ecmp: Dict[str, List[int]] = {}
+    route_count = meta["route_count"]
+    for i in range(H):
+        L = int(lens[i])
+        if not L:
+            continue
+        d_col = np.asarray(devs)[i, :L]
+        r_col = np.asarray(routes)[i, :L]
+        for d in np.unique(d_col):
+            K = int(route_count[i, d])
+            if K <= 1:
+                continue
+            m = d_col == d
+            if not m.any():
+                continue
+            counts = np.bincount(r_col[m], minlength=K)
+            key = f"{hosts[i]}->{nodes[d]}"
+            prev = ecmp.get(key)
+            if prev is None:
+                ecmp[key] = [int(c) for c in counts]
+            else:                      # same (host, node) reached twice
+                ecmp[key] = [int(a + b) for a, b in zip(prev, counts)]
+    return MetricsBundle(
+        spec=spec, hosts=list(hosts), devices=list(nodes), hist=hist,
+        dev_hist=dev_hist, windows=windows, media=media,
+        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp)

@@ -215,7 +215,8 @@ def _params_equal(a: Dict, b: Dict) -> bool:
 
 
 def _media_setup(inners: Sequence, *, size: int, outstanding: int,
-                 posted_writes: bool, n_accesses: int, max_addr: int):
+                 posted_writes: bool, n_accesses: int, max_addr: int,
+                 counters: bool = False):
     """The media half of the multi-host stack: one
     :class:`~repro.core.replay.spec.StackConfig` shared by every target,
     media timing params, and the media-lane -> flash-instance map (deduped
@@ -225,7 +226,8 @@ def _media_setup(inners: Sequence, *, size: int, outstanding: int,
     arrays); every other kind must be identically configured."""
     specs = [media_stack(d, size=size, outstanding=outstanding,
                          posted_writes=posted_writes, n_accesses=n_accesses,
-                         max_addr=max_addr) for d in inners]
+                         max_addr=max_addr, counters=counters)
+             for d in inners]
     cfg0, mp0 = specs[0]
     for k, (cfgk, mpk) in enumerate(specs[1:], start=1):
         if cfgk != cfg0 or (cfg0.kind != DRAM
@@ -254,27 +256,54 @@ def _media_setup(inners: Sequence, *, size: int, outstanding: int,
     return cfg0, mp0, flash_of, len(flash_lane)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 7))
+@functools.partial(jax.jit, static_argnums=(0, 7, 8, 9, 10))
 def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
-               block: int = 1):
+               block: int = 1, mspec=None, want_lat: bool = True,
+               size: int = 64):
     H, O = cfg.num_hosts, cfg.outstanding
+    state0 = stack.init_state(cfg.stack, cfg.num_devs,
+                              cfg.n_flash if cfg.n_flash else None)
+    aux0 = {}
+    if mspec is not None:
+        from repro.core.replay import metrics as _metrics
+        aux0["acc"] = jnp.zeros(
+            (_metrics.acc_rows(mspec, H, cfg.num_devs), 4), jnp.int64)
+        aux0["med"] = jnp.zeros(
+            (cfg.num_devs, len(_metrics.MEDIA_COUNTERS[cfg.stack.kind])),
+            jnp.int64)
+        aux0["q"] = jnp.zeros(cfg.num_ports, jnp.int64)
+        if cfg.qos:
+            aux0["qthr"] = jnp.zeros(cfg.num_ports, jnp.int64)
+        fc0 = stack.flash_counters(state0)
+        if fc0 is not None:
+            # snapshot carry: padded steps are strictly trailing, so the
+            # last *valid* snapshot is the true end-of-trace total
+            aux0["flash"] = fc0
+    if not want_lat:
+        aux0["first"] = jnp.full(H, BIG, jnp.int64)
+        aux0["last"] = jnp.full(H, start_tick, jnp.int64)
+        aux0["sum"] = jnp.zeros(H, jnp.int64)
+        aux0["cnt"] = jnp.zeros(H, jnp.int64)
+        aux0["bad"] = jnp.zeros((), bool)
+        aux0["gcs"] = _i64(0)
     init = (jnp.full((H, O), start_tick, jnp.int64),   # per-host LFB slots
             jnp.full(H, start_tick, jnp.int64),        # per-host issue clock
             jnp.zeros(H, jnp.int64),                   # per-host trace index
             jnp.zeros(cfg.num_ports, jnp.int64),       # shared port busy
             _i64(1),                                   # global stamp counter
             # stacked media/flash state: one lane per mounted device
-            stack.init_state(cfg.stack, cfg.num_devs,
-                             cfg.n_flash if cfg.n_flash else None),
+            state0,
             # QoS: per-port per-host virtual finish + last arrival
             jnp.zeros((cfg.num_ports, H), jnp.int64),
-            jnp.full((cfg.num_ports, H), NEVER, jnp.int64))
+            jnp.full((cfg.num_ports, H), NEVER, jnp.int64),
+            aux0)
 
     def step(carry, _):
-        slots, now, idx, port_busy, ctr, st, vft, last_arr = carry
+        slots, now, idx, port_busy, ctr, st, vft, last_arr, aux = carry
         cand = jnp.where(idx < lens,
                          jnp.maximum(now, jnp.min(slots, axis=1)), BIG)
         i = jnp.argmin(cand)                 # ties -> lowest host index
+        valid = idx[i] < lens[i]             # padded steps are trailing
         row = slots[i]
         k = jnp.argmin(row)
         issue = jnp.maximum(now[i], row[k])
@@ -285,6 +314,8 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
         t = issue
         floor = _i64(0)
+        qacc = aux.get("q")
+        qthr = aux.get("qthr")
         for h in range(cfg.max_hops):
             on = p["hop_on"][i, dev, r, h]
             pi = p["hop_port"][i, dev, r, h]
@@ -307,7 +338,15 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
                     jnp.where(qon, jnp.maximum(prev, t) + pace, prev))
                 last_arr = last_arr.at[pi, i].set(
                     jnp.where(qon, t, last_arr[pi, i]))
+                if qthr is not None:
+                    # SwitchPort.qos_update's nonzero-floor return is the
+                    # python qos_throttle_events bump, hop for hop
+                    qthr = qthr.at[pi].add(
+                        jnp.where(qon & (prev > t) & valid, 1, 0))
             start = jnp.maximum(t, port_busy[pi])
+            if qacc is not None:
+                # SwitchPort.transmit: queued_ticks += start - now
+                qacc = qacc.at[pi].add(jnp.where(on & valid, start - t, 0))
             done_h = start + occ_h
             port_busy = port_busy.at[pi].set(
                 jnp.where(on, done_h, port_busy[pi]))
@@ -327,11 +366,40 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
         if cfg.qos:
             done = jnp.maximum(done, floor)   # ack floor, data path untouched
         bad, gcs = stack.flash_health(st)
+        if mspec is not None:
+            from repro.core.replay import metrics as _metrics
+            aux = {**aux,
+                   "acc": _metrics.acc_update(
+                       mspec, aux["acc"], host=i, dev=dev, n_hosts=H,
+                       n_devs=cfg.num_devs, issue=issue, done=done,
+                       size=size, hit=out["hit"], valid=valid),
+                   "med": aux["med"].at[dev].add(
+                       _metrics.media_increments(cfg.stack.kind, wr, out)
+                       * jnp.where(valid, 1, 0)),
+                   "q": qacc}
+            if qthr is not None:
+                aux = {**aux, "qthr": qthr}
+            if "flash" in aux:
+                aux = {**aux, "flash": jnp.where(
+                    valid, stack.flash_counters(st), aux["flash"])}
+        if not want_lat:
+            neg = _i64(-BIG)
+            aux = {**aux,
+                   "first": aux["first"].at[i].min(
+                       jnp.where(valid, issue, BIG)),
+                   "last": aux["last"].at[i].max(
+                       jnp.where(valid, done, neg)),
+                   "sum": aux["sum"].at[i].add(
+                       jnp.where(valid, done - issue, 0)),
+                   "cnt": aux["cnt"].at[i].add(jnp.where(valid, 1, 0)),
+                   "bad": aux["bad"] | (bad & valid),
+                   "gcs": jnp.where(valid, gcs, aux["gcs"])}
         slots = slots.at[i, k].set(done)
         now = now.at[i].set(issue + p["issue_ov"])
         idx = idx.at[i].set(idx[i] + 1)
-        return ((slots, now, idx, port_busy, ctr + 1, st, vft, last_arr),
-                (i, issue, done, bad, gcs))
+        ys = (i, issue, done, bad, gcs) if want_lat else None
+        return ((slots, now, idx, port_busy, ctr + 1, st, vft, last_arr,
+                 aux), ys)
 
     # Blocked replay: `block` steps per sequential scan iteration (unroll).
     # The carry — including the per-host candidate race state (slots, now,
@@ -339,9 +407,10 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
     # selection and its lowest-index tie-break behave identically whether a
     # tie lands mid-block or exactly on a seam (regression-tested).
     n_total = addrs.shape[0] * addrs.shape[1]
-    carry, (who, issues, dones, bad, gcs) = jax.lax.scan(
-        step, init, None, length=n_total, unroll=block)
-    return who, issues, dones, bad, gcs
+    carry, ys = jax.lax.scan(step, init, None, length=n_total, unroll=block)
+    who, issues, dones, bad, gcs = (ys if want_lat
+                                    else (None, None, None, None, None))
+    return who, issues, dones, bad, gcs, carry[8]
 
 
 def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
@@ -368,7 +437,8 @@ class MultiHostReplay:
 
     def __init__(self, targets: Sequence, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
-                 posted_writes: bool = True, block_size: int = 1) -> None:
+                 posted_writes: bool = True, block_size: int = 1,
+                 metrics=None) -> None:
         if not targets:
             raise ReplayUnsupported("need at least one host target")
         self.targets = list(targets)
@@ -377,6 +447,9 @@ class MultiHostReplay:
         self.posted_writes = posted_writes
         self.block_size = validate_block_size(block_size)
         self.last_gc_runs = 0    # flash GC collections in the last run
+        self.metrics = metrics   # Optional[MetricsSpec]
+        self.last_metrics = None  # MetricsBundle of the last run
+        self._meta = None
 
     def prepare(self, traces: Sequence):
         """Extract (cfg, params, devs, addrs, writes, lens, size) tensors —
@@ -390,6 +463,7 @@ class MultiHostReplay:
         if any(pz != size for _, _, pz in parsed):
             raise ReplayUnsupported("hosts must share one access size")
         params, meta = _extract_targets(self.targets, size)
+        self._meta = meta        # labels/fabric for metrics bundle assembly
         H = len(self.targets)
         L = max(a.size for a, _, _ in parsed)
         addrs = np.zeros((H, L), np.int64)
@@ -414,7 +488,8 @@ class MultiHostReplay:
         stack_cfg, media_params, flash_of, n_flash = _media_setup(
             meta["inners"], size=size, outstanding=self.outstanding,
             posted_writes=self.posted_writes, n_accesses=int(lens.sum()),
-            max_addr=int(addrs.max(initial=0)))
+            max_addr=int(addrs.max(initial=0)),
+            counters=self.metrics is not None)
         if stack.has_flash(stack_cfg) and H * L > MAX_ACCESSES:
             raise ReplayUnsupported(
                 f"multi-host SSD replay of {H}x{L} steps exceeds the "
@@ -465,44 +540,107 @@ class MultiHostReplay:
         return MultiHostResult(per_host=per_host,
                                elapsed_ticks=max(lasts) - first_all)
 
-    def _execute(self, traces: Sequence, start_tick: int):
+    @staticmethod
+    def _aggregate_scalars(aux, lens, size: int,
+                           start_tick: int = 0) -> MultiHostResult:
+        """The ``return_latencies=False`` twin of :meth:`aggregate`: fold
+        the in-scan per-host first/last/sum/count scalars (O(hosts) output,
+        never O(trace)) into the same result shape."""
+        firsts = np.asarray(aux["first"])
+        lasts = np.asarray(aux["last"])
+        sums = np.asarray(aux["sum"])
+        cnts = np.asarray(aux["cnt"])
+        lens = np.asarray(lens)
+        per_host: List[TraceResult] = []
+        first_list, last_list = [], []
+        for i in range(lens.size):
+            n = int(cnts[i])
+            first = int(firsts[i]) if n else None
+            last = max(int(lasts[i]), start_tick) if n else start_tick
+            per_host.append(TraceResult(
+                accesses=n, bytes_moved=n * size,
+                elapsed_ticks=(last - first) if first is not None else 0,
+                sum_latency_ticks=int(sums[i]),
+                end_tick=last))
+            if first is not None:
+                first_list.append(first)
+            last_list.append(last)
+        first_all = min(first_list, default=start_tick)
+        return MultiHostResult(per_host=per_host,
+                               elapsed_ticks=max(last_list) - first_all)
+
+    def _execute(self, traces: Sequence, start_tick: int,
+                 want_lat: bool = True):
         cfg, params, devs, addrs, writes, lens, size = self.prepare(traces)
         if cfg.qos and start_tick < 0:
             raise ReplayUnsupported(
                 "QoS replay needs start_tick >= 0 (the virtual-clock and "
                 "arrival sentinels assume non-negative ticks)")
+        mspec = self.metrics
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
-            who, issues, dones, bad, gcs = _run_multi(
+            who, issues, dones, bad, gcs, aux = _run_multi(
                 cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
                 jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
-                self.block_size)
-            bad = np.asarray(bad)
-            gcs = np.asarray(gcs)
+                self.block_size, mspec, want_lat, size)
+            if want_lat:
+                bad = np.asarray(bad)
+                gcs = np.asarray(gcs)
         # padded steps (beyond sum(lens)) replay past the end and may dirty
         # the sticky flash flags — judge health at the last *valid* step
         total = int(np.asarray(lens).sum())
-        self.last_gc_runs = int(gcs[total - 1]) if total else 0
-        if total and bool(bad[total - 1]):
+        if want_lat:
+            self.last_gc_runs = int(gcs[total - 1]) if total else 0
+            bad_last = bool(bad[total - 1]) if total else False
+        else:
+            self.last_gc_runs = int(aux["gcs"]) if total else 0
+            bad_last = bool(aux["bad"]) if total else False
+        if bad_last:
             raise ReplayUnsupported(
                 "FTL ran out of free blocks during GC (device overfilled) — "
                 "the interpreted path raises there too; shrink the traces "
                 "or use engine='python' for the exact error")
-        return (np.asarray(who), np.asarray(issues), np.asarray(dones),
-                lens, size)
+        bundle = None
+        if mspec is not None:
+            from repro.core.replay import metrics as _metrics
+            fcnt = (np.asarray(aux["flash"]) if "flash" in aux else None)
+            bundle = _metrics.bundle_multi_fused(
+                mspec, self._meta, cfg, aux["acc"], aux["med"], aux["q"],
+                aux.get("qthr"), fcnt, devs, params["route"], lens, size,
+                params)
+        self.last_metrics = bundle
+        if want_lat:
+            who, issues, dones = (np.asarray(who), np.asarray(issues),
+                                  np.asarray(dones))
+        return who, issues, dones, lens, size, aux, bundle
 
-    def run(self, traces: Sequence, start_tick: int = 0) -> MultiHostResult:
-        who, issues, dones, lens, size = self._execute(traces, start_tick)
-        return self.aggregate(who, issues, dones, lens, size, start_tick)
+    @staticmethod
+    def _attach(res: MultiHostResult, bundle) -> MultiHostResult:
+        if bundle is not None:
+            res.metrics = bundle
+            for r in res.per_host:
+                r.metrics = bundle
+        return res
+
+    def run(self, traces: Sequence, start_tick: int = 0,
+            return_latencies: bool = True) -> MultiHostResult:
+        who, issues, dones, lens, size, aux, bundle = self._execute(
+            traces, start_tick, want_lat=bool(return_latencies))
+        if return_latencies:
+            res = self.aggregate(who, issues, dones, lens, size, start_tick)
+        else:
+            res = self._aggregate_scalars(aux, lens, size, start_tick)
+        return self._attach(res, bundle)
 
     def run_recorded(self, traces: Sequence, start_tick: int = 0
                      ) -> Tuple[MultiHostResult, List[np.ndarray]]:
         """:meth:`run` plus the per-access latency stream of every host
         (in that host's issue order) — tensors the scan already produced
         for free, exposed for conformance pinning and tail analysis."""
-        who, issues, dones, lens, size = self._execute(traces, start_tick)
+        who, issues, dones, lens, size, aux, bundle = self._execute(
+            traces, start_tick)
         res = self.aggregate(who, issues, dones, lens, size, start_tick)
         valid = np.arange(who.size) < int(np.asarray(lens).sum())
         lat = [(dones - issues)[valid & (who == i)]
                for i in range(len(self.targets))]
-        return res, lat
+        return self._attach(res, bundle), lat

@@ -113,6 +113,9 @@ class StackConfig:
     gc: bool = False
     num_blocks: int = 0
     gc_watermark_blocks: int = 0
+    # in-scan telemetry: flash state grows FTL.stats counter twins (see
+    # repro.core.replay.metrics); False keeps the legacy compiled program
+    counters: bool = False
 
 
 def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
@@ -222,7 +225,8 @@ def _gc_fields(hil: HIL, n_accesses: int) -> Dict[str, int]:
 
 def build_stack(device: MemDevice, *, size: int, outstanding: int,
                 issue_overhead_ns: float, posted_writes: bool,
-                n_accesses: int, max_addr: int) -> Tuple[StackConfig, Dict]:
+                n_accesses: int, max_addr: int,
+                counters: bool = False) -> Tuple[StackConfig, Dict]:
     """Extract (static config, params dict) for one host->device stack."""
     _require_fresh(device)
     inner = device
@@ -261,7 +265,7 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
         common = dict(outstanding=max(1, outstanding),
                       posted_writes=posted_writes,
                       num_hops=hop_occ.shape[1], num_ports=n_ports,
-                      num_routes=hop_occ.shape[0])
+                      num_routes=hop_occ.shape[0], counters=counters)
     else:
         params = {
             "issue_ov": ns(issue_overhead_ns),
@@ -272,7 +276,8 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
         }
         common = dict(outstanding=max(1, outstanding),
                       posted_writes=posted_writes,
-                      num_hops=len(hops), num_ports=max(1, len(hops)))
+                      num_hops=len(hops), num_ports=max(1, len(hops)),
+                      counters=counters)
 
     if isinstance(inner, (DRAMDevice, CXLDRAMDevice)):
         if isinstance(inner, CXLDRAMDevice) and inner is not device:
@@ -408,9 +413,21 @@ def _media_config(inner: MemDevice, common: Dict, params: Dict, *,
         f"no fused model for {type(inner).__name__}; use engine='python'")
 
 
+def require_metrics_lane(engine: str) -> None:
+    """Certify-or-refuse for telemetry: only the python driver and the
+    stateful scan lanes can carry the metrics accumulator.  The assoc and
+    pallas lanes rewrite the scan into forms with no per-access carry slot,
+    so they refuse *explicitly* rather than silently returning a result
+    with no (or wrong) metrics."""
+    if engine in ("assoc", "pallas"):
+        raise ReplayUnsupported(
+            f"engine {engine!r} cannot carry in-scan metrics; use "
+            "engine='scan' (or 'python'), or drop metrics collection")
+
+
 def media_stack(inner: MemDevice, *, size: int, outstanding: int,
-                posted_writes: bool, n_accesses: int, max_addr: int
-                ) -> Tuple[StackConfig, Dict]:
+                posted_writes: bool, n_accesses: int, max_addr: int,
+                counters: bool = False) -> Tuple[StackConfig, Dict]:
     """Transportless media extraction for the multi-host engine: the stack
     of one *inner* (already fabric-mounted, link-detached) device, with
     ``num_hops=0`` — the multi-host scan supplies its own route tensors and
@@ -423,7 +440,8 @@ def media_stack(inner: MemDevice, *, size: int, outstanding: int,
             f"multi-host target {inner.name!r} keeps a live private link "
             "(mount it with detach_link=True); use engine='python'")
     common = dict(outstanding=max(1, outstanding),
-                  posted_writes=posted_writes, num_hops=0, num_ports=1)
+                  posted_writes=posted_writes, num_hops=0, num_ports=1,
+                  counters=counters)
     return _media_config(inner, common, {}, size=size,
                          n_accesses=n_accesses, max_addr=max_addr)
 

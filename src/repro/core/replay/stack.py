@@ -197,11 +197,18 @@ def _collect(cfg: StackConfig, p: Dict, f: Dict, now):
             jnp.where(live, new_ppn.astype(jnp.int32), f["l2p"][lsafe]))
         valid = f["valid"].at[new_ppn // ppb].add(jnp.where(live, 1, 0))
         valid = valid.at[victim].add(jnp.where(live, -1, 0))
-        return {**f, "p2l": p2l, "l2p": l2p, "valid": valid}, t
+        f = {**f, "p2l": p2l, "l2p": l2p, "valid": valid}
+        if "c_gw" in f:
+            f = {**f, "c_gw": f["c_gw"] + jnp.where(live, 1, 0)}
+        return f, t
 
     f, t = jax.lax.fori_loop(0, ppb, body, (f, now))
     f, edone = _pal_erase(cfg, p, f, t, base, any_cand)
     t = jnp.where(any_cand, edone, t)
+    if "c_ge" in f:
+        # python bumps gc_erases only when a victim existed (the
+        # no-candidate early return skips the erase)
+        f = {**f, "c_ge": f["c_ge"] + jnp.where(any_cand, 1, 0)}
     return _free_append(cfg, f, victim, any_cand), t
 
 
@@ -254,6 +261,8 @@ def _hil_write(cfg: StackConfig, p: Dict, f: Dict, t, lpn, en):
     """HIL overhead + FTL write: invalidate (GC stacks), allocate — running
     greedy GC when the free pool is at the watermark — then program."""
     t0 = t + p["hil_ov"]
+    if "c_hw" in f:
+        f = {**f, "c_hw": f["c_hw"] + jnp.where(en, 1, 0)}
     if cfg.gc:
         f = _ftl_invalidate(cfg, f, lpn, en)
     f, ppn, t1 = _alloc_ppn(cfg, p, f, t0, en)
@@ -272,6 +281,8 @@ def _hil_write(cfg: StackConfig, p: Dict, f: Dict, t, lpn, en):
 def _hil_read(cfg: StackConfig, p: Dict, f: Dict, t, ppn, en):
     """HIL overhead + FTL read of a programmed page (callers check the
     mapping table first, exactly like the cache's ``is_written`` gate)."""
+    if "c_hr" in f:
+        f = {**f, "c_hr": f["c_hr"] + jnp.where(en, 1, 0)}
     return _pal_read(cfg, p, f, t + p["hil_ov"], jnp.maximum(ppn, 0), en)
 
 
@@ -282,8 +293,7 @@ def _dram_step(cfg: StackConfig, p: Dict, md: Dict, f, t, addr, wr, posted,
     occ_done = start + p["occ"]
     done = occ_done + jnp.where(posted, p["pack"], p["load"])
     md = {**md, "busy": occ_done}
-    false = jnp.zeros((), bool)
-    return md, f, done, false, false
+    return md, f, done, {}
 
 
 def _pmem_step(cfg: StackConfig, p: Dict, md: Dict, f, t, addr, wr, posted,
@@ -295,7 +305,7 @@ def _pmem_step(cfg: StackConfig, p: Dict, md: Dict, f, t, addr, wr, posted,
     occ_done = start + p["occ"]
     done = occ_done + jnp.where(posted, p["pack"], lat)
     md = {**md, "busy": occ_done, "row": row}
-    return md, f, done, row_hit, jnp.zeros((), bool)
+    return md, f, done, {"hit": row_hit}
 
 
 def _buf_step(cfg: StackConfig, p: Dict, md: Dict, f: Dict, t, addr, wr,
@@ -323,13 +333,15 @@ def _buf_step(cfg: StackConfig, p: Dict, md: Dict, f: Dict, t, addr, wr,
         f, rdone = _hil_read(cfg, p, f, t, _i64(ppn), was_written)
         done0 = jnp.where(was_written, rdone, t)
         f, _ = _hil_write(cfg, p, f, done0, ev_page, ev_dirty)
-        return f, done0, vic, ev_dirty
+        return f, done0, vic, ev_dirty, was_written
 
     def hit_fn(op):
         frames, f = op
-        return f, t, fidx, jnp.zeros((), bool)
+        false = jnp.zeros((), bool)
+        return f, t, fidx, false, false
 
-    f, done0, vic, flushed = jax.lax.cond(miss, miss_fn, hit_fn, (frames, f))
+    f, done0, vic, flushed, filled = jax.lax.cond(
+        miss, miss_fn, hit_fn, (frames, f))
 
     # single commit: LRU touch on hit, insert over the victim on miss
     touch_val = (ctr << STAMP_SHIFT) | pfield | ((old & 1) | wr)
@@ -340,7 +352,7 @@ def _buf_step(cfg: StackConfig, p: Dict, md: Dict, f: Dict, t, addr, wr,
 
     done = done0 + p["internal"]
     md = {**md, "frames": frames}
-    return md, f, done, hit, flushed
+    return md, f, done, {"hit": hit, "evict": flushed, "fill": filled}
 
 
 def _cache_step(cfg: StackConfig, p: Dict, md: Dict, f: Dict, t, addr, wr,
@@ -419,13 +431,16 @@ def _cache_step(cfg: StackConfig, p: Dict, md: Dict, f: Dict, t, addr, wr,
         kill2 = mready <= t
         mpage = jnp.where(kill2, FREE, mpage)
         mready = jnp.where(kill2, BIG, mready)
-        return (mpage, mready, wtick, f, start2, fill_done, vic, do_wb)
+        return (mpage, mready, wtick, f, start2, fill_done, vic, do_wb,
+                mfull, ev_valid)
 
     def pass_fn(op):
         frames, mpage, mready, wtick, f = op
-        return (mpage, mready, wtick, f, t, t, fidx, jnp.zeros((), bool))
+        false = jnp.zeros((), bool)
+        return (mpage, mready, wtick, f, t, t, fidx, false, false, false)
 
-    mpage, mready, wtick, f, start2, fill_done, vic, do_wb = jax.lax.cond(
+    (mpage, mready, wtick, f, start2, fill_done, vic, do_wb, stalled,
+     evicted) = jax.lax.cond(
         miss, miss_fn, pass_fn,
         (frames, md["mpage"], md["mready"], md["wtick"], f))
 
@@ -449,7 +464,9 @@ def _cache_step(cfg: StackConfig, p: Dict, md: Dict, f: Dict, t, addr, wr,
 
     md = {**md, "frames": frames, "mpage": mpage, "mready": mready,
           "wtick": wtick, "dram_busy": dram_busy}
-    return md, f, jnp.maximum(t, ret), hit, do_wb
+    return md, f, jnp.maximum(t, ret), {
+        "hit": hit, "evict": do_wb, "miss": miss, "coalesce": coalesce,
+        "stall": stalled, "eviction": evicted}
 
 
 _STEPS = {DRAM: _dram_step, PMEM: _pmem_step, SSD_BUF: _buf_step,
@@ -491,6 +508,13 @@ def flash_init(cfg: StackConfig) -> Dict:
         })
     else:
         f["nfree"] = _i64(1)
+    if cfg.counters:
+        # FTL.stats twins (host vs GC traffic); gc_runs rides on "gcs"
+        f["c_hr"] = _i64(0)
+        f["c_hw"] = _i64(0)
+        if cfg.gc:
+            f["c_gw"] = _i64(0)
+            f["c_ge"] = _i64(0)
     return f
 
 
@@ -514,8 +538,10 @@ def media_init(cfg: StackConfig) -> Dict:
 def media_step(cfg: StackConfig, p: Dict, md: Dict, f: Optional[Dict], t,
                addr, wr, posted, ctr):
     """One access against one unstacked (media, flash) lane pair.  Returns
-    ``(md, f, done, hit, evict)``; ``f`` passes through untouched for
-    flash-less kinds."""
+    ``(md, f, done, extras)`` where ``extras`` is a per-kind dict of event
+    flags (``hit``/``evict``/``miss``/``coalesce``/``stall``/...) feeding
+    :func:`repro.core.replay.metrics.media_increments`; ``f`` passes
+    through untouched for flash-less kinds."""
     return _STEPS[cfg.kind](cfg, p, md, f, t, addr, wr, posted, ctr)
 
 
@@ -563,14 +589,16 @@ def step(cfg: StackConfig, p: Dict, state: Dict, access: Dict
         fsingle = _n_lanes(flash) == 1
         flane = 0 if fsingle else access["flash_lane"]
         f = jax.tree.map(lambda x: x[flane], flash)
-    md, f, done, hit, evict = media_step(
+    md, f, done, ex = media_step(
         cfg, p, md, f, access["t"], access["addr"], access["write"],
         access["posted"], access["ctr"])
     media = jax.tree.map(lambda full, v: full.at[lane].set(v), media, md)
     if flash is not None:
         flash = jax.tree.map(lambda full, v: full.at[flane].set(v), flash, f)
+    false = jnp.zeros((), bool)
     return ({"media": media, "flash": flash},
-            {"done": done, "hit": hit, "evict": evict})
+            {**ex, "done": done, "hit": ex.get("hit", false),
+             "evict": ex.get("evict", false)})
 
 
 def flash_health(state: Dict) -> Tuple[object, object]:
@@ -581,3 +609,16 @@ def flash_health(state: Dict) -> Tuple[object, object]:
     if flash is None or "bad" not in flash:
         return jnp.zeros((), bool), _i64(0)
     return flash["bad"].any(), flash["gcs"].sum()
+
+
+def flash_counters(state: Dict):
+    """Per-flash-lane :data:`~repro.core.replay.metrics.FLASH_COUNTERS`
+    snapshot, ``(n_flash, 5)`` int64 — ``None`` when the stack carries no
+    counters (``StackConfig.counters=False``) or no flash at all."""
+    flash = state["flash"]
+    if flash is None or "c_hr" not in flash:
+        return None
+    z = jnp.zeros_like(flash["c_hr"])
+    return jnp.stack([flash["c_hr"], flash["c_hw"],
+                      flash.get("c_gw", z), flash.get("c_ge", z),
+                      flash.get("gcs", z)], axis=-1)

@@ -122,7 +122,7 @@ def cache_design_sweep(device, addrs, writes, *,
     trace_ax = 0 if addrs.ndim == 2 else None
     with enable_x64():
         pj = {k: jnp.asarray(v) for k, v in params.items()}
-        issues, dones, flags, final = _run_cache_lanes(
+        issues, dones, flags, final, _ = _run_cache_lanes(
             cfg, pj, (jnp.asarray(addrs), jnp.asarray(writes)),
             frozenset(batched), trace_ax)
         issues = np.asarray(issues)
@@ -177,7 +177,7 @@ def host_count_sweep(targets: Sequence, traces: Sequence,
         np.where(np.arange(lens.size) < h, lens, 0) for h in host_counts])
     with enable_x64():
         pj = jax.tree.map(jnp.asarray, params)
-        who, issues, dones, bad, _ = _run_multi_lanes(
+        who, issues, dones, bad, _, _ = _run_multi_lanes(
             cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
             jnp.asarray(writes), jnp.asarray(lane_lens))
         who = np.asarray(who)

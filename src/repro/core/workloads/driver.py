@@ -31,6 +31,10 @@ class TraceResult:
     elapsed_ticks: int
     sum_latency_ticks: int
     end_tick: int = 0      # absolute completion tick (chain multi-pass runs)
+    # telemetry bundle (repro.core.replay.metrics.MetricsBundle) when the
+    # run collected metrics; None otherwise.  Typed loosely: the metrics
+    # layer imports this module, not vice versa.
+    metrics: object = None
 
     @property
     def elapsed_s(self) -> float:
@@ -43,6 +47,26 @@ class TraceResult:
     @property
     def bandwidth_gbps(self) -> float:
         return self.bytes_moved / self.elapsed_s / 1e9 if self.elapsed_ticks else 0.0
+
+    @property
+    def p99_ns(self):
+        """99th-percentile latency (ns, bucket upper edge) from the metrics
+        bundle; None without metrics or on an empty trace."""
+        return (self.metrics.percentile_ns(99)
+                if self.metrics is not None else None)
+
+    @property
+    def hit_rate(self):
+        """Device hit rate (cache/buffer/row hits over accesses) from the
+        metrics bundle; None without metrics."""
+        return self.metrics.hit_rate if self.metrics is not None else None
+
+    @property
+    def write_amplification(self):
+        """Flash write amplification from the metrics bundle; None without
+        metrics."""
+        return (self.metrics.write_amplification
+                if self.metrics is not None else None)
 
 
 ENGINES = ("python", "scan", "assoc", "pallas")
@@ -77,10 +101,12 @@ class TraceDriver:
 
     def __init__(self, device: MemDevice, outstanding: int = 32,
                  issue_overhead_ns: float = 0.5, posted_writes: bool = True,
-                 engine: str = "python", block_size: int = 1) -> None:
+                 engine: str = "python", block_size: int = 1,
+                 metrics=None) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
-        from repro.core.replay.spec import validate_block_size
+        from repro.core.replay.spec import (require_metrics_lane,
+                                            validate_block_size)
 
         self.device = device
         self.outstanding = max(1, outstanding)
@@ -88,6 +114,11 @@ class TraceDriver:
         self.posted_writes = posted_writes
         self.engine = engine
         self.block_size = validate_block_size(block_size)
+        self.metrics = metrics        # Optional[MetricsSpec]
+        if metrics is not None:
+            # assoc/pallas lanes have no carry slot for the accumulators:
+            # refuse up front rather than returning metric-less results
+            require_metrics_lane(engine)
         if self.block_size > 1 and engine != "scan":
             # blocking shapes the sequential scan's lowering only; accepting
             # it elsewhere would silently run identical replays
@@ -102,7 +133,8 @@ class TraceDriver:
         # model keeps the two from drifting.
         multi = MultiHostDriver([self.device], outstanding=self.outstanding,
                                 issue_overhead_ns=self.issue_overhead_ns,
-                                posted_writes=self.posted_writes)
+                                posted_writes=self.posted_writes,
+                                metrics=self.metrics)
         return multi.run([rows], start_tick=start_tick).per_host[0]
 
     def _run_fast(self, rows, start_tick: int) -> TraceResult:
@@ -131,7 +163,8 @@ class TraceDriver:
                 self.device, outstanding=self.outstanding,
                 issue_overhead_ns=self.issue_overhead_ns,
                 posted_writes=self.posted_writes,
-                block_size=self.block_size).run(rows, start_tick)
+                block_size=self.block_size,
+                metrics=self.metrics).run(rows, start_tick)
         except ReplayUnsupported as single_host_reason:
             # pool views and shared-fabric targets live in the multi-host
             # engine; a single host is its degenerate case
@@ -140,7 +173,8 @@ class TraceDriver:
                     [self.device], outstanding=self.outstanding,
                     issue_overhead_ns=self.issue_overhead_ns,
                     posted_writes=self.posted_writes,
-                    block_size=self.block_size).run(
+                    block_size=self.block_size,
+                    metrics=self.metrics).run(
                         [rows], start_tick).per_host[0]
             except ReplayUnsupported:
                 # the single-host diagnosis (e.g. an unsupported policy) is
@@ -155,10 +189,27 @@ class MultiHostResult:
 
     per_host: List[TraceResult]
     elapsed_ticks: int      # global span: first issue to last completion
+    metrics: object = None  # MetricsBundle when collected (see TraceResult)
 
     @property
     def num_hosts(self) -> int:
         return len(self.per_host)
+
+    @property
+    def p99_ns(self):
+        """Cluster-wide p99 latency (ns) from the metrics bundle; None
+        without metrics or on an empty run."""
+        return (self.metrics.percentile_ns(99)
+                if self.metrics is not None else None)
+
+    @property
+    def hit_rate(self):
+        return self.metrics.hit_rate if self.metrics is not None else None
+
+    @property
+    def write_amplification(self):
+        return (self.metrics.write_amplification
+                if self.metrics is not None else None)
 
     @property
     def total_bytes(self) -> int:
@@ -226,7 +277,7 @@ class MultiHostDriver:
     def __init__(self, targets: Sequence[MemDevice], outstanding: int = 32,
                  issue_overhead_ns: float = 0.5,
                  posted_writes: bool = True, engine: str = "python",
-                 block_size: int = 1) -> None:
+                 block_size: int = 1, metrics=None) -> None:
         if not targets:
             raise ValueError("need at least one host target")
         if engine not in ("python", "scan"):
@@ -240,6 +291,7 @@ class MultiHostDriver:
         self.posted_writes = posted_writes
         self.engine = engine
         self.block_size = validate_block_size(block_size)
+        self.metrics = metrics        # Optional[MetricsSpec]
         if self.block_size > 1 and engine != "scan":
             raise ValueError(
                 f"block_size applies to engine='scan', not {engine!r}")
@@ -254,15 +306,21 @@ class MultiHostDriver:
                 self.targets, outstanding=self.outstanding,
                 issue_overhead_ns=self.issue_overhead_ns,
                 posted_writes=self.posted_writes,
-                block_size=self.block_size).run(
+                block_size=self.block_size, metrics=self.metrics).run(
                     [list(t) for t in traces], start_tick)
 
         if len(traces) != len(self.targets):
             raise ValueError(f"{len(traces)} traces for "
                              f"{len(self.targets)} host targets")
         issue_ov = ns(self.issue_overhead_ns)
+        taps = None
+        run_targets = self.targets
+        if self.metrics is not None:
+            from repro.core.replay import metrics as replay_metrics
+            taps = replay_metrics.attach_taps(self.targets)
+            run_targets = taps
         hosts = [_HostState(t, self.outstanding, start_tick, tr)
-                 for t, tr in zip(self.targets, traces)]
+                 for t, tr in zip(run_targets, traces)]
 
         # Global issue queue: (candidate issue tick, host index), one entry
         # per host with a pending access.  A host's candidate tick depends
@@ -292,6 +350,10 @@ class MultiHostDriver:
             if h.pending is not None:
                 heapq.heappush(ready, (h.next_issue_tick(), i))
 
+        bundle = None
+        if taps is not None:
+            bundle = replay_metrics.collect_python(
+                self.metrics, self.targets, taps)
         first = min((h.first_issue for h in hosts
                      if h.first_issue is not None), default=start_tick)
         last = max(h.last_done for h in hosts)
@@ -299,6 +361,8 @@ class MultiHostDriver:
                                 elapsed_ticks=(h.last_done - h.first_issue
                                                if h.first_issue is not None else 0),
                                 sum_latency_ticks=h.sum_lat,
-                                end_tick=h.last_done)
+                                end_tick=h.last_done,
+                                metrics=bundle)
                     for h in hosts]
-        return MultiHostResult(per_host=per_host, elapsed_ticks=last - first)
+        return MultiHostResult(per_host=per_host, elapsed_ticks=last - first,
+                               metrics=bundle)

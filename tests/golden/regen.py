@@ -8,9 +8,10 @@ Two refusal rules protect the pins:
   blocked scan, and (where it certifies the stack) the associative lane
   must agree tick-for-tick before anything is written; the pallas runner's
   built-in cross-check (``validate=True``) guards its analytic chain.
-* **No silent rewrites** — any scenario already pinned in the existing
+* **No silent rewrites** — any contract already pinned in the existing
   fixture must regenerate to *exactly* the same values; a mismatch aborts.
-  New scenarios may be appended, history is never rewritten.  After an
+  New scenarios — and new per-scenario contracts (e.g. ``metrics``) — may
+  be appended, history is never rewritten.  After an
   intentional timing-model change, delete the stale fixture entries first
   and mention the regeneration in the commit message.
 """
@@ -38,13 +39,24 @@ def check_history(old: dict, names) -> None:
 
 
 def check_rewrite(name: str, old: dict, entry: dict) -> None:
-    """Refuse to *rewrite* committed history: a regenerated scenario that
-    is already pinned must reproduce the pin byte-for-byte."""
-    if name in old and old[name] != entry:
-        raise SystemExit(
-            f"{name}: regenerated values differ from the committed pin "
-            "— refusing to rewrite history (delete the stale entry "
-            "first if the timing-model change is intentional)")
+    """Refuse to *rewrite* committed history, key-wise: every contract
+    already pinned for the scenario (``python_scan``, ``pallas``,
+    ``metrics``, ...) must regenerate byte-for-byte.  *New* keys may be
+    appended — growing the pinned surface never requires touching the
+    existing pins."""
+    if name not in old:
+        return
+    for key in old[name]:
+        if key not in entry:
+            raise SystemExit(
+                f"{name}: pinned contract {key!r} would be dropped — "
+                "refusing to rewrite history (delete the stale entry "
+                "first if the removal is intentional)")
+        if old[name][key] != entry[key]:
+            raise SystemExit(
+                f"{name}: regenerated {key!r} differs from the committed "
+                "pin — refusing to rewrite history (delete the stale "
+                "entry first if the timing-model change is intentional)")
 
 
 def regen() -> dict:
@@ -64,7 +76,12 @@ def regen() -> dict:
             raise SystemExit(
                 f"{name}: python and assoc engines disagree — refusing to "
                 "pin a divergence (fix the engines first)")
-        entry = {"python_scan": py}
+        py_metrics = sc.run_python_metrics(name)
+        if py_metrics != sc.run_scan_metrics(name):
+            raise SystemExit(
+                f"{name}: python and scan metrics bundles disagree — "
+                "refusing to pin a divergence (fix the engines first)")
+        entry = {"python_scan": py, "metrics": py_metrics}
         if sc.pallas_supported(name):
             entry["pallas"] = sc.run_pallas(name)
         check_rewrite(name, old, entry)

@@ -245,6 +245,43 @@ def run_scan(name: str, block_size: int = 1):
     return _summ(res.latency_ticks.tolist(), res)
 
 
+def run_python_metrics(name: str):
+    """Interpreted reference metrics bundle (JSON form): the schema every
+    fused lane must reproduce value-for-value."""
+    from repro.core.replay.metrics import MetricsSpec
+    from repro.core.workloads.driver import MultiHostDriver, TraceDriver
+
+    spec = MetricsSpec()
+    if is_multi(name):
+        res = MultiHostDriver(make_multi_targets(name),
+                              outstanding=OUTSTANDING,
+                              metrics=spec).run(multi_traces(name))
+    else:
+        res = TraceDriver(make_target(name),
+                          outstanding=scenario_outstanding(name),
+                          engine="python",
+                          metrics=spec).run(scenario_trace(name))
+    return res.metrics.to_jsonable()
+
+
+def run_scan_metrics(name: str):
+    """Fused-lane metrics bundle (JSON form): in-scan accumulation must
+    match the interpreted stats dicts exactly."""
+    from repro.core.replay import MultiHostReplay, ReplayEngine
+    from repro.core.replay.metrics import MetricsSpec
+
+    spec = MetricsSpec()
+    if is_multi(name):
+        res = MultiHostReplay(make_multi_targets(name),
+                              outstanding=OUTSTANDING,
+                              metrics=spec).run(multi_traces(name))
+    else:
+        res = ReplayEngine(make_target(name),
+                           outstanding=scenario_outstanding(name),
+                           metrics=spec).run(scenario_trace(name))
+    return res.metrics.to_jsonable()
+
+
 def run_scan_blocked(name: str):
     """Blocked-scan lane (``block_size=BLOCK_SIZE``): must match the
     ``python_scan`` pins — block seams are tick-invisible."""

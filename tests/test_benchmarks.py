@@ -88,6 +88,41 @@ def test_replay_bench_multihost_lane_recorded():
             f"fell below the pinned {MULTI_SPEEDUP_FLOOR:.0f}x floor"
 
 
+# Observability must be close to free: the scan_metrics lane (same scan,
+# plus the in-scan MetricsSpec carry) may cost at most 10% of the bare
+# scan's recorded steady-state throughput.
+METRICS_OVERHEAD_CEILING = 0.10
+
+
+def test_replay_bench_metrics_overhead_recorded_under_ceiling():
+    report = _load_replay_report()
+    for dev in SPEEDUP_FLOORS:
+        lane = report["devices"][dev].get("scan_metrics")
+        assert lane is not None, \
+            f"{dev}: scan_metrics lane missing from the recorded artifact"
+        assert lane["tick_exact_vs_python"], \
+            f"{dev}: metrics lane recorded as not tick-exact"
+        assert lane["overhead_vs_scan"] < METRICS_OVERHEAD_CEILING, \
+            f"{dev}: recorded metrics overhead " \
+            f"{lane['overhead_vs_scan'] * 100:.1f}% breaches the " \
+            f"{METRICS_OVERHEAD_CEILING * 100:.0f}% ceiling"
+
+
+def test_replay_bench_metrics_summaries_recorded():
+    """The artifact carries the counter/percentile summaries the
+    observability layer promises (and they are internally consistent)."""
+    report = _load_replay_report()
+    for dev in SPEEDUP_FLOORS:
+        lane = report["devices"][dev]["scan_metrics"]
+        assert lane["p50_ticks"] is not None
+        assert lane["p99_ticks"] is not None
+        assert lane["p50_ticks"] <= lane["p99_ticks"]
+        assert lane["counters"]["accesses"] == report["n_accesses"]
+        assert 0.0 <= lane["hit_rate"] <= 1.0
+        assert lane["write_amplification"] >= 1.0
+    assert report["devices"]["cxl-ssd-cache"]["scan_metrics"]["hit_rate"] > 0
+
+
 def test_replay_bench_speedups_meet_pinned_floor():
     report = _load_replay_report()
     assert report["meets_target"] is True

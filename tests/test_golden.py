@@ -104,6 +104,23 @@ def test_pallas_engine_matches_golden(fixture, name):
     _assert_match(expected, actual, "pallas", name)
 
 
+@pytest.mark.parametrize("name", sc.scenario_names())
+def test_python_metrics_match_golden(fixture, name):
+    """The interpreted drivers' stats dicts render to the pinned metrics
+    bundle — the schema contract observability consumers rely on."""
+    assert sc.run_python_metrics(name) == fixture[name]["metrics"], \
+        f"{name}: python metrics bundle diverged from the pin"
+
+
+@pytest.mark.parametrize("name", sc.scenario_names())
+def test_scan_metrics_match_golden(fixture, name):
+    """The fused lanes' in-scan accumulators reproduce the pinned metrics
+    bundle value-for-value — histograms, windows, component counters,
+    port/QoS/ECMP telemetry, flash counters."""
+    assert sc.run_scan_metrics(name) == fixture[name]["metrics"], \
+        f"{name}: fused metrics bundle diverged from the pin"
+
+
 def test_fixture_scenarios_in_sync(names):
     """`names` already cross-checks table vs fixture; keep it referenced."""
     assert names
@@ -135,6 +152,13 @@ def test_regen_refuses_dropping_or_rewriting_pins():
     with pytest.raises(SystemExit, match="refusing to rewrite"):
         regen.check_rewrite("dram@direct", pinned,
                             {"python_scan": {"elapsed_ticks": 2}})
-    # unchanged values and new scenarios pass
+    # dropping a pinned contract key is a rewrite too
+    with pytest.raises(SystemExit, match="refusing to rewrite"):
+        regen.check_rewrite("dram@direct", pinned, {"metrics": {}})
+    # unchanged values, new scenarios, and NEW contract keys alongside
+    # untouched pins (how "metrics" was added) all pass
     regen.check_rewrite("dram@direct", pinned, pinned["dram@direct"])
     regen.check_rewrite("new@direct", pinned, {"python_scan": {}})
+    regen.check_rewrite("dram@direct", pinned,
+                        {"python_scan": {"elapsed_ticks": 1},
+                         "metrics": {"hist": []}})
