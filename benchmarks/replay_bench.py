@@ -259,6 +259,82 @@ def _bench_multihost(nh: int) -> dict:
     }
 
 
+FAULT_N = 20_000            # fault-injected lane: derived-metrics size
+
+
+def collect_fault_derived(accesses: int = FAULT_N) -> dict:
+    """Derived (simulated) results of the fault-injected replay lanes — a
+    pure function of the seeds: fault counters, latency totals, and the
+    python-vs-scan exactness bits.  No wall-clock numbers leak in, so the
+    JSON is byte-identical across runs (CI-guarded)."""
+    from repro.core.fabric import Fabric
+    from repro.core.faults import FaultConfig, FaultPlan, install
+    from repro.core.replay import MultiHostReplay
+    from repro.core.workloads.driver import MultiHostDriver
+
+    out = {"n_accesses": accesses}
+
+    # transport faults (link CRC retries + a down window + poison) on an
+    # ECMP spine-leaf DRAM mount, single host
+    def mk_mount():
+        fab = Fabric.build("spine_leaf", num_hosts=2, num_devices=2,
+                           num_leaves=2, num_spines=2, ecmp=True)
+        return fab.mount("h0", "d0", _mk_device("dram"))
+
+    cfg = FaultConfig(link_retry_rate=0.2, link_retry_max=2,
+                      down_links=(("s0", "sp0", accesses // 4,
+                                   accesses // 2),),
+                      poison_rate=0.05)
+    trace = _trace(accesses)
+    addrs = np.asarray([a for a, _, _ in trace], np.int64)
+    writes = np.asarray([w for _, _, w in trace], bool)
+    t1 = mk_mount()
+    install(FaultPlan(cfg, seed=11), [t1])
+    py = TraceDriver(t1, metrics=MetricsSpec()).run(trace)
+    t2 = mk_mount()
+    install(FaultPlan(cfg, seed=11), [t2])
+    rp = ReplayEngine(t2, metrics=MetricsSpec()).run_arrays(addrs, writes)
+    js = rp.metrics.to_jsonable()
+    out["transport@spine_leaf_ecmp"] = {
+        "tick_exact_vs_python": _exact(py, rp),
+        "metrics_equal": py.metrics.to_jsonable() == js,
+        "faults": js["faults"],
+        "sum_latency_ticks": int(rp.sum_latency_ticks),
+        "end_tick": int(rp.end_tick),
+    }
+
+    # NAND read retries on a 2-host cached CXL-SSD fabric (the only fault
+    # class the multi-host fused lane admits; transport faults refuse)
+    def mk_mh():
+        fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
+                           num_leaves=2)
+        return [fab.mount(f"h{i}", f"d{i}", _mk_device("cxl-ssd-cache"))
+                for i in range(2)]
+
+    cfgn = FaultConfig(nand_read_retry_rate=0.3)
+    rng = np.random.default_rng(13)
+    traces = []
+    for _ in range(2):
+        pages = rng.integers(0, FOOTPRINT_PAGES, accesses // 2)
+        a = pages * 4096 + rng.integers(0, 64, accesses // 2) * 64
+        w = rng.random(accesses // 2) < WRITE_FRAC
+        traces.append([(int(x), 64, bool(y)) for x, y in zip(a, w)])
+    tm = mk_mh()
+    install(FaultPlan(cfgn, seed=11), tm)
+    pym = MultiHostDriver(tm, metrics=MetricsSpec()).run(traces)
+    tm = mk_mh()
+    install(FaultPlan(cfgn, seed=11), tm)
+    rpm = MultiHostReplay(tm, metrics=MetricsSpec()).run(traces)
+    jm = rpm.metrics.to_jsonable()
+    out["nand@multihost_x2"] = {
+        "tick_exact_vs_python": _multi_exact(pym, rpm),
+        "metrics_equal": pym.metrics.to_jsonable() == jm,
+        "faults": jm["faults"],
+        "elapsed_ticks": int(rpm.elapsed_ticks),
+    }
+    return out
+
+
 def bench_replay() -> List[Row]:
     trace = _trace(N)
     addrs = np.asarray([a for a, _, _ in trace], np.int64)
@@ -305,6 +381,13 @@ def bench_replay() -> List[Row]:
     report["multihost_meets_target"] = all(
         v["speedup_vs_python"] >= MULTI_TARGET
         for v in report["multihost"].values())
+
+    report["faults"] = collect_fault_derived()
+    for scen, v in report["faults"].items():
+        if isinstance(v, dict):
+            rows.append((f"replay/faults/{scen}", 0.0,
+                         ("exact" if v["tick_exact_vs_python"]
+                          else "DIVERGED")))
 
     report["speedup_dram_best"] = report["devices"]["dram"][
         "best_exact_speedup"]

@@ -93,6 +93,10 @@ class Packet:
     # set by the bridge when it converts the packet
     is_cxl: bool = False
     meta_value: MetaValue = MetaValue.Any
+    # CXL poison: the device flagged the returned data as corrupt; the
+    # flag rides the response flit (byte 15 bit 0) end-to-end and must
+    # surface to the requester as status, never as fabricated latency
+    poison: bool = False
 
     def is_read(self) -> bool:
         return self.cmd in (MemCmd.ReadReq, MemCmd.M2SReq)
@@ -152,6 +156,10 @@ def decode_flit(raw: bytes, data: bytes = b"") -> CXLFlit:
     if len(raw) != CXL_FLIT_BYTES:
         raise ValueError(f"flit must be {CXL_FLIT_BYTES} bytes, got {len(raw)}")
     op, meta, snp, tag, addr, length, flags, inline = _HEADER.unpack(raw)
+    if flags & ~0b11:
+        # decode-side guard: only poison (bit0) and dirty-evict (bit1) are
+        # defined — a set reserved bit means a corrupt or misframed flit
+        raise ValueError(f"reserved flag bits set in flit header: {flags:#04x}")
     return CXLFlit(
         opcode=CXLCommand(op),
         addr=addr,
@@ -210,11 +218,15 @@ def packet_to_flit(pkt: Packet, tag: int) -> CXLFlit:
 
 
 def flit_to_response_packet(flit: CXLFlit, req: Packet) -> Packet:
-    """Device response flit → gem5 response packet."""
+    """Device response flit → gem5 response packet.  The poison flag the
+    device set on the flit propagates to the packet, so the requester sees
+    corrupt data as *status* (this used to be dropped here — the flit codec
+    packed poison but no consumer ever read it)."""
     if flit.opcode is CXLCommand.S2MDRS:
         return Packet(cmd=MemCmd.ReadResp, addr=req.addr, size=req.size,
-                      data=flit.data, req_id=req.req_id, is_cxl=True)
+                      data=flit.data, req_id=req.req_id, is_cxl=True,
+                      poison=flit.poison)
     if flit.opcode is CXLCommand.S2MNDR:
         return Packet(cmd=MemCmd.WriteResp, addr=req.addr, size=req.size,
-                      req_id=req.req_id, is_cxl=True)
+                      req_id=req.req_id, is_cxl=True, poison=flit.poison)
     raise ValueError(f"not a response flit: {flit.opcode}")

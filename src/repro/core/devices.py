@@ -41,6 +41,20 @@ class MemDevice:
     def __init__(self, engine: Optional[EventEngine] = None) -> None:
         self.engine = engine
         self.stats = {"reads": 0, "writes": 0, "bytes": 0}
+        # deterministic fault injection (repro.core.faults.install): the
+        # device marks read-response flits poisoned per the plan, keyed on
+        # its own flit ordinal — corrupt data surfaces as status, never as
+        # fabricated latency
+        self.fault_plan = None
+        self._flit_ord = 0
+
+    def _poison_next(self, write: bool) -> bool:
+        plan = self.fault_plan
+        if plan is None or not plan.has_poison:
+            return False
+        ordinal = self._flit_ord
+        self._flit_ord += 1
+        return plan.poisoned(0, ordinal, write)
 
     # analytic fast path ---------------------------------------------------
     def service(self, now: int, addr: int, size: int, write: bool,
@@ -80,6 +94,7 @@ class MemDevice:
             opcode=CXLCommand.S2MNDR if write else CXLCommand.S2MDRS,
             addr=flit.addr, tag=flit.tag, length_blocks=flit.length_blocks,
             data=b"" if write else b"\x00" * min(size, LINE),
+            poison=self._poison_next(write),
         )
         self.engine.schedule_at(done, lambda: cb(resp))
 

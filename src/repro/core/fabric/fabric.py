@@ -64,6 +64,11 @@ class Fabric:
         # ECMP observability: "src->dst" -> per-path selection counts, for
         # pairs that actually have alternatives (len(paths) > 1)
         self.ecmp_counts: Dict[str, List[int]] = {}
+        # deterministic fault injection (repro.core.faults.install wires
+        # this); counters mirror the fused lanes' fault telemetry
+        self.fault_plan = None
+        self.fault_stats = {"link_retries": 0, "failovers": 0,
+                            "degraded_accesses": 0}
 
     @classmethod
     def build(cls, kind: str, *, forward_ns: float = DEFAULT_FORWARD_NS,
@@ -133,6 +138,13 @@ class Fabric:
             path = self.routing.path(src, dst)
         else:
             path = self.paths(src, dst)[choice]
+        return self.path_occupancy(path, nbytes)
+
+    def path_occupancy(self, path: List[str], nbytes: int
+                       ) -> List[Tuple[Tuple[str, str], int, int]]:
+        """:meth:`route_occupancy` for an *explicit* node sequence — the
+        fused fault lanes build union route tables (failover routes have
+        different hop counts) from this same single definition."""
         hops = []
         for u, v in zip(path, path[1:]):
             port = self.ports[(u, v)]
@@ -142,8 +154,43 @@ class Fabric:
             hops.append(((u, v), port.occ_ticks(nbytes), after))
         return hops
 
+    def select_faulted(self, src: str, dst: str,
+                       line_addr: Optional[int], ordinal: Optional[int]
+                       ) -> Tuple[List[str], bool, bool]:
+        """Route selection under the installed fault plan: returns
+        ``(path, degraded, failover)``.  ``degraded`` — the access routed
+        over a pair whose (ECMP) path set was reduced by down ports;
+        ``failover`` — the chosen path differs from the fault-free choice.
+        Pure function of the routing tables and the plan, so the fused
+        lanes precompute their per-access route columns with exactly this.
+        Raises :class:`~repro.core.faults.DeviceUnreachable` when every
+        route is down."""
+        plan = self.fault_plan
+        down = (plan.down_links_at(ordinal)
+                if plan is not None and ordinal is not None and plan.has_down
+                else frozenset())
+        if self.ecmp and line_addr is not None:
+            base = self.routing.paths(src, dst)
+            paths = self.routing.paths(src, dst, down=down) if down else base
+            degraded = bool(down) and paths != base
+            if len(paths) > 1:
+                path = paths[flow_hash(src, dst, line_addr) % len(paths)]
+            else:
+                path = paths[0]
+            if not degraded:
+                return path, False, False
+            nominal = (base[flow_hash(src, dst, line_addr) % len(base)]
+                       if len(base) > 1 else base[0])
+            return path, True, path != nominal
+        nominal = self.routing.path(src, dst)
+        if not down:
+            return nominal, False, False
+        path = self.routing.paths(src, dst, down=down)[0]
+        return path, path != nominal, path != nominal
+
     def traverse_qos(self, now: int, src: str, dst: str, nbytes: int,
-                     line_addr: Optional[int] = None) -> Tuple[int, int]:
+                     line_addr: Optional[int] = None,
+                     ordinal: Optional[int] = None) -> Tuple[int, int]:
         """Carry ``nbytes`` from ``src`` to ``dst``.  Returns ``(arrival,
         ack_floor)``: the physical completion tick (arrival + round-trip
         extra, queueing on every port's busy-until along the route — the
@@ -153,8 +200,31 @@ class Fabric:
         floor after media service, never to the data path — a floored
         timestamp fed into shared busy-until state would block other
         hosts' earlier traffic.  ``line_addr`` keys the ECMP flow hash
-        (ignored unless the fabric was built with ``ecmp=True``)."""
-        if self.ecmp and line_addr is not None:
+        (ignored unless the fabric was built with ``ecmp=True``).
+        ``ordinal`` is the issuing host's access ordinal, keying the
+        installed fault plan (down windows exclude dead paths — rerouting
+        onto longer paths when a whole equal-cost set is down — and
+        CRC-retry bursts charge extra serializations per port); ``None``
+        leaves the plan unconsulted.  QoS pacing stays keyed on the clean
+        occupancy — retries stretch serialization, not the host's
+        entitlement."""
+        plan = self.fault_plan
+        if plan is not None and ordinal is not None and plan.active:
+            path, degraded, failover = self.select_faulted(
+                src, dst, line_addr, ordinal)
+            if degraded:
+                self.fault_stats["degraded_accesses"] += 1
+                if failover:
+                    self.fault_stats["failovers"] += 1
+            elif (self.ecmp and line_addr is not None
+                    and self.routing.num_paths(src, dst) > 1):
+                paths = self.routing.paths(src, dst)
+                k = flow_hash(src, dst, line_addr) % len(paths)
+                counts = self.ecmp_counts.setdefault(
+                    f"{src}->{dst}", [0] * len(paths))
+                counts[k] += 1
+            retry_on = plan.has_link
+        elif self.ecmp and line_addr is not None:
             paths = self.routing.paths(src, dst)
             if len(paths) > 1:
                 k = flow_hash(src, dst, line_addr) % len(paths)
@@ -164,15 +234,20 @@ class Fabric:
                 path = paths[k]
             else:
                 path = paths[0]
+            retry_on = False
         else:
             path = self.routing.path(src, dst)
+            retry_on = False
         t = now
         floor = 0
         for u, v in zip(path, path[1:]):
             port = self.ports[(u, v)]
+            r = plan.link_retries((u, v), ordinal) if retry_on else 0
+            if r:
+                self.fault_stats["link_retries"] += r
             if port.qos_enabled:
                 floor = max(floor, port.qos_update(t, nbytes, src))
-            t = port.transmit(t, nbytes, origin=src)
+            t = port.transmit(t, nbytes, origin=src, retries=r)
             if self.topology.kind(v) == SWITCH:
                 t += ns(self.forward_ns)
         self.stats["transfers"] += 1
@@ -180,12 +255,14 @@ class Fabric:
         return t + ns(self.rt_extra_ns), floor
 
     def traverse(self, now: int, src: str, dst: str, nbytes: int,
-                 line_addr: Optional[int] = None) -> int:
+                 line_addr: Optional[int] = None,
+                 ordinal: Optional[int] = None) -> int:
         """The :meth:`traverse_qos` physical arrival tick alone — the exact
         :meth:`CXLLink.traverse` contract.  QoS-floored mounts go through
         :meth:`traverse_qos` (the floor binds the host ack, not the data
         arrival this returns)."""
-        return self.traverse_qos(now, src, dst, nbytes, line_addr)[0]
+        return self.traverse_qos(now, src, dst, nbytes, line_addr,
+                                 ordinal=ordinal)[0]
 
     # ------------------------------------------------------------ mounting
     def mount(self, host: str, device_node: str, device: MemDevice,
@@ -233,6 +310,8 @@ class Fabric:
             p.reset()
         self.stats = {"transfers": 0, "bytes": 0}
         self.ecmp_counts = {}
+        self.fault_stats = {"link_retries": 0, "failovers": 0,
+                            "degraded_accesses": 0}
 
 
 class FabricAttachedDevice(MemDevice):
@@ -260,11 +339,20 @@ class FabricAttachedDevice(MemDevice):
         # caller's device silently mutated (NullLink'd).
         self.inner = inner.detach_link() if detach_link else inner
         self.name = f"fabric:{inner.name}@{device_node}"
+        # per-mount access ordinal: the fault-plan key for this host's
+        # traffic (the fused lanes key their precomputed columns on the
+        # trace index, which is exactly this counter)
+        self._fault_ord = 0
 
     def service(self, now: int, addr: int, size: int, write: bool,
                 posted: bool = False) -> int:
         self._count(size, write)
+        ordinal = None
+        if self.fabric.fault_plan is not None:
+            ordinal = self._fault_ord
+            self._fault_ord += 1
         t, floor = self.fabric.traverse_qos(now, self.host, self.device_node,
                                             size,
-                                            line_addr=addr // LINE_BYTES)
+                                            line_addr=addr // LINE_BYTES,
+                                            ordinal=ordinal)
         return max(self.inner.service(t, addr, size, write, posted), floor)

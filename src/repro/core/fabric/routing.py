@@ -21,11 +21,12 @@ once a :class:`~repro.core.fabric.fabric.Fabric` is built.
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, List, Tuple
+from typing import Dict, FrozenSet, List, Tuple
 
 import numpy as np
 
 from repro.core.fabric.topology import SWITCH, Topology
+from repro.core.faults import DeviceUnreachable
 
 # Keep the ECMP fan-out bounded on dense graphs (a large mesh has a
 # combinatorial number of equal-cost paths).  The lexicographically smallest
@@ -77,21 +78,54 @@ def flow_choices(src: str, dst: str, line_addrs: np.ndarray,
     return (x % np.uint64(num_paths)).astype(np.int32)
 
 
+_EMPTY_DOWN: FrozenSet[Tuple[str, str]] = frozenset()
+
+
 class RoutingTable:
     def __init__(self, topology: Topology) -> None:
         self.topology = topology
         self._cache: Dict[Tuple[str, str], List[List[str]]] = {}
+        # masked-route cache: (src, dst, down-set) -> recomputed paths,
+        # populated only when a whole equal-cost set is down (failover)
+        self._down_cache: Dict[Tuple[str, str, FrozenSet[Tuple[str, str]]],
+                               List[List[str]]] = {}
 
-    def paths(self, src: str, dst: str) -> List[List[str]]:
+    def paths(self, src: str, dst: str,
+              down: FrozenSet[Tuple[str, str]] = _EMPTY_DOWN
+              ) -> List[List[str]]:
         """All equal-cost shortest node sequences ``[src, ..., dst]``,
         lexicographically ordered (capped at :data:`MAX_ECMP_PATHS`);
-        raises if unreachable."""
+        raises if unreachable.
+
+        ``down`` masks directed port keys: surviving base paths are
+        returned if any remain; otherwise routes are *recomputed* over the
+        masked topology (failover onto longer paths).  Zero surviving
+        paths raises :class:`~repro.core.faults.DeviceUnreachable` naming
+        the down-port set."""
         key = (src, dst)
         cached = self._cache.get(key)
         if cached is None:
             cached = self._cache[key] = _all_shortest_paths(
                 self.topology, src, dst)
-        return cached
+        if not down:
+            return cached
+        surviving = [p for p in cached if not _path_blocked(p, down)]
+        if surviving:
+            return surviving
+        dkey = (src, dst, down)
+        rerouted = self._down_cache.get(dkey)
+        if rerouted is None:
+            try:
+                rerouted = _all_shortest_paths(self.topology, src, dst,
+                                               blocked=down)
+            except ValueError:
+                rerouted = []
+            self._down_cache[dkey] = rerouted
+        if not rerouted:
+            raise DeviceUnreachable(
+                f"no surviving route from {src!r} to {dst!r}: every path "
+                f"crosses a down port (down={sorted(down)})")
+        return rerouted
 
     def path(self, src: str, dst: str) -> List[str]:
         """The primary (lexicographically smallest shortest) path."""
@@ -100,11 +134,14 @@ class RoutingTable:
     def num_paths(self, src: str, dst: str) -> int:
         return len(self.paths(src, dst))
 
-    def select(self, src: str, dst: str, line_addr: int) -> List[str]:
+    def select(self, src: str, dst: str, line_addr: int,
+               down: FrozenSet[Tuple[str, str]] = _EMPTY_DOWN
+               ) -> List[str]:
         """ECMP selection: hash ``(src, dst, line_addr)`` onto the
-        equal-cost path set.  With a single shortest path this is exactly
-        :meth:`path`."""
-        paths = self.paths(src, dst)
+        (surviving) equal-cost path set.  With a single shortest path this
+        is exactly :meth:`path`; with every path down it raises
+        :class:`~repro.core.faults.DeviceUnreachable`."""
+        paths = self.paths(src, dst, down=down)
         if len(paths) == 1:
             return paths[0]
         return paths[flow_hash(src, dst, line_addr) % len(paths)]
@@ -113,7 +150,15 @@ class RoutingTable:
         return len(self.path(src, dst)) - 1
 
 
-def _all_shortest_paths(topo: Topology, src: str, dst: str) -> List[List[str]]:
+def _path_blocked(path: List[str],
+                  down: FrozenSet[Tuple[str, str]]) -> bool:
+    """Whether any hop of ``path`` crosses a down directed port."""
+    return any((u, v) in down for u, v in zip(path, path[1:]))
+
+
+def _all_shortest_paths(topo: Topology, src: str, dst: str,
+                        blocked: FrozenSet[Tuple[str, str]] = frozenset()
+                        ) -> List[List[str]]:
     """Lazily enumerate equal-cost shortest paths in lexicographic order.
 
     A reverse BFS from ``dst`` over the relay-constrained graph labels
@@ -137,6 +182,9 @@ def _all_shortest_paths(topo: Topology, src: str, dst: str) -> List[List[str]]:
         if node != dst and topo.kind(node) != SWITCH:
             continue
         for nxt in topo.neighbors(node):
+            # expanding node -> nxt labels the *forward* edge (nxt, node)
+            if blocked and (nxt, node) in blocked:
+                continue
             if nxt not in dist_d:
                 dist_d[nxt] = dist_d[node] + 1
                 queue.append(nxt)
@@ -154,6 +202,8 @@ def _all_shortest_paths(topo: Topology, src: str, dst: str) -> List[List[str]]:
             return
         for nxt in topo.neighbors(node):        # adjacency is kept sorted
             if nxt != dst and topo.kind(nxt) != SWITCH:
+                continue
+            if blocked and (node, nxt) in blocked:
                 continue
             if dist_d.get(nxt, -1) == dist_d[node] - 1:
                 prefix.append(nxt)

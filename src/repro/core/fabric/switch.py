@@ -64,6 +64,9 @@ class SwitchPort:
     # QoS observability: transfers whose origin was virtually backlogged
     # here (qos_update returned a nonzero completion floor)
     qos_throttle_events: int = 0
+    # fault observability: extra full serializations charged by CRC-retry
+    # bursts (see repro.core.faults) — each retry re-serializes the flit
+    crc_retries: int = 0
     # traffic attribution: originating endpoint -> bytes carried for it
     bytes_by_origin: Dict[str, int] = field(default_factory=dict)
     # QoS weights: originating endpoint -> relative share of this port under
@@ -134,19 +137,23 @@ class SwitchPort:
         return 0
 
     def transmit(self, now: int, nbytes: int,
-                 origin: Optional[str] = None) -> int:
+                 origin: Optional[str] = None, retries: int = 0) -> int:
         """Serialize ``nbytes`` onto this port starting no earlier than
         ``now``; returns the tick the last byte arrives at ``dst``.
         ``origin`` attributes the traffic to its source endpoint.  QoS
         never bends this data path — weighted arbitration floors the final
-        host acknowledgment via :meth:`qos_update` instead."""
-        occ = self.occ_ticks(nbytes)
+        host acknowledgment via :meth:`qos_update` instead.  ``retries``
+        charges that many extra full serializations (CXL link-level
+        CRC-retry: the whole flit goes back on the wire), occupying the
+        port for ``occ * (1 + retries)``; ``bytes`` stays goodput."""
+        occ = self.occ_ticks(nbytes) * (1 + retries)
         start = max(now, self.busy_until)
         self.queued_ticks += start - now
         self.busy_until = start + occ
         self.packets += 1
         self.bytes += nbytes
         self.occupied_ticks += occ
+        self.crc_retries += retries
         if origin is not None:
             self.bytes_by_origin[origin] = \
                 self.bytes_by_origin.get(origin, 0) + nbytes
@@ -167,6 +174,7 @@ class SwitchPort:
         self.queued_ticks = 0
         self.occupied_ticks = 0
         self.qos_throttle_events = 0
+        self.crc_retries = 0
         self.bytes_by_origin = {}
         self._vft = {}
         self._last_arr = {}

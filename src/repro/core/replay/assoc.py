@@ -335,6 +335,15 @@ class AssocReplayEngine:
             # proof assumes non-negative ticks
             raise ReplayUnsupported(
                 "QoS replay needs start_tick >= 0; use engine='python'")
+        plan = getattr(self.device, "fault_plan", None)
+        if plan is None:
+            plan = getattr(getattr(self.device, "fabric", None),
+                           "fault_plan", None)
+        if plan is not None and plan.active:
+            raise ReplayUnsupported(
+                "fault injection perturbs per-access service times with no "
+                "associative closed form; use engine='scan' (or "
+                "engine='python')")
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,
             issue_overhead_ns=self.issue_overhead_ns,

@@ -51,15 +51,17 @@ simulated time.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.core.fabric.fabric import FabricAttachedDevice
 from repro.core.replay import stack
 from repro.core.replay.spec import (
     ReplayUnsupported,
@@ -95,6 +97,28 @@ def _transport(cfg: StackConfig, p: Dict, pb: Tuple, t, qacc=None):
                                           else None)
 
 
+def _transport_cols(cfg: StackConfig, p: Dict, pb, t, cols, qacc=None):
+    """Fault-lane transport: each access carries its own hop columns
+    (precomputed host-side under the installed
+    :class:`~repro.core.faults.FaultPlan`) — port index, occupancy with
+    CRC retries already charged (``occ * (1 + retries)``), store-and-forward
+    extra, and an on-mask padding shorter routes up to the widest failover
+    route.  Off hops are no-ops on every piece of state, so mixed hop
+    counts (down-window reroutes onto longer paths) stay exact.  ``pb`` is
+    the port busy-until vector over the union of ports any access touches."""
+    hop_port, hop_occ, hop_after, hop_on = cols
+    for h in range(cfg.num_hops):
+        on = hop_on[h]
+        pi = hop_port[h]
+        start = jnp.maximum(t, pb[pi])
+        if qacc is not None:
+            qacc = qacc.at[pi].add(jnp.where(on, start - t, 0))
+        done = start + hop_occ[h]
+        pb = pb.at[pi].set(jnp.where(on, done, pb[pi]))
+        t = jnp.where(on, done + hop_after[h], t)
+    return pb, t + p["rt_extra"], qacc
+
+
 def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route, qacc=None):
     """ECMP transport: hop *h* of the chosen route occupies the port
     ``hop_port[route, h]`` of the path set's port union, so the busy-until
@@ -112,9 +136,107 @@ def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route, qacc=None):
     return pb, t + p["rt_extra"], qacc
 
 
+# ---------------------------------------------------------- fault columns
+def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
+    """Precompute the per-access transport hop columns for a fabric mount
+    under an active fault plan with link retries and/or down windows.
+
+    Walks every access ordinal through the *same* pure route selection the
+    interpreted path uses (:meth:`Fabric.select_faulted` — degraded-set
+    masking, ECMP over survivors, recomputed fallback routes) and the same
+    per-hop occupancy rule (:meth:`Fabric.path_occupancy`), pre-charging
+    CRC-retry serializations into the occupancy column.  Raises
+    :class:`~repro.core.faults.DeviceUnreachable` for the same accesses the
+    python driver would.  Returns ``(cols, faulted, fstats, num_ports,
+    num_hops)``: the four ``(n, H)`` hop columns, the host-side port/ECMP
+    totals for metrics reconstruction, and the transport fault counters."""
+    from repro.core.fabric.fabric import LINE_BYTES
+    from repro.core.fabric.routing import flow_hash
+    from repro.core.replay.spec import _link_hops
+
+    fab = device.fabric
+    host, node = device.host, device.device_node
+    addrs = np.asarray(addrs, np.int64)
+    n = int(addrs.size)
+    K = len(fab.paths(host, node))
+    occ_cache: Dict[Tuple[str, ...], list] = {}
+    rows = []
+    link_retries = failovers = degraded = 0
+    ecmp_counts: Dict[str, List[int]] = {}
+    for j in range(n):
+        line_addr = int(addrs[j]) // LINE_BYTES
+        path, deg, fo = fab.select_faulted(host, node, line_addr, j)
+        if deg:
+            degraded += 1
+            if fo:
+                failovers += 1
+        elif fab.ecmp and K > 1:
+            # mirror traverse_qos: clean ECMP choices still count
+            k = flow_hash(host, node, line_addr) % K
+            counts = ecmp_counts.setdefault(f"{host}->{node}", [0] * K)
+            counts[k] += 1
+        key = tuple(path)
+        hops = occ_cache.get(key)
+        if hops is None:
+            hops = occ_cache[key] = fab.path_occupancy(path, size)
+        row = []
+        for pk, occ, after in hops:
+            r = plan.link_retries(pk, j) if plan.has_link else 0
+            link_retries += r
+            row.append((pk, occ * (1 + r), after))
+        rows.append(row)
+
+    # a fabric-mounted CXL-DRAM kept on its private link (detach_link=False)
+    # pays one extra uncontended transport stage after the fabric — same
+    # append build_stack does for the clean route tensors
+    from repro.core.devices import CXLDRAMDevice
+    ih: list = []
+    if isinstance(device.inner, CXLDRAMDevice):
+        ih, _ = _link_hops(device.inner.link, size)
+
+    port_keys = sorted({pk for row in rows for pk, _, _ in row})
+    pidx = {k: i for i, k in enumerate(port_keys)}
+    P = len(port_keys)
+    H = max(len(row) for row in rows) + (1 if ih else 0)
+    hop_port = np.zeros((n, H), np.int32)
+    hop_occ = np.zeros((n, H), np.int64)
+    hop_after = np.zeros((n, H), np.int64)
+    hop_on = np.zeros((n, H), bool)
+    pkts = np.zeros(max(P, 1), np.int64)
+    occt = np.zeros(max(P, 1), np.int64)
+    for j, row in enumerate(rows):
+        for h, (pk, occ, after) in enumerate(row):
+            i = pidx[pk]
+            hop_port[j, h] = i
+            hop_occ[j, h] = occ
+            hop_after[j, h] = after
+            hop_on[j, h] = True
+            pkts[i] += 1
+            occt[i] += occ
+        if ih:
+            # off-hops between row end and H-1 are no-ops, so the private
+            # hop can sit at the fixed last column for every access
+            hop_port[j, H - 1] = P
+            hop_occ[j, H - 1] = ih[0][1]
+            hop_after[j, H - 1] = ih[0][2]
+            hop_on[j, H - 1] = True
+    faulted = {
+        "port_keys": port_keys,
+        "packets": pkts,
+        "bytes": pkts * size,        # goodput: retries don't move bytes
+        "occupied": occt,            # retries DO occupy the wire
+        "ecmp": ecmp_counts,
+    }
+    fstats = {"link_retries": int(link_retries), "failovers": int(failovers),
+              "degraded_accesses": int(degraded)}
+    return ((hop_port, hop_occ, hop_after, hop_on), faulted, fstats,
+            P + (1 if ih else 0), H)
+
+
 # ------------------------------------------------------------------ runner
 def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
-                routes=None, block=1, mspec=None, want_lat=True, size=64):
+                routes=None, cols=None, block=1, mspec=None, want_lat=True,
+                size=64):
     """The scan proper, parameterized by the initial stacked state so sweeps
     can vary it per vmap lane (e.g. capacity via disabled frames).
     ``state`` is a :func:`repro.core.replay.stack.init_state` pytree with
@@ -141,12 +263,18 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
     no-metrics program byte-identical to the legacy body (the aux carry is
     an empty pytree)."""
     ecmp = cfg.num_routes > 1
+    fh = cfg.fault_hops
     if ecmp and routes is None:
         # callers without a route column (e.g. cache_design_sweep) follow
         # the replay layer's fallback contract, so refuse accordingly
         raise ReplayUnsupported(
             "ECMP stack needs a per-access route column; this entry point "
             "supports single-route mounts only (use engine='python')")
+    if fh and cols is None:
+        raise ReplayUnsupported(
+            "fault-hops stack needs precomputed per-access hop columns; "
+            "use ReplayEngine.run_arrays (or engine='python')")
+    vec_pb = ecmp or fh   # busy-until as an indexable vector, not a tuple
     aux0 = {}
     if mspec is not None:
         from repro.core.replay import metrics as _metrics
@@ -155,7 +283,7 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
                                     jnp.int64)
             aux0["med"] = jnp.zeros(len(_metrics.MEDIA_COUNTERS[cfg.kind]),
                                     jnp.int64)
-        aux0["q"] = (jnp.zeros(cfg.num_ports, jnp.int64) if ecmp
+        aux0["q"] = (jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
                      else tuple(_i64(0) for _ in range(cfg.num_ports)))
     if not want_lat:
         aux0["first"] = _i64(BIG)
@@ -166,14 +294,16 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
             _i64(1),                                           # stamp counter
             # port busy-until: positional tuple on a fixed route (fuses into
             # elementwise work), an indexable vector under ECMP
-            jnp.zeros(cfg.num_ports, jnp.int64) if ecmp
+            jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
             else tuple(_i64(0) for _ in range(cfg.num_ports)),
             state,
             aux0)
 
     def step(carry, x):
         slots, now, ctr, pb, st, aux = carry
-        if ecmp:
+        if fh:
+            addr, wr, hp, ho, ha, hon = x
+        elif ecmp:
             addr, wr, route = x
         else:
             addr, wr = x
@@ -181,7 +311,10 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
         issue = jnp.maximum(now, slots[k])
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
         qacc = aux.get("q")
-        if ecmp:
+        if fh:
+            pb, t, qacc = _transport_cols(cfg, p, pb, issue,
+                                          (hp, ho, ha, hon), qacc)
+        elif ecmp:
             pb, t, qacc = _transport_ecmp(cfg, p, pb, issue, route, qacc)
         else:
             pb, t, qacc = _transport(cfg, p, pb, issue, qacc)
@@ -213,7 +346,12 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
         ys = ((issue, done, flags.astype(jnp.int32)) if want_lat else None)
         return (slots, issue + p["issue_ov"], ctr + 1, pb, st, aux), ys
 
-    xs = (addrs, writes, routes) if ecmp else (addrs, writes)
+    if fh:
+        xs = (addrs, writes) + tuple(cols)
+    elif ecmp:
+        xs = (addrs, writes, routes)
+    else:
+        xs = (addrs, writes)
     carry, ys = jax.lax.scan(step, init, xs, unroll=block)
     issues, dones, flags = ys if want_lat else (None, None, None)
     return issues, dones, flags, carry[4], carry[5]
@@ -237,6 +375,15 @@ def _run_stack_ecmp(cfg: StackConfig, p: Dict, addrs, writes, routes,
                        want_lat=want_lat, size=size)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8, 9))
+def _run_stack_faulted(cfg: StackConfig, p: Dict, addrs, writes, cols,
+                       start_tick, block: int = 1, mspec=None,
+                       want_lat: bool = True, size: int = 64):
+    return _scan_stack(cfg, p, stack.init_state(cfg), addrs, writes,
+                       start_tick, cols=cols, block=block, mspec=mspec,
+                       want_lat=want_lat, size=size)
+
+
 # ------------------------------------------------------------------ facade
 @dataclass
 class ReplayResult(TraceResult):
@@ -247,6 +394,10 @@ class ReplayResult(TraceResult):
     hit_flags: Optional[np.ndarray] = None
     evict_flags: Optional[np.ndarray] = None
     gc_runs: int = 0                             # flash GC collections run
+    # per-access poison status (bit 6 of the flags word) when an active
+    # fault plan schedules poison; None otherwise.  Status only — a
+    # poisoned read never fabricates latency.
+    poison_flags: Optional[np.ndarray] = None
 
     @property
     def hits(self) -> int:
@@ -300,6 +451,14 @@ class ReplayEngine:
                 "QoS replay needs start_tick >= 0; use engine='python'")
         mspec = self.metrics
         want_lat = bool(return_latencies)
+        # active fault plan discovery: install() sets it on the mount (and
+        # on the shared fabric); direct devices carry it themselves
+        plan = getattr(self.device, "fault_plan", None)
+        if plan is None:
+            plan = getattr(getattr(self.device, "fabric", None),
+                           "fault_plan", None)
+        if plan is not None and not plan.active:
+            plan = None
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,
             issue_overhead_ns=self.issue_overhead_ns,
@@ -307,9 +466,33 @@ class ReplayEngine:
             max_addr=int(addrs.max(initial=0)),
             counters=mspec is not None)
         routes = None
+        fcols = None
+        faulted = None
+        fstats = {"link_retries": 0, "failovers": 0, "degraded_accesses": 0}
+        if (plan is not None and (plan.has_link or plan.has_down)
+                and isinstance(self.device, FabricAttachedDevice)):
+            # transport faults: replace the static route tensors with
+            # per-access hop columns (raises DeviceUnreachable exactly
+            # where the interpreted driver would)
+            fcols, faulted, fstats, n_ports, n_hops = _fault_transport_cols(
+                self.device, plan, addrs, size)
+            cfg = dataclasses.replace(cfg, fault_hops=True,
+                                      num_hops=n_hops, num_ports=n_ports,
+                                      num_routes=1)
+            params = {k: v for k, v in params.items()
+                      if k not in ("hop_port", "hop_occ", "hop_after")}
+        poisoned = None
+        if plan is not None and plan.has_poison:
+            poisoned = plan.poisoned_np(
+                0, np.arange(addrs.size, dtype=np.int64), writes)
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
-            if cfg.num_routes > 1:
+            if cfg.fault_hops:
+                issues, dones, flags, final, aux = _run_stack_faulted(
+                    cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
+                    tuple(jnp.asarray(c) for c in fcols), _i64(start_tick),
+                    self.block_size, mspec, want_lat, size)
+            elif cfg.num_routes > 1:
                 from repro.core.replay.spec import access_route_choices
                 routes = access_route_choices(self.device, addrs)
                 issues, dones, flags, final, aux = _run_stack_ecmp(
@@ -327,6 +510,22 @@ class ReplayEngine:
                 issues = np.asarray(issues)
                 dones = np.asarray(dones)
                 flags = np.asarray(flags)
+                if poisoned is not None:
+                    # status bit only (bit 6): the hist/media folds read
+                    # bits 0..5, so the bundle stays untouched by poison
+                    flags = flags | (poisoned.astype(np.int32) << 6)
+            fdict = None
+            if plan is not None:
+                rr, rb = stack.fault_counters(final)
+                fdict = {
+                    "link_retries": fstats["link_retries"],
+                    "failovers": fstats["failovers"],
+                    "degraded_accesses": fstats["degraded_accesses"],
+                    "nand_read_retries": int(rr),
+                    "retired_blocks": int(rb),
+                    "poisoned_reads": (int(poisoned.sum())
+                                       if poisoned is not None else 0),
+                }
             mb = None
             if mspec is not None:
                 from repro.core.replay import metrics as _metrics
@@ -335,11 +534,13 @@ class ReplayEngine:
                 if want_lat:
                     mb = _metrics.bundle_single_deferred(
                         mspec, self.device, cfg, issues, dones, flags,
-                        writes, aux["q"], fcnt, addrs, routes, size)
+                        writes, aux["q"], fcnt, addrs, routes, size,
+                        faults=fdict, faulted=faulted)
                 else:
                     mb = _metrics.bundle_single_fused(
                         mspec, self.device, cfg, aux["acc"], aux["med"],
-                        aux["q"], fcnt, addrs, routes, size)
+                        aux["q"], fcnt, addrs, routes, size,
+                        faults=fdict, faulted=faulted)
         if bad:
             raise ReplayUnsupported(
                 "FTL ran out of free blocks during GC (device overfilled) — "
@@ -363,5 +564,7 @@ class ReplayEngine:
             hit_flags=(flags & 1).astype(bool) if want_lat else None,
             evict_flags=(flags & 2).astype(bool) if want_lat else None,
             gc_runs=gcs,
+            poison_flags=(((flags >> 6) & 1).astype(bool)
+                          if want_lat and poisoned is not None else None),
             metrics=mb,
         )

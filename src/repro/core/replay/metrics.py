@@ -76,6 +76,12 @@ MEDIA_COUNTERS: Dict[str, Tuple[str, ...]] = {
 FLASH_COUNTERS = ("host_reads", "host_writes", "gc_writes", "gc_erases",
                   "gc_runs")
 
+# Fault/degradation counters — emitted ONLY when an active
+# :class:`~repro.core.faults.FaultPlan` is installed, so fault-free runs
+# (and the committed golden pins) keep their exact byte-for-byte schema.
+FAULT_COUNTERS = ("link_retries", "failovers", "degraded_accesses",
+                  "nand_read_retries", "retired_blocks", "poisoned_reads")
+
 # per-kind "hit" counter used by MetricsBundle.hit_rate
 _HIT_KEYS = ("hits", "buf_hits", "row_hits")
 
@@ -329,7 +335,8 @@ class MetricsBundle:
                  flash: Optional[List[Dict[str, int]]] = None,
                  ports: Optional[Dict[str, Dict]] = None,
                  ecmp: Optional[Dict[str, List[int]]] = None,
-                 deferred: Optional[Callable] = None) -> None:
+                 deferred: Optional[Callable] = None,
+                 faults: Optional[Dict[str, int]] = None) -> None:
         if deferred is None and (hist is None or dev_hist is None
                                  or windows is None or media is None):
             raise ValueError(
@@ -341,6 +348,9 @@ class MetricsBundle:
         self.flash = flash if flash is not None else []
         self.ports = ports if ports is not None else {}
         self.ecmp = ecmp if ecmp is not None else {}
+        # FAULT_COUNTERS dict when a fault plan was active; None otherwise
+        # (kept out of to_jsonable when None — schema stability)
+        self.faults = faults
         self._hist = hist
         self._dev_hist = dev_hist
         self._windows = windows
@@ -444,7 +454,7 @@ class MetricsBundle:
                 out[f"p{q}"] = None if p is None else int(p["hi"])
             return out
 
-        return {
+        out = {
             "spec": {"hist_buckets": self.spec.hist_buckets,
                      "window_ticks": self.spec.window_ticks,
                      "num_windows": self.spec.num_windows},
@@ -459,6 +469,9 @@ class MetricsBundle:
             "ports": {k: dict(v) for k, v in sorted(self.ports.items())},
             "ecmp": {k: list(v) for k, v in sorted(self.ecmp.items())},
         }
+        if self.faults is not None:
+            out["faults"] = {k: int(self.faults[k]) for k in FAULT_COUNTERS}
+        return out
 
 
 # ------------------------------------------------------- python collection
@@ -496,6 +509,38 @@ def media_counters_of(dev) -> Dict[str, int]:
 
 def flash_counters_of(hil) -> Dict[str, int]:
     return {k: int(hil.ftl.stats[k]) for k in FLASH_COUNTERS}
+
+
+def fault_counters_of(targets: Sequence, poisoned: int = 0
+                      ) -> Optional[Dict[str, int]]:
+    """:data:`FAULT_COUNTERS` dict from the interpreted objects, or
+    ``None`` when no *active* fault plan is installed anywhere in the
+    target stack — the bundle (and every committed golden pin) is
+    byte-identical on fault-free runs.  ``poisoned`` is the driver-side
+    poisoned-read count (the plan flags reads corrupt at issue ordinal;
+    the analytic path has no flits to carry the bit)."""
+    plan = next((p for p in (getattr(t, "fault_plan", None) for t in targets)
+                 if p is not None and p.active), None)
+    _, _, devices, fabric, _ = _target_layout(targets)
+    if plan is None and fabric is not None:
+        fp = getattr(fabric, "fault_plan", None)
+        if fp is not None and fp.active:
+            plan = fp
+    if plan is None:
+        return None
+    stats = (fabric.fault_stats if fabric is not None
+             else {"link_retries": 0, "failovers": 0,
+                   "degraded_accesses": 0})
+    hils = _unique_hils(devices)
+    return {
+        "link_retries": int(stats["link_retries"]),
+        "failovers": int(stats["failovers"]),
+        "degraded_accesses": int(stats["degraded_accesses"]),
+        "nand_read_retries": sum(int(h.ftl.pal.stats["read_retries"])
+                                 for h in hils),
+        "retired_blocks": sum(len(h.ftl.retired_blocks) for h in hils),
+        "poisoned_reads": int(poisoned),
+    }
 
 
 def _unique_hils(devices: Sequence) -> List:
@@ -598,7 +643,8 @@ def attach_taps(targets: Sequence) -> List[MetricTap]:
 
 
 def collect_python(spec: MetricsSpec, targets: Sequence,
-                   taps: Sequence[MetricTap]) -> MetricsBundle:
+                   taps: Sequence[MetricTap],
+                   poisoned: int = 0) -> MetricsBundle:
     """Build the bundle from an interpreted run: tap records give the
     histograms/windows, the live stats dicts give every counter."""
     hosts, labels, devices, fabric, _ = _target_layout(targets)
@@ -623,6 +669,7 @@ def collect_python(spec: MetricsSpec, targets: Sequence,
         ecmp={k: list(v) for k, v in
               sorted(getattr(fabric, "ecmp_counts", {}).items())}
         if fabric is not None else {},
+        faults=fault_counters_of(targets, poisoned),
     )
     return bundle
 
@@ -636,19 +683,33 @@ def _flash_dicts(flash_cnt) -> List[Dict[str, int]]:
 
 
 def _single_ports(device, queued, addrs: np.ndarray,
-                  routes: Optional[np.ndarray], size: int):
+                  routes: Optional[np.ndarray], size: int, faulted=None):
     """``(host_label, dev_label, ports, ecmp)`` for a single-host fused
     run: port byte/packet/occupancy totals and ECMP choice counts are
     reconstructed from the route choices host-side (pure functions of the
     trace — exact, zero scan cost); ``queued`` is the per-port in-scan
-    queueing accumulator."""
+    queueing accumulator.  ``faulted`` (from the engine's fault-lane
+    precompute) overrides the clean reconstruction when transport faults
+    rerouted accesses or charged retry serializations."""
     n = int(np.asarray(addrs).size)
     ports: Dict[str, Dict] = {}
     ecmp: Dict[str, List[int]] = {}
     if isinstance(device, FabricAttachedDevice):
         fab, host, node = device.fabric, device.host, device.device_node
         queued = [int(q) for q in np.asarray(queued).reshape(-1)]
-        if routes is None:
+        if faulted is not None:
+            for j, key in enumerate(faulted["port_keys"]):
+                if not faulted["packets"][j]:
+                    continue
+                ports[f"{key[0]}->{key[1]}"] = {
+                    "bytes": int(faulted["bytes"][j]),
+                    "packets": int(faulted["packets"][j]),
+                    "occupied_ticks": int(faulted["occupied"][j]),
+                    "queued_ticks": queued[j],
+                    "qos_throttle_events": 0,   # single origin never floors
+                    "bytes_by_host": {host: int(faulted["bytes"][j])}}
+            ecmp = {k: list(v) for k, v in sorted(faulted["ecmp"].items())}
+        elif routes is None:
             for h, (key, occ, _aft) in enumerate(
                     fab.route_occupancy(host, node, size)):
                 ports[f"{key[0]}->{key[1]}"] = {
@@ -698,8 +759,9 @@ def _single_ports(device, queued, addrs: np.ndarray,
 
 def bundle_single_fused(spec: MetricsSpec, device, cfg, acc, med, queued,
                         flash_cnt, addrs: np.ndarray,
-                        routes: Optional[np.ndarray], size: int
-                        ) -> MetricsBundle:
+                        routes: Optional[np.ndarray], size: int,
+                        faults: Optional[Dict[str, int]] = None,
+                        faulted=None) -> MetricsBundle:
     """Assemble the bundle after a single-host *streaming* fused run
     (``return_latencies=False``): ``acc``/``med`` come straight out of the
     scan carry — O(buckets+windows) output, no per-access arrays."""
@@ -707,18 +769,20 @@ def bundle_single_fused(spec: MetricsSpec, device, cfg, acc, med, queued,
     media = [dict(zip(MEDIA_COUNTERS[cfg.kind],
                       (int(x) for x in np.asarray(med))))]
     host_label, dev_label, ports, ecmp = _single_ports(
-        device, queued, addrs, routes, size)
+        device, queued, addrs, routes, size, faulted)
     return MetricsBundle(
         spec=spec, hosts=[host_label], devices=[dev_label], hist=hist,
         dev_hist=dev_hist, windows=windows, media=media,
-        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp)
+        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp,
+        faults=faults)
 
 
 def bundle_single_deferred(spec: MetricsSpec, device, cfg, issues, dones,
                            flags, writes, queued, flash_cnt,
                            addrs: np.ndarray,
-                           routes: Optional[np.ndarray], size: int
-                           ) -> MetricsBundle:
+                           routes: Optional[np.ndarray], size: int,
+                           faults: Optional[Dict[str, int]] = None,
+                           faulted=None) -> MetricsBundle:
     """Assemble the bundle after a single-host fused run with per-access
     outputs (``return_latencies=True``).  The histogram/window fold and the
     counter vector are pure functions of the materialized
@@ -727,7 +791,7 @@ def bundle_single_deferred(spec: MetricsSpec, device, cfg, issues, dones,
     deferred to first access — replay pays only the in-scan queueing
     scalars and a few flag-bit ORs for full telemetry."""
     host_label, dev_label, ports, ecmp = _single_ports(
-        device, queued, addrs, routes, size)
+        device, queued, addrs, routes, size, faulted)
 
     def fold():
         hist, windows, dev_hist = fold_arrays(
@@ -740,13 +804,15 @@ def bundle_single_deferred(spec: MetricsSpec, device, cfg, issues, dones,
     return MetricsBundle(
         spec=spec, hosts=[host_label], devices=[dev_label],
         flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp,
-        deferred=fold)
+        deferred=fold, faults=faults)
 
 
 def bundle_multi_fused(spec: MetricsSpec, meta: Dict, mcfg, acc, med,
                        queued, qthr, flash_cnt, devs: np.ndarray,
                        routes: np.ndarray, lens: np.ndarray, size: int,
-                       params: Dict) -> MetricsBundle:
+                       params: Dict,
+                       faults: Optional[Dict[str, int]] = None
+                       ) -> MetricsBundle:
     """Assemble the bundle after a multi-host fused run.  Per-port
     byte/packet/occupancy and per-host attribution are reconstructed from
     the hop tensors + route choices (numpy, exact); ``queued``/``qthr``
@@ -823,4 +889,5 @@ def bundle_multi_fused(spec: MetricsSpec, meta: Dict, mcfg, acc, med,
     return MetricsBundle(
         spec=spec, hosts=list(hosts), devices=list(nodes), hist=hist,
         dev_hist=dev_hist, windows=windows, media=media,
-        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp)
+        flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp,
+        faults=faults)

@@ -156,6 +156,16 @@ def _extract_targets(targets: Sequence, size: int):
         raise ReplayUnsupported(
             "QoS arbitration keys per-origin state by host name; give each "
             "host view a distinct host node (or use engine='python')")
+    plan = getattr(fabric, "fault_plan", None)
+    if plan is None:
+        plan = next((q for q in (getattr(t, "fault_plan", None)
+                                 for t in targets) if q is not None), None)
+    if plan is not None and not plan.active:
+        plan = None
+    if plan is not None and plan.has_transport_faults:
+        raise ReplayUnsupported(
+            "multi-host fused replay mirrors NAND faults only; link "
+            "retries, down windows and poison need engine='python'")
 
     pidx = _port_index(fabric)
     pairs = ([(i, i) for i in range(len(hosts))] if mapper is None else
@@ -196,7 +206,8 @@ def _extract_targets(targets: Sequence, size: int):
     meta = dict(fabric=fabric, mapper=mapper, hosts=hosts, nodes=nodes,
                 inners=inners, route_count=route_count, qos=qos,
                 host_order=host_order, num_ports=len(pidx),
-                max_hops=max_hops, max_routes=K, num_devs=NDEV)
+                max_hops=max_hops, max_routes=K, num_devs=NDEV,
+                fault_plan=plan)
     return params, meta
 
 
@@ -279,6 +290,8 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
             # snapshot carry: padded steps are strictly trailing, so the
             # last *valid* snapshot is the true end-of-trace total
             aux0["flash"] = fc0
+        if cfg.stack.faults:
+            aux0["faults"] = jnp.stack(stack.fault_counters(state0))
     if not want_lat:
         aux0["first"] = jnp.full(H, BIG, jnp.int64)
         aux0["last"] = jnp.full(H, start_tick, jnp.int64)
@@ -382,6 +395,10 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
             if "flash" in aux:
                 aux = {**aux, "flash": jnp.where(
                     valid, stack.flash_counters(st), aux["flash"])}
+            if "faults" in aux:
+                aux = {**aux, "faults": jnp.where(
+                    valid, jnp.stack(stack.fault_counters(st)),
+                    aux["faults"])}
         if not want_lat:
             neg = _i64(-BIG)
             aux = {**aux,
@@ -604,10 +621,21 @@ class MultiHostReplay:
         if mspec is not None:
             from repro.core.replay import metrics as _metrics
             fcnt = (np.asarray(aux["flash"]) if "flash" in aux else None)
+            fdict = None
+            if self._meta.get("fault_plan") is not None:
+                rr, rb = (np.asarray(aux["faults"]) if "faults" in aux
+                          else (0, 0))
+                # multi-host fused admits NAND faults only (transport
+                # faults refuse at prepare), so the other counters are 0
+                fdict = {"link_retries": 0, "failovers": 0,
+                         "degraded_accesses": 0,
+                         "nand_read_retries": int(rr),
+                         "retired_blocks": int(rb),
+                         "poisoned_reads": 0}
             bundle = _metrics.bundle_multi_fused(
                 mspec, self._meta, cfg, aux["acc"], aux["med"], aux["q"],
                 aux.get("qthr"), fcnt, devs, params["route"], lens, size,
-                params)
+                params, faults=fdict)
         self.last_metrics = bundle
         if want_lat:
             who, issues, dones = (np.asarray(who), np.asarray(issues),

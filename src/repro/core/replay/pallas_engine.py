@@ -92,6 +92,14 @@ def run_pallas(device, addrs: np.ndarray, writes: np.ndarray, *,
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    plan = getattr(device, "fault_plan", None)
+    if plan is None:
+        plan = getattr(getattr(device, "fabric", None), "fault_plan", None)
+    if plan is not None and plan.active:
+        raise ReplayUnsupported(
+            "fault injection perturbs per-access service times; the "
+            "pallas kernel models the fault-free cached CXL-SSD — use "
+            "engine='scan' (or engine='python')")
     kw = pallas_params(device, issue_overhead_ns)
     # int32-nanosecond budget: arrival/busy cursors grow by at most
     # (miss_occ + issue) per access, plus one service term on top.

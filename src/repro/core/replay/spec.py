@@ -116,6 +116,16 @@ class StackConfig:
     # in-scan telemetry: flash state grows FTL.stats counter twins (see
     # repro.core.replay.metrics); False keeps the legacy compiled program
     counters: bool = False
+    # deterministic NAND fault statics from FaultPlan.nand_statics():
+    # (seed, read_retry_threshold, read_retry_max, erase_fail_threshold),
+    # or () when no NAND faults are planned (legacy compiled program).
+    # Static because the values shape the scan body (retry rounds keyed on
+    # the in-scan read sequence, erase-fail gating of the GC free-append).
+    faults: Tuple[int, ...] = ()
+    # transport faults (link CRC retries / down-port failover): the scan
+    # consumes per-access hop columns precomputed host-side instead of the
+    # static route tensors — see ReplayEngine
+    fault_hops: bool = False
 
 
 def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
@@ -353,6 +363,15 @@ def _media_config(inner: MemDevice, common: Dict, params: Dict, *,
         })
         return StackConfig(kind=PMEM, **common), params
 
+    # NAND fault statics ride the media config so every lane that builds
+    # this stack (single-host scan, blocked scan, multi-host) mirrors the
+    # PAL/FTL fault decisions tick-identically
+    nand_faults: Tuple[int, ...] = ()
+    if hasattr(inner, "hil"):
+        _plan = getattr(inner.hil.ftl, "fault_plan", None)
+        if _plan is not None:
+            nand_faults = _plan.nand_statics()
+
     page_bytes = 4096
     if max_addr // page_bytes >= (1 << 38) - 1:
         raise ReplayUnsupported(
@@ -376,6 +395,7 @@ def _media_config(inner: MemDevice, common: Dict, params: Dict, *,
             dies_per_channel=inner.hil.cfg.dies_per_channel,
             pages_per_block=inner.hil.ftl.pages_per_block,
             buf_entries=inner._buf.capacity, num_pages=n_pages,
+            faults=nand_faults,
             **_gc_fields(inner.hil, n_accesses), **common), params
 
     if isinstance(inner, CachedCXLSSDDevice):
@@ -406,8 +426,8 @@ def _media_config(inner: MemDevice, common: Dict, params: Dict, *,
             channels=inner.hil.cfg.channels,
             dies_per_channel=inner.hil.cfg.dies_per_channel,
             pages_per_block=inner.hil.ftl.pages_per_block,
-            num_pages=n_pages, **_gc_fields(inner.hil, n_accesses),
-            **common), params
+            num_pages=n_pages, faults=nand_faults,
+            **_gc_fields(inner.hil, n_accesses), **common), params
 
     raise ReplayUnsupported(
         f"no fused model for {type(inner).__name__}; use engine='python'")

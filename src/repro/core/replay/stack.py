@@ -50,6 +50,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import erase_fails_jnp, nand_read_retries_jnp
 from repro.core.replay.spec import (
     DRAM,
     PMEM,
@@ -78,19 +79,34 @@ def _i64(x):
 
 # -------------------------------------------------------------- flash (PAL)
 def _pal_read(cfg: StackConfig, p: Dict, f: Dict, t, ppn, en):
-    """Mirror of :meth:`PAL._schedule` (read path, program-suspend rule)."""
+    """Mirror of :meth:`PAL._schedule` (read path, program-suspend rule).
+
+    With NAND fault statics (``cfg.faults``) the read charges
+    ``1 + retries`` full sense+transfer rounds, keyed on the in-state read
+    sequence number — the exact twin of :meth:`PAL.read_page` consulting
+    the plan on its ``_rd_seq`` (the sequence only advances on enabled
+    reads, like the python path only calls the PAL for real reads)."""
     C, D = cfg.channels, cfg.dies_per_channel
     ch = ppn % C
     i = ch * D + (ppn // C) % D
     db, dp, cb = f["die_busy"], f["die_prog"], f["chan_busy"]
     dbi, dpi, cbi = db[i], dp[i], cb[ch]
+    read_t, xfer = p["read_t"], p["xfer_page"]
+    if cfg.faults:
+        retries = nand_read_retries_jnp(cfg.faults, f["rd_seq"])
+        rounds = 1 + retries
+        read_t = read_t * rounds
+        xfer = xfer * rounds
+        f = {**f,
+             "rd_seq": f["rd_seq"] + jnp.where(en, 1, 0),
+             "c_rr": f["c_rr"] + jnp.where(en, retries, 0)}
     ds = jnp.maximum(t, dbi)
     resume = jnp.minimum(dpi, ds + p["sus_t"])
     ds = jnp.where(dpi > ds, resume, ds)
-    array_done = ds + p["read_t"]
-    new_dp = jnp.where(dpi > ds, dpi + p["read_t"], dpi)
+    array_done = ds + read_t
+    new_dp = jnp.where(dpi > ds, dpi + read_t, dpi)
     bus_start = jnp.maximum(array_done, cbi)
-    done = bus_start + p["xfer_page"]
+    done = bus_start + xfer
     f = {**f,
          "die_busy": db.at[i].set(jnp.where(en, done, dbi)),
          "die_prog": dp.at[i].set(jnp.where(en, new_dp, dpi)),
@@ -165,6 +181,9 @@ def _collect(cfg: StackConfig, p: Dict, f: Dict, now):
     :func:`jax.lax.cond`, so non-GC allocations pay nothing."""
     nb, ppb = cfg.num_blocks, cfg.pages_per_block
     cand = (jnp.arange(nb) != f["wpb"]) & (~f["free_mask"])
+    if cfg.faults:
+        # grown bad blocks never re-enter candidacy (FTL.retired_blocks)
+        cand = cand & (~f["rtr_mask"])
     any_cand = cand.any()
     score = jnp.where(cand, f["valid"], jnp.asarray(2**31 - 1, jnp.int32))
     victim = jnp.argmin(score)               # ties -> lowest block id
@@ -209,7 +228,19 @@ def _collect(cfg: StackConfig, p: Dict, f: Dict, now):
         # python bumps gc_erases only when a victim existed (the
         # no-candidate early return skips the erase)
         f = {**f, "c_ge": f["c_ge"] + jnp.where(any_cand, 1, 0)}
-    return _free_append(cfg, f, victim, any_cand), t
+    fail = jnp.zeros((), bool)
+    if cfg.faults:
+        # mirror of FTL._collect's erase-fail consult: a failed erase
+        # retires the victim (it never returns to the free pool); the
+        # erase sequence advances exactly when the python one does (a
+        # victim existed — the no-candidate early return skips both)
+        fail = any_cand & erase_fails_jnp(cfg.faults, f["er_seq"])
+        rtr = f["rtr_mask"]
+        f = {**f,
+             "er_seq": f["er_seq"] + jnp.where(any_cand, 1, 0),
+             "rtr_mask": rtr.at[victim].set(rtr[victim] | fail),
+             "c_rb": f["c_rb"] + jnp.where(fail, 1, 0)}
+    return _free_append(cfg, f, victim, any_cand & ~fail), t
 
 
 def _ftl_invalidate(cfg: StackConfig, f: Dict, lpn, en):
@@ -508,6 +539,15 @@ def flash_init(cfg: StackConfig) -> Dict:
         })
     else:
         f["nfree"] = _i64(1)
+    if cfg.faults:
+        # deterministic NAND faults: in-state read/erase sequence numbers
+        # (the PAL/FTL twins), retry/retirement totals, retired-block mask
+        f["rd_seq"] = _i64(0)
+        f["c_rr"] = _i64(0)
+        if cfg.gc:
+            f["er_seq"] = _i64(0)
+            f["rtr_mask"] = jnp.zeros(cfg.num_blocks, bool)
+            f["c_rb"] = _i64(0)
     if cfg.counters:
         # FTL.stats twins (host vs GC traffic); gc_runs rides on "gcs"
         f["c_hr"] = _i64(0)
@@ -622,3 +662,14 @@ def flash_counters(state: Dict):
     return jnp.stack([flash["c_hr"], flash["c_hw"],
                       flash.get("c_gw", z), flash.get("c_ge", z),
                       flash.get("gcs", z)], axis=-1)
+
+
+def fault_counters(state: Dict):
+    """``(nand_read_retries, retired_blocks)`` totals across every flash
+    lane — kept out of :func:`flash_counters` so the pinned (n, 5) metrics
+    shape is untouched; both zero for stacks built without fault statics."""
+    flash = state["flash"]
+    if flash is None or "c_rr" not in flash:
+        return _i64(0), _i64(0)
+    retired = flash["c_rb"].sum() if "c_rb" in flash else _i64(0)
+    return flash["c_rr"].sum(), retired

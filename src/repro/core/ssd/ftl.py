@@ -56,6 +56,12 @@ class FTL:
         self.free_blocks = list(range(1, self.num_blocks))
         self.stats = {"host_writes": 0, "host_reads": 0, "gc_writes": 0,
                       "gc_erases": 0, "gc_runs": 0}
+        # deterministic fault injection (repro.core.faults.install): a
+        # failed erase grows the victim bad — it is retired from both the
+        # free pool and future GC candidacy, shrinking over-provisioning
+        self.fault_plan = None
+        self._erase_seq = 0
+        self.retired_blocks: set[int] = set()
 
     # -------------------------------------------------------------- mapping
     def _block_of(self, ppn: int) -> int:
@@ -92,7 +98,9 @@ class FTL:
         """Greedy GC: victimize the fullest-of-invalid block."""
         self.stats["gc_runs"] += 1
         candidates = [b for b in range(self.num_blocks)
-                      if b != self.write_ptr_block and b not in self.free_blocks]
+                      if b != self.write_ptr_block
+                      and b not in self.free_blocks
+                      and b not in self.retired_blocks]
         if not candidates:
             return now
         victim = min(candidates, key=lambda b: self.valid_count[b])
@@ -115,7 +123,18 @@ class FTL:
             self.stats["gc_writes"] += 1
         t = self.pal.erase_block(t, base)
         self.stats["gc_erases"] += 1
-        self.free_blocks.append(victim)
+        fail = False
+        if self.fault_plan is not None:
+            fail = self.fault_plan.erase_fails(self._erase_seq)
+            self._erase_seq += 1
+        if fail:
+            # grown bad block: retire instead of returning to the pool —
+            # the device degrades (less over-provisioning) rather than
+            # serving corrupt data; running out entirely surfaces as the
+            # existing "out of space" error
+            self.retired_blocks.add(victim)
+        else:
+            self.free_blocks.append(victim)
         return t
 
     # ------------------------------------------------------------------ ops

@@ -82,7 +82,13 @@ class PAL:
         self._channel_busy_until = [0] * channels
         self.stats = {"reads": 0, "programs": 0, "erases": 0,
                       "bytes_read": 0, "bytes_programmed": 0,
-                      "die_wait_ticks": 0, "channel_wait_ticks": 0}
+                      "die_wait_ticks": 0, "channel_wait_ticks": 0,
+                      "read_retries": 0}
+        # deterministic NAND fault injection (repro.core.faults.install):
+        # read-retry decisions key on the per-PAL read sequence number,
+        # which the fused scan's flash state mirrors exactly
+        self.fault_plan = None
+        self._rd_seq = 0
 
     # -------------------------------------------------------------- helpers
     def locate(self, ppn: int) -> tuple[int, int]:
@@ -93,14 +99,19 @@ class PAL:
         return ch, die
 
     def _schedule(self, now: int, ch: int, die: int, array_ticks: int,
-                  xfer_first: bool) -> int:
+                  xfer_first: bool, rounds: int = 1) -> int:
         """Reserve die + channel; return completion tick.
 
-        Reads: array sense first, then channel transfer out.
+        Reads: array sense first, then channel transfer out.  ``rounds``
+        charges that many full sense+transfer passes (NAND read-retry with
+        shifted reference voltages; 1 = clean read).
         Programs: channel transfer in first, then array program.
         """
         d = self._dies[ch][die]
         xfer = self.timing.xfer_ticks(self.page_bytes)
+        if not xfer_first and rounds > 1:
+            array_ticks = array_ticks * rounds
+            xfer = xfer * rounds
         if xfer_first:  # program: bus in, then array
             die_start = max(now, d.busy_until, d.program_until)
             self.stats["die_wait_ticks"] += die_start - now
@@ -137,7 +148,13 @@ class PAL:
         self._dies[ch][die].reads += 1
         self.stats["reads"] += 1
         self.stats["bytes_read"] += self.page_bytes
-        return self._schedule(now, ch, die, self.timing.read_ticks, xfer_first=False)
+        retries = 0
+        if self.fault_plan is not None:
+            retries = self.fault_plan.nand_read_retries(self._rd_seq)
+            self._rd_seq += 1
+            self.stats["read_retries"] += retries
+        return self._schedule(now, ch, die, self.timing.read_ticks,
+                              xfer_first=False, rounds=1 + retries)
 
     def program_page(self, now: int, ppn: int) -> int:
         ch, die = self.locate(ppn)

@@ -321,6 +321,13 @@ class MultiHostDriver:
             run_targets = taps
         hosts = [_HostState(t, self.outstanding, start_tick, tr)
                  for t, tr in zip(run_targets, traces)]
+        # deterministic poison accounting: the fault plan flags a read's
+        # returned data corrupt as a pure function of (host, per-host
+        # access ordinal) — counted here because the analytic service path
+        # never materializes response flits (the flit codec carries the
+        # same flag on the protocol path)
+        plans = [getattr(t, "fault_plan", None) for t in self.targets]
+        poisoned = 0
 
         # Global issue queue: (candidate issue tick, host index), one entry
         # per host with a pending access.  A host's candidate tick depends
@@ -344,6 +351,9 @@ class MultiHostDriver:
             h.sum_lat += done - issue
             h.last_done = max(h.last_done, done)
             h.now = issue + issue_ov
+            plan = plans[i]
+            if plan is not None and plan.has_poison:
+                poisoned += plan.poisoned(i, h.n, write)
             h.n += 1
             h.bytes += size
             h.pending = next(h.trace, None)
@@ -353,7 +363,7 @@ class MultiHostDriver:
         bundle = None
         if taps is not None:
             bundle = replay_metrics.collect_python(
-                self.metrics, self.targets, taps)
+                self.metrics, self.targets, taps, poisoned=poisoned)
         first = min((h.first_issue for h in hosts
                      if h.first_issue is not None), default=start_tick)
         last = max(h.last_done for h in hosts)

@@ -14,7 +14,11 @@ metadata so ui.perfetto.dev groups them):
   plus one event per ECMP pair carrying the per-path selection counts;
 * one ``devices`` process with a complete event per **device** (media
   counters + per-device p50/p95/p99 latency ticks as ``args``) and per
-  **flash** instance (write amplification inputs).
+  **flash** instance (write amplification inputs);
+* when the run carried an active fault plan, one ``faults`` process with
+  an instant event (``ph: "i"``) per nonzero fault counter (link CRC
+  retries, failovers, degraded accesses, NAND read retries, retired
+  blocks, poisoned reads) plus one summary event carrying all counters.
 
 Timestamps are microseconds (the trace_events unit); 1 tick = 1 ps, so
 ``ts = ticks / 1e6``.  The output is plain JSON — no Perfetto SDK, no
@@ -131,6 +135,20 @@ def to_perfetto(bundle_or_result) -> Dict:
         events.append({"name": f"flash{i}", "ph": "X", "pid": pid,
                        "tid": len(mb.devices) + i, "ts": 0.0, "dur": dur,
                        "args": args})
+
+    # -------------------------------------------------------------- faults
+    if mb.faults is not None:
+        pid = len(mb.hosts) + 3
+        proc(pid, "faults")
+        events.append({"name": "fault_counters", "ph": "X", "pid": pid,
+                       "tid": 0, "ts": 0.0, "dur": dur,
+                       "args": {k: int(v) for k, v in mb.faults.items()}})
+        for tid, (k, v) in enumerate(sorted(mb.faults.items()), start=1):
+            if not int(v):
+                continue
+            events.append({"name": f"{k}={int(v)}", "ph": "i", "pid": pid,
+                           "tid": tid, "ts": dur, "s": "p",
+                           "args": {k: int(v)}})
 
     return {"traceEvents": events, "displayTimeUnit": "ns",
             "otherData": {

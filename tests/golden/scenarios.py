@@ -58,6 +58,14 @@ MULTI = dict(num_hosts=3, num_leaves=2, num_spines=2,
 MULTI_SSD_HOSTS = {"multihost-ssd-mounts": 2, "multihost-ssd-pool": 4,
                    "multihost-ssd-sharedflash": 2}
 
+# fault-injection scenarios (PR 7): deterministic FaultPlans pinned
+# end-to-end — link CRC-retry bursts under ECMP, a port-down window that
+# forces failover reroutes, and NAND read-retry + erase-fail retirement
+# (+ read poison) on a GC-pressured cached SSD
+FAULT_SCENARIOS = ("faults-linkretry@spine_leaf",
+                   "faults-portdown-failover@mesh",
+                   "faults-nand-retry@direct")
+
 
 def scenario_names():
     names = [f"{d}@{attach}" for d in DEVICES
@@ -66,6 +74,7 @@ def scenario_names():
     names += ["dram@stream", "pmem@stream"]
     names += sorted(MULTI_SSD_HOSTS)
     names.append("ssd-gc@direct")
+    names += list(FAULT_SCENARIOS)
     return names
 
 
@@ -106,14 +115,50 @@ def _gc_ssd_cfg(cap_pages: int):
                      timing=NANDTiming.low_latency(), hil_overhead_ns=1000.0)
 
 
+def _make_fault_target(name: str):
+    """Fresh target with its scenario's deterministic FaultPlan installed
+    (the plan is a pure function of (seed, config): rebuilding the target
+    reproduces the exact same fault schedule)."""
+    from repro.core.cache.dram_cache import DRAMCacheConfig
+    from repro.core.devices import make_device
+    from repro.core.fabric import Fabric
+    from repro.core.faults import FaultConfig, FaultPlan, install
+
+    if name == "faults-linkretry@spine_leaf":
+        fab = Fabric.build("spine_leaf", num_hosts=2, num_devices=2,
+                           num_leaves=2, num_spines=2, ecmp=True)
+        tgt = fab.mount("h0", "d0", _mk_device("dram"))
+        install(FaultPlan(FaultConfig(link_retry_rate=0.25), seed=7), [tgt])
+        return tgt
+    if name == "faults-portdown-failover@mesh":
+        fab = Fabric.build("mesh", num_hosts=2, num_devices=2)
+        tgt = fab.mount("h0", "d0", _mk_device("cxl-dram"))
+        install(FaultPlan(FaultConfig(
+            down_links=(("s0_0", "s0_1", 10, 70),)), seed=7), [tgt])
+        return tgt
+    # faults-nand-retry@direct: GC-pressured cached SSD so the pinned
+    # trace also exercises erase-fail block retirement and read poison
+    dev = make_device("cxl-ssd-cache", ssd_cfg=_gc_ssd_cfg(750),
+                      cache_cfg=DRAMCacheConfig(
+                          capacity_bytes=8 * 4096, mshr_entries=4,
+                          writeback_buffer=2))
+    install(FaultPlan(FaultConfig(nand_read_retry_rate=0.3,
+                                  erase_fail_rate=0.5,
+                                  poison_rate=0.1), seed=0), [dev])
+    return dev
+
+
 def make_target(name: str):
     """Fresh device for ``<device>@<attach>`` scenarios (``@stream`` is
     directly attached, replayed at the streaming issue depth;
-    ``ssd-gc`` is a cached CXL-SSD with a near-full tiny flash)."""
+    ``ssd-gc`` is a cached CXL-SSD with a near-full tiny flash; the
+    ``faults-*`` scenarios carry an installed deterministic fault plan)."""
     from repro.core.cache.dram_cache import DRAMCacheConfig
     from repro.core.devices import make_device
     from repro.core.fabric import Fabric
 
+    if name in FAULT_SCENARIOS:
+        return _make_fault_target(name)
     device, attach = name.split("@")
     if device == "ssd-gc":
         return make_device("cxl-ssd-cache", ssd_cfg=_gc_ssd_cfg(750),
@@ -206,6 +251,15 @@ def scenario_trace(name: str):
         trace = [(p * 4096, 64, True) for p in range(750)]
         trace += [(((k * 9) % 750) * 4096 + (k % 64) * 64, 64, True)
                   for k in range(40)]
+        return trace
+    if name == "faults-nand-retry@direct":
+        # near-full fill + scattered rewrites (GC + erase-fail retirement)
+        # + a read tail (NAND read retries through cache misses, and read
+        # ordinals the poison schedule can flag)
+        trace = [(p * 4096, 64, True) for p in range(750)]
+        trace += [(((k * 9) % 750) * 4096 + (k % 64) * 64, 64, True)
+                  for k in range(40)]
+        trace += [(((k * 131) % 750) * 4096, 64, False) for k in range(24)]
         return trace
     return make_trace(hash_seed(name))
 

@@ -123,6 +123,36 @@ def test_replay_bench_metrics_summaries_recorded():
     assert report["devices"]["cxl-ssd-cache"]["scan_metrics"]["hit_rate"] > 0
 
 
+def test_fault_lane_derived_json_identical_across_runs():
+    """The fault-injected replay lane is a pure function of its seeds: two
+    runs must produce byte-identical derived JSON (counters, latency
+    totals, exactness bits — no wall-clock numbers)."""
+    import replay_bench
+
+    a = replay_bench.collect_fault_derived(accesses=2000)
+    b = replay_bench.collect_fault_derived(accesses=2000)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_replay_bench_fault_lane_recorded():
+    """The committed artifact carries the fault-injected lane: tick-exact,
+    metrics-equal, and with every injected fault class actually firing."""
+    report = _load_replay_report()
+    faults = report.get("faults")
+    assert faults is not None, \
+        "faults section missing from results/BENCH_replay.json"
+    transport = faults["transport@spine_leaf_ecmp"]
+    assert transport["tick_exact_vs_python"] is True
+    assert transport["metrics_equal"] is True
+    assert transport["faults"]["link_retries"] > 0
+    assert transport["faults"]["degraded_accesses"] > 0
+    assert transport["faults"]["poisoned_reads"] > 0
+    nand = faults["nand@multihost_x2"]
+    assert nand["tick_exact_vs_python"] is True
+    assert nand["metrics_equal"] is True
+    assert nand["faults"]["nand_read_retries"] > 0
+
+
 def test_replay_bench_speedups_meet_pinned_floor():
     report = _load_replay_report()
     assert report["meets_target"] is True
