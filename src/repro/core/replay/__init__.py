@@ -20,6 +20,11 @@ that are tick-identical to the interpreted
   both engines consume (``init_state(cfg, n_hosts)`` / ``step(state,
   access)`` pytrees with a leading host axis; greedy FTL GC inside the
   scan).
+* :mod:`repro.core.replay.stream` — :func:`replay_stream`, the streaming
+  front end: fused replay straight from an on-disk columnar
+  :class:`~repro.data.trace_store.TraceStore` in O(chunk) input memory
+  (prefetched windows + donated carry), tick-identical at any chunk
+  size.
 * :mod:`repro.core.replay.sweep` — vmap-batched design-space sweeps over
   timing parameters, replacement policy, capacity, topology, and host
   count.
@@ -46,6 +51,7 @@ from repro.core.replay.spec import (
     validate_block_size,
 )
 from repro.core.replay.stack import init_state, media_init, media_step, step
+from repro.core.replay.stream import replay_stream
 from repro.core.replay.sweep import cache_design_sweep, host_count_sweep
 
 __all__ = [
@@ -66,6 +72,7 @@ __all__ = [
     "media_stack",
     "media_step",
     "port_busy_until",
+    "replay_stream",
     "step",
     "validate_block_size",
 ]

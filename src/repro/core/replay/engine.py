@@ -24,6 +24,17 @@ where the interpreted FTL raises "out of space") surfaces as
 :class:`ReplayUnsupported` via the stack's sticky ``bad`` flag — refuse,
 never drift.
 
+Streaming: the scan body is factored so the same compiled chunk program
+can either consume the whole trace in one call (the legacy one-shot path)
+or be driven by an outer chunk loop that threads the full carry pytree —
+LFB slots, issue clock, port busy-untils, stacked media/flash state and
+the metrics accumulators — across chunk boundaries with buffer donation
+(:func:`_chunked_scan`).  Peak *input* residency is then O(chunk) instead
+of O(trace); pair with ``return_latencies=False`` (PR 6's streaming
+accumulators) for O(chunk) end to end.  ``ReplayEngine.run_store`` replays
+straight from an on-disk columnar :class:`~repro.data.trace_store.TraceStore`
+without ever materializing the trace.
+
 Performance notes (XLA:CPU executes a scan body as a sequence of fusion
 thunks, so the step is written to minimize thunks and buffer copies):
 
@@ -76,64 +87,112 @@ from repro.core.replay.stack import BIG, MAX_ACCESSES, _i64
 from repro.core.workloads.driver import TraceResult
 
 
+def _qos_mask(cfg: StackConfig):
+    """Boolean constant over the busy-until vector: which ports run
+    weighted QoS arbitration (from the static ``cfg.qos_ports``)."""
+    m = np.zeros(cfg.num_ports, bool)
+    if cfg.qos_ports:
+        m[list(cfg.qos_ports)] = True
+    return jnp.asarray(m)
+
+
 # ---------------------------------------------------------------- transport
-def _transport(cfg: StackConfig, p: Dict, pb: Tuple, t, qacc=None):
+def _transport(cfg: StackConfig, p: Dict, pb: Tuple, t, qacc=None, qthr=None):
     """Routed store-and-forward transport: the vectorized form of
     :meth:`SwitchPort.transmit` along the precomputed route (hop *h* is
     port *h*), plus the CXL.mem round-trip extra.  ``qacc`` (optional, a
     tuple like ``pb``) accumulates per-port queueing — the
     ``queued_ticks += start - now`` of :meth:`SwitchPort.transmit` — for
-    the metrics carry."""
+    the metrics carry.
+
+    ``qthr`` (optional, same container) accumulates the per-port
+    ``qos_throttle_events`` twin of :meth:`SwitchPort.qos_update` on the
+    hops ``cfg.qos_ports`` marks as weighted: with a single origin the
+    pace equals the clean occupancy exactly, so the virtual finish time
+    obeys the *same* recurrence as the port's busy-until
+    (``max(state, t) + occ`` from 0) and ``pb[h]`` at arrival IS the
+    origin's virtual finish — the counter bumps exactly when the
+    interpreted ``prev > now`` does, with no extra carry.  (The ack floor
+    provably never binds for one origin — see
+    :func:`repro.core.replay.spec._fabric_hops` — so only the counter
+    needs mirroring.)"""
     pb = list(pb)
     q = list(qacc) if qacc is not None else None
+    qt = list(qthr) if qthr is not None else None
     for h in range(cfg.num_hops):
+        if qt is not None and h in cfg.qos_ports:
+            qt[h] = qt[h] + jnp.where(pb[h] > t, 1, 0)
         start = jnp.maximum(t, pb[h])
         if q is not None:
             q[h] = q[h] + (start - t)
         done = start + p["hop_occ"][h]
         pb[h] = done
         t = done + p["hop_after"][h]
-    return tuple(pb), t + p["rt_extra"], (tuple(q) if q is not None
-                                          else None)
+    return (tuple(pb), t + p["rt_extra"],
+            tuple(q) if q is not None else None,
+            tuple(qt) if qt is not None else None)
 
 
-def _transport_cols(cfg: StackConfig, p: Dict, pb, t, cols, qacc=None):
+def _transport_cols(cfg: StackConfig, p: Dict, pb, t, cols, qacc=None,
+                    vft=None, qthr=None):
     """Fault-lane transport: each access carries its own hop columns
     (precomputed host-side under the installed
     :class:`~repro.core.faults.FaultPlan`) — port index, occupancy with
     CRC retries already charged (``occ * (1 + retries)``), store-and-forward
-    extra, and an on-mask padding shorter routes up to the widest failover
-    route.  Off hops are no-ops on every piece of state, so mixed hop
-    counts (down-window reroutes onto longer paths) stay exact.  ``pb`` is
-    the port busy-until vector over the union of ports any access touches."""
-    hop_port, hop_occ, hop_after, hop_on = cols
+    extra, an on-mask padding shorter routes up to the widest failover
+    route, and the retry-free *clean* occupancy.  Off hops are no-ops on
+    every piece of state, so mixed hop counts (down-window reroutes onto
+    longer paths) stay exact.  ``pb`` is the port busy-until vector over
+    the union of ports any access touches.
+
+    ``vft``/``qthr`` mirror :meth:`SwitchPort.qos_update` on the weighted
+    union ports: CRC retries stretch the port's serialization but never
+    the origin's entitlement, so the virtual clock advances by the clean
+    occupancy column and needs its own carry here — the busy-until
+    recurrence identity the retry-free lanes exploit breaks once
+    ``occ * (1 + retries)`` and the clean pace diverge."""
+    hop_port, hop_occ, hop_after, hop_on, hop_clean = cols
+    qmask = _qos_mask(cfg) if qthr is not None else None
     for h in range(cfg.num_hops):
         on = hop_on[h]
         pi = hop_port[h]
+        if qthr is not None:
+            qon = on & qmask[pi]
+            prev = vft[pi]
+            qthr = qthr.at[pi].add(jnp.where(qon & (prev > t), 1, 0))
+            vft = vft.at[pi].set(
+                jnp.where(qon, jnp.maximum(prev, t) + hop_clean[h], prev))
         start = jnp.maximum(t, pb[pi])
         if qacc is not None:
             qacc = qacc.at[pi].add(jnp.where(on, start - t, 0))
         done = start + hop_occ[h]
         pb = pb.at[pi].set(jnp.where(on, done, pb[pi]))
         t = jnp.where(on, done + hop_after[h], t)
-    return pb, t + p["rt_extra"], qacc
+    return pb, t + p["rt_extra"], qacc, vft, qthr
 
 
-def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route, qacc=None):
+def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route, qacc=None,
+                    qthr=None):
     """ECMP transport: hop *h* of the chosen route occupies the port
     ``hop_port[route, h]`` of the path set's port union, so the busy-until
     state is a vector indexed per access instead of a positional tuple.
     All equal-cost routes share one hop count (static).  ``qacc``
-    (optional, a vector like ``pb``) accumulates per-port queueing."""
+    (optional, a vector like ``pb``) accumulates per-port queueing;
+    ``qthr`` mirrors the per-port QoS throttle counter on the weighted
+    union ports — ``pb[pi]`` at arrival doubles as the origin's virtual
+    finish time, exactly as in :func:`_transport`."""
+    qmask = _qos_mask(cfg) if qthr is not None else None
     for h in range(cfg.num_hops):
         pi = p["hop_port"][route, h]
+        if qthr is not None:
+            qthr = qthr.at[pi].add(jnp.where(qmask[pi] & (pb[pi] > t), 1, 0))
         start = jnp.maximum(t, pb[pi])
         if qacc is not None:
             qacc = qacc.at[pi].add(start - t)
         done = start + p["hop_occ"][route, h]
         pb = pb.at[pi].set(done)
         t = done + p["hop_after"][route, h]
-    return pb, t + p["rt_extra"], qacc
+    return pb, t + p["rt_extra"], qacc, qthr
 
 
 # ---------------------------------------------------------- fault columns
@@ -148,8 +207,10 @@ def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
     CRC-retry serializations into the occupancy column.  Raises
     :class:`~repro.core.faults.DeviceUnreachable` for the same accesses the
     python driver would.  Returns ``(cols, faulted, fstats, num_ports,
-    num_hops)``: the four ``(n, H)`` hop columns, the host-side port/ECMP
-    totals for metrics reconstruction, and the transport fault counters."""
+    num_hops)``: the five ``(n, H)`` hop columns (port, retry-charged occ,
+    store-and-forward extra, on-mask, clean occ for the QoS virtual
+    clock), the host-side port/ECMP totals for metrics reconstruction, and
+    the transport fault counters."""
     from repro.core.fabric.fabric import LINE_BYTES
     from repro.core.fabric.routing import flow_hash
     from repro.core.replay.spec import _link_hops
@@ -183,7 +244,7 @@ def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
         for pk, occ, after in hops:
             r = plan.link_retries(pk, j) if plan.has_link else 0
             link_retries += r
-            row.append((pk, occ * (1 + r), after))
+            row.append((pk, occ * (1 + r), after, occ))
         rows.append(row)
 
     # a fabric-mounted CXL-DRAM kept on its private link (detach_link=False)
@@ -194,7 +255,7 @@ def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
     if isinstance(device.inner, CXLDRAMDevice):
         ih, _ = _link_hops(device.inner.link, size)
 
-    port_keys = sorted({pk for row in rows for pk, _, _ in row})
+    port_keys = sorted({pk for row in rows for pk, _, _, _ in row})
     pidx = {k: i for i, k in enumerate(port_keys)}
     P = len(port_keys)
     H = max(len(row) for row in rows) + (1 if ih else 0)
@@ -202,15 +263,17 @@ def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
     hop_occ = np.zeros((n, H), np.int64)
     hop_after = np.zeros((n, H), np.int64)
     hop_on = np.zeros((n, H), bool)
+    hop_clean = np.zeros((n, H), np.int64)
     pkts = np.zeros(max(P, 1), np.int64)
     occt = np.zeros(max(P, 1), np.int64)
     for j, row in enumerate(rows):
-        for h, (pk, occ, after) in enumerate(row):
+        for h, (pk, occ, after, clean) in enumerate(row):
             i = pidx[pk]
             hop_port[j, h] = i
             hop_occ[j, h] = occ
             hop_after[j, h] = after
             hop_on[j, h] = True
+            hop_clean[j, h] = clean
             pkts[i] += 1
             occt[i] += occ
         if ih:
@@ -220,6 +283,7 @@ def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
             hop_occ[j, H - 1] = ih[0][1]
             hop_after[j, H - 1] = ih[0][2]
             hop_on[j, H - 1] = True
+            hop_clean[j, H - 1] = ih[0][1]
     faulted = {
         "port_keys": port_keys,
         "packets": pkts,
@@ -229,11 +293,129 @@ def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
     }
     fstats = {"link_retries": int(link_retries), "failovers": int(failovers),
               "degraded_accesses": int(degraded)}
-    return ((hop_port, hop_occ, hop_after, hop_on), faulted, fstats,
-            P + (1 if ih else 0), H)
+    return ((hop_port, hop_occ, hop_after, hop_on, hop_clean), faulted,
+            fstats, P + (1 if ih else 0), H)
 
 
 # ------------------------------------------------------------------ runner
+def _init_carry(cfg: StackConfig, state, start_tick, mspec=None,
+                want_lat: bool = True):
+    """The full replay carry pytree at ``start_tick`` — LFB slots, issue
+    clock, stamp counter, port busy-untils, the stacked media/flash state,
+    and the aux (metrics / streaming-summary / QoS) accumulators.  Built
+    eagerly by the chunked driver (so it can be buffer-donated across
+    chunk calls) and traced by the one-shot entry points; both produce the
+    identical structure, which is what makes chunked replay tick-identical
+    to one-shot at any chunk size."""
+    ecmp = cfg.num_routes > 1
+    vec_pb = ecmp or cfg.fault_hops
+    aux0 = {}
+    if mspec is not None:
+        from repro.core.replay import metrics as _metrics
+        if not want_lat:
+            aux0["acc"] = jnp.zeros((_metrics.acc_rows(mspec, 1, 1), 4),
+                                    jnp.int64)
+            aux0["med"] = jnp.zeros(len(_metrics.MEDIA_COUNTERS[cfg.kind]),
+                                    jnp.int64)
+        aux0["q"] = (jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
+                     else tuple(_i64(0) for _ in range(cfg.num_ports)))
+        if cfg.qos_ports:
+            aux0["qthr"] = (jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
+                            else tuple(_i64(0) for _ in range(cfg.num_ports)))
+            if cfg.fault_hops:
+                # retries decouple the QoS virtual clock from the port
+                # busy-until, so the fault lane carries it explicitly
+                aux0["vft"] = jnp.zeros(cfg.num_ports, jnp.int64)
+    if not want_lat:
+        aux0["first"] = _i64(BIG)
+        aux0["last"] = _i64(start_tick)
+        aux0["sum"] = _i64(0)
+    return (jnp.full(cfg.outstanding, start_tick, jnp.int64),  # LFB slots
+            _i64(start_tick),                                  # issue clock
+            _i64(1),                                           # stamp counter
+            # port busy-until: positional tuple on a fixed route (fuses into
+            # elementwise work), an indexable vector under ECMP/fault hops
+            jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
+            else tuple(_i64(0) for _ in range(cfg.num_ports)),
+            state,
+            aux0)
+
+
+def _scan_chunk(cfg: StackConfig, p: Dict, carry, xs: Dict, block=1,
+                mspec=None, want_lat=True, size=64):
+    """Scan one contiguous span of accesses from an explicit carry.
+
+    ``xs`` is a dict of per-access columns: ``addr``/``wr`` always,
+    ``route`` under ECMP, the five ``hp``/``ho``/``ha``/``hon``/``hoc``
+    hop columns under fault hops, and optionally ``valid`` — the ragged-
+    tail mask.  A masked step computes normally but commits *nothing*:
+    one blanket ``where`` keeps the entire previous carry (busy-untils,
+    media/GC state, stamp counter, every accumulator), so a zero-padded
+    tail chunk is a pure no-op and any chunking of the trace replays
+    tick-identically to one shot.  Key presence is static, so the
+    unmasked (full-chunk) program compiles without the gate."""
+    fh = cfg.fault_hops
+    ecmp = cfg.num_routes > 1
+    masked = "valid" in xs
+
+    def step(carry, x):
+        slots, now, ctr, pb, st, aux = carry
+        addr, wr = x["addr"], x["wr"]
+        k = jnp.argmin(slots)
+        issue = jnp.maximum(now, slots[k])
+        posted = wr if cfg.posted_writes else jnp.zeros((), bool)
+        qacc = aux.get("q")
+        qthr = aux.get("qthr")
+        vft = aux.get("vft")
+        if fh:
+            pb, t, qacc, vft, qthr = _transport_cols(
+                cfg, p, pb, issue, (x["hp"], x["ho"], x["ha"], x["hon"],
+                                    x["hoc"]), qacc, vft, qthr)
+        elif ecmp:
+            pb, t, qacc, qthr = _transport_ecmp(cfg, p, pb, issue,
+                                                x["route"], qacc, qthr)
+        else:
+            pb, t, qacc, qthr = _transport(cfg, p, pb, issue, qacc, qthr)
+        st, out = stack.step(cfg, p, st, dict(
+            lane=0, flash_lane=0, t=t, addr=addr, write=wr, posted=posted,
+            ctr=ctr))
+        done = out["done"]
+        if mspec is not None:
+            from repro.core.replay import metrics as _metrics
+            aux = {**aux, "q": qacc}
+            if qthr is not None:
+                aux["qthr"] = qthr
+            if vft is not None:
+                aux["vft"] = vft
+            if "acc" in aux:
+                aux["med"] = aux["med"] + _metrics.media_increments(
+                    cfg.kind, wr, out)
+                aux["acc"] = _metrics.acc_update(
+                    mspec, aux["acc"], host=0, dev=0, n_hosts=1,
+                    n_devs=1, issue=issue, done=done, size=size,
+                    hit=out["hit"])
+        if not want_lat:
+            aux = {**aux,
+                   "first": jnp.minimum(aux["first"], issue),
+                   "last": jnp.maximum(aux["last"], done),
+                   "sum": aux["sum"] + (done - issue)}
+        flags = jnp.where(out["hit"], 1, 0) | jnp.where(out["evict"], 2, 0)
+        if mspec is not None and want_lat:
+            from repro.core.replay import metrics as _metrics
+            for bit, key in _metrics.FLAG_EVENT_BITS[cfg.kind]:
+                flags = flags | jnp.where(out[key], 1 << bit, 0)
+        new = (slots.at[k].set(done), issue + p["issue_ov"], ctr + 1, pb,
+               st, aux)
+        if masked:
+            v = x["valid"]
+            new = jax.tree.map(lambda old, nxt: jnp.where(v, nxt, old),
+                               carry, new)
+        ys = ((issue, done, flags.astype(jnp.int32)) if want_lat else None)
+        return new, ys
+
+    return jax.lax.scan(step, carry, xs, unroll=block)
+
+
 def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
                 routes=None, cols=None, block=1, mspec=None, want_lat=True,
                 size=64):
@@ -249,11 +431,12 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
 
     ``mspec`` (a :class:`~repro.core.replay.metrics.MetricsSpec`, static)
     grows the carry with the telemetry accumulators.  With per-access
-    outputs (``want_lat=True``) that is *only* the per-port queueing
-    scalars: every media counter is packed as an event bit into the flags
-    column (:data:`metrics.FLAG_EVENT_BITS`) and the histogram/window/
-    counter fold is deferred to first bundle access, so the metrics lane
-    stays within a few percent of the bare scan.  In streaming mode the
+    outputs (``want_lat=True``) that is *only* the per-port queueing (and,
+    on weighted-QoS mounts, throttle-counter) scalars: every media counter
+    is packed as an event bit into the flags column
+    (:data:`metrics.FLAG_EVENT_BITS`) and the histogram/window/counter
+    fold is deferred to first bundle access, so the metrics lane stays
+    within a few percent of the bare scan.  In streaming mode the
     histogram+window scatter and the media counter-vector add ride the
     carry instead — O(buckets+windows) state, no per-access outputs to
     fold.  ``want_lat=False`` drops the per-access
@@ -274,85 +457,14 @@ def _scan_stack(cfg: StackConfig, p: Dict, state, addrs, writes, start_tick,
         raise ReplayUnsupported(
             "fault-hops stack needs precomputed per-access hop columns; "
             "use ReplayEngine.run_arrays (or engine='python')")
-    vec_pb = ecmp or fh   # busy-until as an indexable vector, not a tuple
-    aux0 = {}
-    if mspec is not None:
-        from repro.core.replay import metrics as _metrics
-        if not want_lat:
-            aux0["acc"] = jnp.zeros((_metrics.acc_rows(mspec, 1, 1), 4),
-                                    jnp.int64)
-            aux0["med"] = jnp.zeros(len(_metrics.MEDIA_COUNTERS[cfg.kind]),
-                                    jnp.int64)
-        aux0["q"] = (jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
-                     else tuple(_i64(0) for _ in range(cfg.num_ports)))
-    if not want_lat:
-        aux0["first"] = _i64(BIG)
-        aux0["last"] = _i64(start_tick)
-        aux0["sum"] = _i64(0)
-    init = (jnp.full(cfg.outstanding, start_tick, jnp.int64),  # LFB slots
-            _i64(start_tick),                                  # issue clock
-            _i64(1),                                           # stamp counter
-            # port busy-until: positional tuple on a fixed route (fuses into
-            # elementwise work), an indexable vector under ECMP
-            jnp.zeros(cfg.num_ports, jnp.int64) if vec_pb
-            else tuple(_i64(0) for _ in range(cfg.num_ports)),
-            state,
-            aux0)
-
-    def step(carry, x):
-        slots, now, ctr, pb, st, aux = carry
-        if fh:
-            addr, wr, hp, ho, ha, hon = x
-        elif ecmp:
-            addr, wr, route = x
-        else:
-            addr, wr = x
-        k = jnp.argmin(slots)
-        issue = jnp.maximum(now, slots[k])
-        posted = wr if cfg.posted_writes else jnp.zeros((), bool)
-        qacc = aux.get("q")
-        if fh:
-            pb, t, qacc = _transport_cols(cfg, p, pb, issue,
-                                          (hp, ho, ha, hon), qacc)
-        elif ecmp:
-            pb, t, qacc = _transport_ecmp(cfg, p, pb, issue, route, qacc)
-        else:
-            pb, t, qacc = _transport(cfg, p, pb, issue, qacc)
-        st, out = stack.step(cfg, p, st, dict(
-            lane=0, flash_lane=0, t=t, addr=addr, write=wr, posted=posted,
-            ctr=ctr))
-        done = out["done"]
-        slots = slots.at[k].set(done)
-        if mspec is not None:
-            from repro.core.replay import metrics as _metrics
-            aux = {**aux, "q": qacc}
-            if "acc" in aux:
-                aux["med"] = aux["med"] + _metrics.media_increments(
-                    cfg.kind, wr, out)
-                aux["acc"] = _metrics.acc_update(
-                    mspec, aux["acc"], host=0, dev=0, n_hosts=1,
-                    n_devs=1, issue=issue, done=done, size=size,
-                    hit=out["hit"])
-        if not want_lat:
-            aux = {**aux,
-                   "first": jnp.minimum(aux["first"], issue),
-                   "last": jnp.maximum(aux["last"], done),
-                   "sum": aux["sum"] + (done - issue)}
-        flags = jnp.where(out["hit"], 1, 0) | jnp.where(out["evict"], 2, 0)
-        if mspec is not None and want_lat:
-            from repro.core.replay import metrics as _metrics
-            for bit, key in _metrics.FLAG_EVENT_BITS[cfg.kind]:
-                flags = flags | jnp.where(out[key], 1 << bit, 0)
-        ys = ((issue, done, flags.astype(jnp.int32)) if want_lat else None)
-        return (slots, issue + p["issue_ov"], ctr + 1, pb, st, aux), ys
-
+    xs = {"addr": addrs, "wr": writes}
     if fh:
-        xs = (addrs, writes) + tuple(cols)
+        xs.update(zip(("hp", "ho", "ha", "hon", "hoc"), cols))
     elif ecmp:
-        xs = (addrs, writes, routes)
-    else:
-        xs = (addrs, writes)
-    carry, ys = jax.lax.scan(step, init, xs, unroll=block)
+        xs["route"] = routes
+    init = _init_carry(cfg, state, start_tick, mspec, want_lat)
+    carry, ys = _scan_chunk(cfg, p, init, xs, block=block, mspec=mspec,
+                            want_lat=want_lat, size=size)
     issues, dones, flags = ys if want_lat else (None, None, None)
     return issues, dones, flags, carry[4], carry[5]
 
@@ -384,6 +496,90 @@ def _run_stack_faulted(cfg: StackConfig, p: Dict, addrs, writes, cols,
                        want_lat=want_lat, size=size)
 
 
+# --------------------------------------------------------------- streaming
+@functools.partial(jax.jit, static_argnums=(0, 4, 5, 6, 7),
+                   donate_argnums=(2,))
+def _replay_chunk(cfg: StackConfig, p: Dict, carry, xs: Dict, block: int = 1,
+                  mspec=None, want_lat: bool = True, size: int = 64):
+    """One jitted chunk of the streaming replay.  The carry is donated:
+    XLA reuses its buffers for the output carry, so threading state across
+    an arbitrarily long trace allocates O(chunk), not O(trace)."""
+    return _scan_chunk(cfg, p, carry, xs, block=block, mspec=mspec,
+                       want_lat=want_lat, size=size)
+
+
+def _pad_rows(v: np.ndarray, chunk: int) -> np.ndarray:
+    v = np.asarray(v)
+    pad = chunk - v.shape[0]
+    if pad <= 0:
+        return v
+    return np.concatenate([v, np.zeros((pad,) + v.shape[1:], v.dtype)])
+
+
+def _dealias(tree):
+    """Copy any carry leaf whose device buffer aliases an earlier leaf.
+
+    XLA may return two identical outputs (e.g. a never-touched port's
+    busy-until and its zero QoS counter) in ONE shared buffer; donating
+    that carry back would donate the same buffer twice, which XLA
+    rejects.  Copies only the duplicated (scalar-sized) leaves."""
+    seen = set()
+
+    def fix(x):
+        try:
+            ptr = x.unsafe_buffer_pointer()
+        except Exception:
+            return x
+        if ptr in seen:
+            return jnp.array(x, copy=True)
+        seen.add(ptr)
+        return x
+
+    return jax.tree.map(fix, tree)
+
+
+def _chunked_scan(cfg: StackConfig, p: Dict, chunks, n: int, chunk: int,
+                  start_tick, block=1, mspec=None, want_lat=True, size=64):
+    """Outer streaming loop: replay ``n`` accesses arriving as an iterator
+    of ``(lo, hi, cols)`` numpy chunk dicts, threading the full carry
+    pytree across chunk boundaries with buffer donation.  A short chunk is
+    zero-padded up to ``chunk`` and masked with a per-access ``valid``
+    column (masked steps advance *nothing* — see :func:`_scan_chunk`), so
+    the jitted chunk program compiles at most twice (full chunk + masked
+    chunk) and the result is tick-identical to the one-shot scan at any
+    chunk size.  Must run under ``enable_x64``; ``chunks`` must cover
+    exactly ``[0, n)`` in order."""
+    carry = _init_carry(cfg, stack.init_state(cfg), _i64(start_tick),
+                        mspec, want_lat)
+    parts = []
+    seen = 0
+    for lo, hi, cols in chunks:
+        m = hi - lo
+        if not 0 < m <= chunk or lo != seen:
+            raise AssertionError(
+                f"chunk iterator out of order: [{lo}, {hi}) after {seen}")
+        seen = hi
+        if m < chunk:
+            cols = {k: _pad_rows(v, chunk) for k, v in cols.items()}
+            cols["valid"] = np.arange(chunk) < m
+        xs = {k: jnp.asarray(v) for k, v in cols.items()}
+        carry, ys = _replay_chunk(cfg, p, _dealias(carry), xs, block, mspec,
+                                  want_lat, size)
+        if want_lat:
+            iss, dn, fl = ys
+            parts.append((np.asarray(iss[:m]), np.asarray(dn[:m]),
+                          np.asarray(fl[:m])))
+    if seen != n:
+        raise AssertionError(f"chunk iterator produced {seen} of {n} accesses")
+    if want_lat:
+        issues = np.concatenate([x[0] for x in parts])
+        dones = np.concatenate([x[1] for x in parts])
+        flags = np.concatenate([x[2] for x in parts])
+    else:
+        issues = dones = flags = None
+    return issues, dones, flags, carry[4], carry[5]
+
+
 # ------------------------------------------------------------------ facade
 @dataclass
 class ReplayResult(TraceResult):
@@ -412,6 +608,12 @@ class ReplayEngine:
     behind a switch fabric; cache policies lru/fifo/direct; FTL greedy GC
     included).  Unsupported shapes raise :class:`ReplayUnsupported` so
     callers can fall back.
+
+    ``chunk_size`` (on ``run``/``run_arrays``) switches to the streaming
+    chunk loop — same ticks, same metrics, O(chunk) peak *device* input
+    residency; ``run_store`` additionally streams the input columns from
+    an on-disk :class:`~repro.data.trace_store.TraceStore`, so the host
+    never materializes the trace either.
     """
 
     def __init__(self, device, outstanding: int = 32,
@@ -426,20 +628,19 @@ class ReplayEngine:
         self.metrics = metrics        # Optional[MetricsSpec]
 
     def run(self, trace, start_tick: int = 0,
-            return_latencies: bool = True) -> ReplayResult:
+            return_latencies: bool = True,
+            chunk_size: Optional[int] = None) -> ReplayResult:
         addrs, writes, size = trace_to_arrays(trace)
         return self.run_arrays(addrs, writes, size=size,
                                start_tick=start_tick,
-                               return_latencies=return_latencies)
+                               return_latencies=return_latencies,
+                               chunk_size=chunk_size)
 
-    def run_arrays(self, addrs: np.ndarray, writes: np.ndarray, *,
-                   size: int = 64, start_tick: int = 0,
-                   return_latencies: bool = True) -> ReplayResult:
-        addrs = np.asarray(addrs, np.int64)
-        writes = np.asarray(writes, bool)
-        if addrs.size == 0:
+    # shared refusal + fault-plan discovery for every entry point
+    def _common_refusals(self, n: int, start_tick: int):
+        if n == 0:
             raise ReplayUnsupported("empty trace")
-        if addrs.size > MAX_ACCESSES:
+        if n > MAX_ACCESSES:
             raise ReplayUnsupported(
                 f"trace longer than {MAX_ACCESSES} accesses (packed-stamp "
                 "budget); split the trace or use engine='python'")
@@ -449,8 +650,8 @@ class ReplayEngine:
             # binds (see spec._fabric_hops); negative ticks void the proof
             raise ReplayUnsupported(
                 "QoS replay needs start_tick >= 0; use engine='python'")
-        mspec = self.metrics
-        want_lat = bool(return_latencies)
+
+    def _active_plan(self):
         # active fault plan discovery: install() sets it on the mount (and
         # on the shared fabric); direct devices carry it themselves
         plan = getattr(self.device, "fault_plan", None)
@@ -459,6 +660,20 @@ class ReplayEngine:
                            "fault_plan", None)
         if plan is not None and not plan.active:
             plan = None
+        return plan
+
+    def run_arrays(self, addrs: np.ndarray, writes: np.ndarray, *,
+                   size: int = 64, start_tick: int = 0,
+                   return_latencies: bool = True,
+                   chunk_size: Optional[int] = None) -> ReplayResult:
+        addrs = np.asarray(addrs, np.int64)
+        writes = np.asarray(writes, bool)
+        self._common_refusals(int(addrs.size), start_tick)
+        if chunk_size is not None and int(chunk_size) < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
+        mspec = self.metrics
+        want_lat = bool(return_latencies)
+        plan = self._active_plan()
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,
             issue_overhead_ns=self.issue_overhead_ns,
@@ -476,9 +691,12 @@ class ReplayEngine:
             # where the interpreted driver would)
             fcols, faulted, fstats, n_ports, n_hops = _fault_transport_cols(
                 self.device, plan, addrs, size)
+            qp = tuple(
+                i for i, key in enumerate(faulted["port_keys"])
+                if self.device.fabric.ports[key].qos_enabled)
             cfg = dataclasses.replace(cfg, fault_hops=True,
                                       num_hops=n_hops, num_ports=n_ports,
-                                      num_routes=1)
+                                      num_routes=1, qos_ports=qp)
             params = {k: v for k, v in params.items()
                       if k not in ("hop_port", "hop_occ", "hop_after")}
         poisoned = None
@@ -487,14 +705,34 @@ class ReplayEngine:
                 0, np.arange(addrs.size, dtype=np.int64), writes)
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
-            if cfg.fault_hops:
+            if cfg.num_routes > 1:
+                from repro.core.replay.spec import access_route_choices
+                routes = access_route_choices(self.device, addrs)
+            if chunk_size is not None:
+                chunk = int(chunk_size)
+                n = int(addrs.size)
+
+                def _feed():
+                    for lo in range(0, n, chunk):
+                        hi = min(lo + chunk, n)
+                        d = {"addr": addrs[lo:hi], "wr": writes[lo:hi]}
+                        if cfg.fault_hops:
+                            for key, c in zip(("hp", "ho", "ha", "hon",
+                                               "hoc"), fcols):
+                                d[key] = c[lo:hi]
+                        elif cfg.num_routes > 1:
+                            d["route"] = routes[lo:hi]
+                        yield lo, hi, d
+
+                issues, dones, flags, final, aux = _chunked_scan(
+                    cfg, pj, _feed(), n, chunk, start_tick,
+                    self.block_size, mspec, want_lat, size)
+            elif cfg.fault_hops:
                 issues, dones, flags, final, aux = _run_stack_faulted(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
                     tuple(jnp.asarray(c) for c in fcols), _i64(start_tick),
                     self.block_size, mspec, want_lat, size)
             elif cfg.num_routes > 1:
-                from repro.core.replay.spec import access_route_choices
-                routes = access_route_choices(self.device, addrs)
                 issues, dones, flags, final, aux = _run_stack_ecmp(
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
                     jnp.asarray(routes), _i64(start_tick), self.block_size,
@@ -504,43 +742,158 @@ class ReplayEngine:
                     cfg, pj, jnp.asarray(addrs), jnp.asarray(writes),
                     _i64(start_tick), self.block_size, mspec, want_lat,
                     size)
-            bad, gcs = stack.flash_health(final)
-            bad, gcs = bool(bad), int(gcs)
+            return self._finish(
+                cfg, n=int(addrs.size), size=size, start_tick=start_tick,
+                want_lat=want_lat, issues=issues, dones=dones, flags=flags,
+                final=final, aux=aux, plan=plan, fstats=fstats,
+                poisoned=poisoned, faulted=faulted, writes=writes,
+                addrs=addrs, routes=routes)
+
+    def run_store(self, store, *, chunk_size: int, start_tick: int = 0,
+                  return_latencies: bool = True,
+                  chunk_iter=None) -> ReplayResult:
+        """Streaming replay from an on-disk columnar trace
+        (:class:`~repro.data.trace_store.TraceStore`, or anything
+        duck-typed like one: ``n``, ``size``, ``max_addr``, ``writes()``
+        and ``chunks(chunk_size)``).  Input residency is O(chunk) —
+        columns are memmap-sliced per chunk (optionally through a
+        prefetching ``chunk_iter``; see
+        :func:`repro.core.replay.stream.replay_stream`), the jitted chunk
+        program donates its carry, and nothing host-side ever holds the
+        full addr column.  With ``return_latencies=True`` the per-access
+        *outputs* are still materialized (inherently O(trace)); pass
+        ``return_latencies=False`` for bounded-memory replay end to end.
+
+        Transport fault plans (link retries / down windows) refuse: their
+        hop columns are precomputed from the whole trace host-side, which
+        defeats streaming — use ``run_arrays(chunk_size=...)`` or
+        ``engine='python'`` for those.  NAND and poison fault plans
+        stream fine."""
+        n = int(store.n)
+        size = int(store.size)
+        chunk = int(chunk_size)
+        if chunk < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
+        self._common_refusals(n, start_tick)
+        mspec = self.metrics
+        want_lat = bool(return_latencies)
+        plan = self._active_plan()
+        if (plan is not None and (plan.has_link or plan.has_down)
+                and isinstance(self.device, FabricAttachedDevice)):
+            raise ReplayUnsupported(
+                "transport fault plans (link retries / down windows) need "
+                "per-access hop columns over the whole trace; load the "
+                "trace and use run_arrays(chunk_size=...) or "
+                "engine='python'")
+        cfg, params = build_stack(
+            self.device, size=size, outstanding=self.outstanding,
+            issue_overhead_ns=self.issue_overhead_ns,
+            posted_writes=self.posted_writes, n_accesses=n,
+            max_addr=int(store.max_addr), counters=mspec is not None)
+        ecmp = cfg.num_routes > 1
+        K = 0
+        route_counts = None
+        if ecmp:
+            K = len(self.device.fabric.paths(self.device.host,
+                                             self.device.device_node))
+            route_counts = np.zeros(K, np.int64)
+        has_poison = plan is not None and plan.has_poison
+        psum = 0
+        poison_parts: List[np.ndarray] = []
+        src = chunk_iter if chunk_iter is not None else store.chunks(chunk)
+
+        def _feed():
+            nonlocal psum
+            from repro.core.fabric.fabric import LINE_BYTES
+            from repro.core.fabric.routing import flow_choices
+            for lo, hi, cols in src:
+                d = {"addr": np.asarray(cols["addr"], np.int64),
+                     "wr": np.asarray(cols["wr"], bool)}
+                if ecmp:
+                    r = flow_choices(self.device.host,
+                                     self.device.device_node,
+                                     d["addr"] // LINE_BYTES, K)
+                    route_counts[:] += np.bincount(r, minlength=K)
+                    d["route"] = np.asarray(r, np.int32)
+                if has_poison:
+                    pz = plan.poisoned_np(
+                        0, np.arange(lo, hi, dtype=np.int64), d["wr"])
+                    psum += int(pz.sum())
+                    if want_lat:
+                        poison_parts.append(np.asarray(pz, bool))
+                yield lo, hi, d
+
+        with enable_x64():
+            pj = jax.tree.map(jnp.asarray, params)
+            issues, dones, flags, final, aux = _chunked_scan(
+                cfg, pj, _feed(), n, chunk, start_tick, self.block_size,
+                mspec, want_lat, size)
+            poisoned = None
+            if has_poison:
+                poisoned = (np.concatenate(poison_parts) if want_lat
+                            else None)
+            fstats = {"link_retries": 0, "failovers": 0,
+                      "degraded_accesses": 0, "poisoned_reads": psum}
+            return self._finish(
+                cfg, n=n, size=size, start_tick=start_tick,
+                want_lat=want_lat, issues=issues, dones=dones, flags=flags,
+                final=final, aux=aux, plan=plan, fstats=fstats,
+                poisoned=poisoned, faulted=None,
+                writes=(store.writes() if (mspec is not None and want_lat)
+                        else None),
+                addrs=None, routes=None, n_accesses=n,
+                route_counts=route_counts, poison_total=psum)
+
+    # shared post-processing: health check, poison bit, fault counters,
+    # metrics bundle, result assembly (identical for one-shot / chunked /
+    # store-streamed paths — called under enable_x64)
+    def _finish(self, cfg, *, n, size, start_tick, want_lat, issues, dones,
+                flags, final, aux, plan, fstats, poisoned, faulted, writes,
+                addrs, routes, n_accesses=None, route_counts=None,
+                poison_total=None):
+        bad, gcs = stack.flash_health(final)
+        bad, gcs = bool(bad), int(gcs)
+        if want_lat:
+            issues = np.asarray(issues)
+            dones = np.asarray(dones)
+            flags = np.asarray(flags)
+            if poisoned is not None:
+                # status bit only (bit 6): the hist/media folds read
+                # bits 0..5, so the bundle stays untouched by poison
+                flags = flags | (poisoned.astype(np.int32) << 6)
+        fdict = None
+        if plan is not None:
+            rr, rb = stack.fault_counters(final)
+            if poison_total is None:
+                poison_total = (int(poisoned.sum()) if poisoned is not None
+                                else 0)
+            fdict = {
+                "link_retries": fstats["link_retries"],
+                "failovers": fstats["failovers"],
+                "degraded_accesses": fstats["degraded_accesses"],
+                "nand_read_retries": int(rr),
+                "retired_blocks": int(rb),
+                "poisoned_reads": poison_total,
+            }
+        mb = None
+        mspec = self.metrics
+        if mspec is not None:
+            from repro.core.replay import metrics as _metrics
+            fcnt = stack.flash_counters(final)
+            fcnt = np.asarray(fcnt) if fcnt is not None else None
+            qthr = aux.get("qthr")
             if want_lat:
-                issues = np.asarray(issues)
-                dones = np.asarray(dones)
-                flags = np.asarray(flags)
-                if poisoned is not None:
-                    # status bit only (bit 6): the hist/media folds read
-                    # bits 0..5, so the bundle stays untouched by poison
-                    flags = flags | (poisoned.astype(np.int32) << 6)
-            fdict = None
-            if plan is not None:
-                rr, rb = stack.fault_counters(final)
-                fdict = {
-                    "link_retries": fstats["link_retries"],
-                    "failovers": fstats["failovers"],
-                    "degraded_accesses": fstats["degraded_accesses"],
-                    "nand_read_retries": int(rr),
-                    "retired_blocks": int(rb),
-                    "poisoned_reads": (int(poisoned.sum())
-                                       if poisoned is not None else 0),
-                }
-            mb = None
-            if mspec is not None:
-                from repro.core.replay import metrics as _metrics
-                fcnt = stack.flash_counters(final)
-                fcnt = np.asarray(fcnt) if fcnt is not None else None
-                if want_lat:
-                    mb = _metrics.bundle_single_deferred(
-                        mspec, self.device, cfg, issues, dones, flags,
-                        writes, aux["q"], fcnt, addrs, routes, size,
-                        faults=fdict, faulted=faulted)
-                else:
-                    mb = _metrics.bundle_single_fused(
-                        mspec, self.device, cfg, aux["acc"], aux["med"],
-                        aux["q"], fcnt, addrs, routes, size,
-                        faults=fdict, faulted=faulted)
+                mb = _metrics.bundle_single_deferred(
+                    mspec, self.device, cfg, issues, dones, flags,
+                    writes, aux["q"], fcnt, addrs, routes, size,
+                    faults=fdict, faulted=faulted, qthr=qthr,
+                    n_accesses=n_accesses, route_counts=route_counts)
+            else:
+                mb = _metrics.bundle_single_fused(
+                    mspec, self.device, cfg, aux["acc"], aux["med"],
+                    aux["q"], fcnt, addrs, routes, size,
+                    faults=fdict, faulted=faulted, qthr=qthr,
+                    n_accesses=n_accesses, route_counts=route_counts)
         if bad:
             raise ReplayUnsupported(
                 "FTL ran out of free blocks during GC (device overfilled) — "
@@ -555,8 +908,8 @@ class ReplayEngine:
             last = max(int(aux["last"]), start_tick)
             lat_sum = int(aux["sum"])
         return ReplayResult(
-            accesses=int(addrs.size),
-            bytes_moved=int(addrs.size) * size,
+            accesses=n,
+            bytes_moved=n * size,
             elapsed_ticks=last - first,
             sum_latency_ticks=lat_sum,
             end_tick=last,

@@ -682,21 +682,30 @@ def _flash_dicts(flash_cnt) -> List[Dict[str, int]]:
             for row in np.asarray(flash_cnt)]
 
 
-def _single_ports(device, queued, addrs: np.ndarray,
-                  routes: Optional[np.ndarray], size: int, faulted=None):
+def _single_ports(device, queued, addrs: Optional[np.ndarray],
+                  routes: Optional[np.ndarray], size: int, faulted=None,
+                  qthr=None, n_accesses: Optional[int] = None,
+                  route_counts: Optional[np.ndarray] = None):
     """``(host_label, dev_label, ports, ecmp)`` for a single-host fused
     run: port byte/packet/occupancy totals and ECMP choice counts are
     reconstructed from the route choices host-side (pure functions of the
     trace — exact, zero scan cost); ``queued`` is the per-port in-scan
-    queueing accumulator.  ``faulted`` (from the engine's fault-lane
-    precompute) overrides the clean reconstruction when transport faults
-    rerouted accesses or charged retry serializations."""
-    n = int(np.asarray(addrs).size)
+    queueing accumulator and ``qthr`` its QoS-throttle twin (carried only
+    on weighted mounts; ``None`` reads as all-zero, matching FCFS ports
+    whose interpreted counter never moves).  ``faulted`` (from the
+    engine's fault-lane precompute) overrides the clean reconstruction
+    when transport faults rerouted accesses or charged retry
+    serializations.  Streamed runs that never materialize the trace pass
+    ``n_accesses``/``route_counts`` instead of ``addrs``/``routes``."""
+    n = (int(n_accesses) if n_accesses is not None
+         else int(np.asarray(addrs).size))
     ports: Dict[str, Dict] = {}
     ecmp: Dict[str, List[int]] = {}
     if isinstance(device, FabricAttachedDevice):
         fab, host, node = device.fabric, device.host, device.device_node
         queued = [int(q) for q in np.asarray(queued).reshape(-1)]
+        qt = ([int(x) for x in np.asarray(qthr).reshape(-1)]
+              if qthr is not None else None)
         if faulted is not None:
             for j, key in enumerate(faulted["port_keys"]):
                 if not faulted["packets"][j]:
@@ -706,17 +715,17 @@ def _single_ports(device, queued, addrs: np.ndarray,
                     "packets": int(faulted["packets"][j]),
                     "occupied_ticks": int(faulted["occupied"][j]),
                     "queued_ticks": queued[j],
-                    "qos_throttle_events": 0,   # single origin never floors
+                    "qos_throttle_events": qt[j] if qt is not None else 0,
                     "bytes_by_host": {host: int(faulted["bytes"][j])}}
             ecmp = {k: list(v) for k, v in sorted(faulted["ecmp"].items())}
-        elif routes is None:
+        elif routes is None and route_counts is None:
             for h, (key, occ, _aft) in enumerate(
                     fab.route_occupancy(host, node, size)):
                 ports[f"{key[0]}->{key[1]}"] = {
                     "bytes": n * size, "packets": n,
                     "occupied_ticks": n * int(occ),
                     "queued_ticks": queued[h],
-                    "qos_throttle_events": 0,   # single origin never floors
+                    "qos_throttle_events": qt[h] if qt is not None else 0,
                     "bytes_by_host": {host: n * size}}
         else:
             K = len(fab.paths(host, node))
@@ -726,7 +735,9 @@ def _single_ports(device, queued, addrs: np.ndarray,
             port_keys = sorted({key for hops in per_route
                                 for key, _, _ in hops})
             pidx = {key: i for i, key in enumerate(port_keys)}
-            counts = np.bincount(np.asarray(routes), minlength=K)
+            counts = (np.asarray(route_counts, np.int64)
+                      if route_counts is not None
+                      else np.bincount(np.asarray(routes), minlength=K))
             nb = np.zeros(len(port_keys), np.int64)
             pk = np.zeros(len(port_keys), np.int64)
             occt = np.zeros(len(port_keys), np.int64)
@@ -743,7 +754,7 @@ def _single_ports(device, queued, addrs: np.ndarray,
                     "bytes": int(nb[j]), "packets": int(pk[j]),
                     "occupied_ticks": int(occt[j]),
                     "queued_ticks": queued[j],
-                    "qos_throttle_events": 0,
+                    "qos_throttle_events": qt[j] if qt is not None else 0,
                     "bytes_by_host": {host: int(nb[j]) * size // size}}
             for key in ports:
                 ports[key]["bytes_by_host"] = {host: ports[key]["bytes"]}
@@ -758,10 +769,13 @@ def _single_ports(device, queued, addrs: np.ndarray,
 
 
 def bundle_single_fused(spec: MetricsSpec, device, cfg, acc, med, queued,
-                        flash_cnt, addrs: np.ndarray,
+                        flash_cnt, addrs: Optional[np.ndarray],
                         routes: Optional[np.ndarray], size: int,
                         faults: Optional[Dict[str, int]] = None,
-                        faulted=None) -> MetricsBundle:
+                        faulted=None, qthr=None,
+                        n_accesses: Optional[int] = None,
+                        route_counts: Optional[np.ndarray] = None
+                        ) -> MetricsBundle:
     """Assemble the bundle after a single-host *streaming* fused run
     (``return_latencies=False``): ``acc``/``med`` come straight out of the
     scan carry — O(buckets+windows) output, no per-access arrays."""
@@ -769,7 +783,8 @@ def bundle_single_fused(spec: MetricsSpec, device, cfg, acc, med, queued,
     media = [dict(zip(MEDIA_COUNTERS[cfg.kind],
                       (int(x) for x in np.asarray(med))))]
     host_label, dev_label, ports, ecmp = _single_ports(
-        device, queued, addrs, routes, size, faulted)
+        device, queued, addrs, routes, size, faulted, qthr=qthr,
+        n_accesses=n_accesses, route_counts=route_counts)
     return MetricsBundle(
         spec=spec, hosts=[host_label], devices=[dev_label], hist=hist,
         dev_hist=dev_hist, windows=windows, media=media,
@@ -779,10 +794,13 @@ def bundle_single_fused(spec: MetricsSpec, device, cfg, acc, med, queued,
 
 def bundle_single_deferred(spec: MetricsSpec, device, cfg, issues, dones,
                            flags, writes, queued, flash_cnt,
-                           addrs: np.ndarray,
+                           addrs: Optional[np.ndarray],
                            routes: Optional[np.ndarray], size: int,
                            faults: Optional[Dict[str, int]] = None,
-                           faulted=None) -> MetricsBundle:
+                           faulted=None, qthr=None,
+                           n_accesses: Optional[int] = None,
+                           route_counts: Optional[np.ndarray] = None
+                           ) -> MetricsBundle:
     """Assemble the bundle after a single-host fused run with per-access
     outputs (``return_latencies=True``).  The histogram/window fold and the
     counter vector are pure functions of the materialized
@@ -791,7 +809,8 @@ def bundle_single_deferred(spec: MetricsSpec, device, cfg, issues, dones,
     deferred to first access — replay pays only the in-scan queueing
     scalars and a few flag-bit ORs for full telemetry."""
     host_label, dev_label, ports, ecmp = _single_ports(
-        device, queued, addrs, routes, size, faulted)
+        device, queued, addrs, routes, size, faulted, qthr=qthr,
+        n_accesses=n_accesses, route_counts=route_counts)
 
     def fold():
         hist, windows, dev_hist = fold_arrays(

@@ -267,10 +267,15 @@ def _media_setup(inners: Sequence, *, size: int, outstanding: int,
     return cfg0, mp0, flash_of, len(flash_lane)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 7, 8, 9, 10))
-def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
-               block: int = 1, mspec=None, want_lat: bool = True,
-               size: int = 64):
+def _multi_init(cfg: MultiCfg, start_tick, mspec=None,
+                want_lat: bool = True):
+    """The full multi-host carry pytree at ``start_tick`` — per-host LFB
+    slots / clocks / trace cursors, shared port busy-untils, stamp counter,
+    stacked media/flash state, the QoS virtual-finish / last-arrival
+    tables, and the aux accumulators.  Built eagerly by the chunked driver
+    (buffer-donated across chunk calls) and traced by :func:`_run_multi`;
+    identical structure either way, which is what makes chunked multi-host
+    replay tick-identical to one-shot."""
     H, O = cfg.num_hosts, cfg.outstanding
     state0 = stack.init_state(cfg.stack, cfg.num_devs,
                               cfg.n_flash if cfg.n_flash else None)
@@ -299,7 +304,7 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
         aux0["cnt"] = jnp.zeros(H, jnp.int64)
         aux0["bad"] = jnp.zeros((), bool)
         aux0["gcs"] = _i64(0)
-    init = (jnp.full((H, O), start_tick, jnp.int64),   # per-host LFB slots
+    return (jnp.full((H, O), start_tick, jnp.int64),   # per-host LFB slots
             jnp.full(H, start_tick, jnp.int64),        # per-host issue clock
             jnp.zeros(H, jnp.int64),                   # per-host trace index
             jnp.zeros(cfg.num_ports, jnp.int64),       # shared port busy
@@ -311,6 +316,16 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
             jnp.full((cfg.num_ports, H), NEVER, jnp.int64),
             aux0)
 
+
+def _make_multi_step(cfg: MultiCfg, p: Dict, lens, lookup, mspec=None,
+                     want_lat: bool = True, size: int = 64):
+    """The per-step body of the multi-host scan, parameterized by
+    ``lookup(i, ix) -> (addr, write, dev, route)`` so the same compiled
+    logic can read either the full padded ``(H, L)`` trace arrays (the
+    one-shot path) or a per-host ``(H, S)`` sliding window re-based on the
+    carry's trace cursors (the chunked path)."""
+    H = cfg.num_hosts
+
     def step(carry, _):
         slots, now, idx, port_busy, ctr, st, vft, last_arr, aux = carry
         cand = jnp.where(idx < lens,
@@ -320,10 +335,7 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
         row = slots[i]
         k = jnp.argmin(row)
         issue = jnp.maximum(now[i], row[k])
-        a = addrs[i, idx[i]]
-        wr = writes[i, idx[i]]
-        dev = devs[i, idx[i]]
-        r = p["route"][i, idx[i]] if cfg.max_routes > 1 else 0
+        a, wr, dev, r = lookup(i, idx[i])
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
         t = issue
         floor = _i64(0)
@@ -418,6 +430,20 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
         return ((slots, now, idx, port_busy, ctr + 1, st, vft, last_arr,
                  aux), ys)
 
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 7, 8, 9, 10))
+def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
+               block: int = 1, mspec=None, want_lat: bool = True,
+               size: int = 64):
+    init = _multi_init(cfg, start_tick, mspec, want_lat)
+
+    def lookup(i, ix):
+        r = p["route"][i, ix] if cfg.max_routes > 1 else 0
+        return addrs[i, ix], writes[i, ix], devs[i, ix], r
+
+    step = _make_multi_step(cfg, p, lens, lookup, mspec, want_lat, size)
     # Blocked replay: `block` steps per sequential scan iteration (unroll).
     # The carry — including the per-host candidate race state (slots, now,
     # idx) — crosses block seams untouched, so the earliest-candidate-host
@@ -428,6 +454,31 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
     who, issues, dones, bad, gcs = (ys if want_lat
                                     else (None, None, None, None, None))
     return who, issues, dones, bad, gcs, carry[8]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8, 9),
+                   donate_argnums=(1,))
+def _run_multi_chunk(cfg: MultiCfg, carry, p: Dict, wins: Dict, lens, base,
+                     block: int = 1, mspec=None, want_lat: bool = True,
+                     size: int = 64):
+    """One jitted window of the chunked multi-host replay: ``S`` scan steps
+    over per-host ``(H, S)`` trace windows, each window starting at that
+    host's ``base`` cursor.  Every step consumes at most one access from
+    exactly one host, so ``S`` steps can never outrun an ``S``-wide
+    window; trailing padded reads (an exhausted host re-picked once all
+    candidates hit the sentinel) clip into the window and are discarded by
+    the same validity gates as the one-shot path.  The carry is donated —
+    threading state across an arbitrarily long trace allocates O(window),
+    not O(trace)."""
+    S = wins["addr"].shape[1]
+
+    def lookup(i, ix):
+        j = jnp.clip(ix - base[i], 0, S - 1)
+        r = wins["route"][i, j] if cfg.max_routes > 1 else 0
+        return wins["addr"][i, j], wins["wr"][i, j], wins["dev"][i, j], r
+
+    step = _make_multi_step(cfg, p, lens, lookup, mspec, want_lat, size)
+    return jax.lax.scan(step, carry, None, length=S, unroll=block)
 
 
 def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
@@ -586,8 +637,66 @@ class MultiHostReplay:
         return MultiHostResult(per_host=per_host,
                                elapsed_ticks=max(last_list) - first_all)
 
+    def _run_chunked(self, cfg, params, devs, addrs, writes, lens,
+                     start_tick, mspec, want_lat, size, chunk):
+        """Chunked multi-host replay: the scan consumes per-host sliding
+        windows of ``chunk`` accesses, re-sliced host-side from each
+        host's carry cursor after every window (each step consumes at most
+        one access, so a ``chunk``-wide window per host can never be
+        outrun).  The carry — the shared port busy-untils, QoS
+        virtual-finish/last-arrival tables, media/flash state and metrics
+        accumulators — is buffer-donated across windows; the windows are
+        contiguous slices, so feeding them from memmapped columns keeps
+        peak input residency O(hosts * chunk).  Tick-identical to the
+        one-shot scan: both run the same step body over the same access
+        sequence, only the lookup re-bases."""
+        from repro.core.replay.engine import _dealias
+
+        if chunk < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk!r}")
+        routes = params["route"]
+        pj = jax.tree.map(jnp.asarray,
+                          {k: v for k, v in params.items() if k != "route"})
+        lens_np = np.asarray(lens, np.int64)
+        lj = jnp.asarray(lens_np)
+        H = cfg.num_hosts
+        total = int(lens_np.sum())
+        carry = _multi_init(cfg, _i64(start_tick), mspec, want_lat)
+        parts = []
+        n_calls = max(1, -(-total // chunk))
+        for _ in range(n_calls):
+            base = np.minimum(np.asarray(carry[2], np.int64), lens_np)
+            wa = np.zeros((H, chunk), np.int64)
+            ww = np.zeros((H, chunk), bool)
+            wd = np.zeros((H, chunk), np.int32)
+            wr_ = np.zeros((H, chunk), np.int32)
+            for i in range(H):
+                b = int(base[i])
+                e = min(b + chunk, int(lens_np[i]))
+                if e > b:
+                    wa[i, :e - b] = addrs[i, b:e]
+                    ww[i, :e - b] = writes[i, b:e]
+                    wd[i, :e - b] = devs[i, b:e]
+                    if cfg.max_routes > 1:
+                        wr_[i, :e - b] = routes[i, b:e]
+            wins = {"addr": jnp.asarray(wa), "wr": jnp.asarray(ww),
+                    "dev": jnp.asarray(wd)}
+            if cfg.max_routes > 1:
+                wins["route"] = jnp.asarray(wr_)
+            carry, ys = _run_multi_chunk(
+                cfg, _dealias(carry), pj, wins, lj, jnp.asarray(base),
+                self.block_size, mspec, want_lat, size)
+            if want_lat:
+                parts.append(tuple(np.asarray(y) for y in ys))
+        if want_lat:
+            who, issues, dones, bad, gcs = (
+                np.concatenate([pt[j] for pt in parts]) for j in range(5))
+        else:
+            who = issues = dones = bad = gcs = None
+        return who, issues, dones, bad, gcs, carry[8]
+
     def _execute(self, traces: Sequence, start_tick: int,
-                 want_lat: bool = True):
+                 want_lat: bool = True, chunk_size=None):
         cfg, params, devs, addrs, writes, lens, size = self.prepare(traces)
         if cfg.qos and start_tick < 0:
             raise ReplayUnsupported(
@@ -595,11 +704,16 @@ class MultiHostReplay:
                 "arrival sentinels assume non-negative ticks)")
         mspec = self.metrics
         with enable_x64():
-            pj = jax.tree.map(jnp.asarray, params)
-            who, issues, dones, bad, gcs, aux = _run_multi(
-                cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
-                jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
-                self.block_size, mspec, want_lat, size)
+            if chunk_size is not None:
+                who, issues, dones, bad, gcs, aux = self._run_chunked(
+                    cfg, params, devs, addrs, writes, lens, start_tick,
+                    mspec, want_lat, size, int(chunk_size))
+            else:
+                pj = jax.tree.map(jnp.asarray, params)
+                who, issues, dones, bad, gcs, aux = _run_multi(
+                    cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
+                    jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
+                    self.block_size, mspec, want_lat, size)
             if want_lat:
                 bad = np.asarray(bad)
                 gcs = np.asarray(gcs)
@@ -651,22 +765,25 @@ class MultiHostReplay:
         return res
 
     def run(self, traces: Sequence, start_tick: int = 0,
-            return_latencies: bool = True) -> MultiHostResult:
+            return_latencies: bool = True,
+            chunk_size=None) -> MultiHostResult:
         who, issues, dones, lens, size, aux, bundle = self._execute(
-            traces, start_tick, want_lat=bool(return_latencies))
+            traces, start_tick, want_lat=bool(return_latencies),
+            chunk_size=chunk_size)
         if return_latencies:
             res = self.aggregate(who, issues, dones, lens, size, start_tick)
         else:
             res = self._aggregate_scalars(aux, lens, size, start_tick)
         return self._attach(res, bundle)
 
-    def run_recorded(self, traces: Sequence, start_tick: int = 0
+    def run_recorded(self, traces: Sequence, start_tick: int = 0,
+                     chunk_size=None
                      ) -> Tuple[MultiHostResult, List[np.ndarray]]:
         """:meth:`run` plus the per-access latency stream of every host
         (in that host's issue order) — tensors the scan already produced
         for free, exposed for conformance pinning and tail analysis."""
         who, issues, dones, lens, size, aux, bundle = self._execute(
-            traces, start_tick)
+            traces, start_tick, chunk_size=chunk_size)
         res = self.aggregate(who, issues, dones, lens, size, start_tick)
         valid = np.arange(who.size) < int(np.asarray(lens).sum())
         lat = [(dones - issues)[valid & (who == i)]

@@ -126,6 +126,14 @@ class StackConfig:
     # consumes per-access hop columns precomputed host-side instead of the
     # static route tensors — see ReplayEngine
     fault_hops: bool = False
+    # QoS observability (single host): indices into the busy-until
+    # container (hop position on a fixed route, union-port index under
+    # ECMP / fault hops) whose fabric port runs weighted arbitration.
+    # With one origin the ack floor provably never binds (see
+    # _fabric_hops), so only the qos_throttle_events counter is mirrored
+    # — and only when metrics are collected, leaving the no-metrics
+    # compiled program untouched.
+    qos_ports: Tuple[int, ...] = ()
 
 
 def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
@@ -135,30 +143,48 @@ def _link_hops(link: CXLLink, size: int) -> Tuple[list, int]:
     return [(0, ns(size / link.bw_gbps), 0)], ns(link.rt_extra_ns)
 
 
-def _fabric_hops(dev: FabricAttachedDevice, size: int) -> Tuple[list, int]:
+def _fabric_hops(dev: FabricAttachedDevice, size: int
+                 ) -> Tuple[list, int, Tuple[int, ...]]:
     """Route tensor export: one (port_index, occ_ticks, after_ticks) per hop,
     from :meth:`Fabric.route_occupancy` (the single definition of the
-    per-hop busy-until rule).
+    per-hop busy-until rule), plus the hop indices whose port runs weighted
+    QoS arbitration.
 
-    Single-host QoS note: a fabric with QoS weights needs *no* mirroring
-    here — with one origin the active set is always the singleton, the pace
-    equals the occupancy exactly (``occ * (w/w)``), the virtual clock never
-    overtakes the port's busy-until, and the ack floor provably never binds
-    (see :meth:`SwitchPort.qos_update`), so the interpreted path is
-    bit-identical to plain FCFS.  ECMP, by contrast, changes which ports a
-    transfer occupies, so it is exported as per-route tensors by
-    :func:`_fabric_route_tensors`."""
+    Single-host QoS note: a fabric with QoS weights leaves every *tick*
+    unchanged — with one origin the active set is always the singleton, the
+    pace equals the clean occupancy exactly (``int(occ * w/w)``), the
+    virtual clock obeys the identical ``max(prev, now) + occ`` recurrence
+    as the port's busy-until (same zero init, same arrival sequence), and
+    the ack floor provably never binds (see :meth:`SwitchPort.qos_update`),
+    so latencies are bit-identical to plain FCFS.  The *counter* twin,
+    ``qos_throttle_events``, still fires whenever the virtual clock is
+    ahead of the arrival — which, by that same recurrence identity, is
+    exactly when the port's busy-until is — so the fused lanes mirror it
+    straight off the busy-until state on the hops returned here.  ECMP, by
+    contrast, changes which ports a transfer occupies, so it is exported
+    as per-route tensors by :func:`_fabric_route_tensors`."""
     fab = dev.fabric
-    hops = [(i, occ, after) for i, (_, occ, after) in enumerate(
-        fab.route_occupancy(dev.host, dev.device_node, size))]
-    return hops, ns(fab.rt_extra_ns)
+    occ_hops = fab.route_occupancy(dev.host, dev.device_node, size)
+    hops = [(i, occ, after) for i, (_, occ, after) in enumerate(occ_hops)]
+    qos = tuple(i for i, (key, _, _) in enumerate(occ_hops)
+                if fab.ports[key].qos_enabled)
+    return hops, ns(fab.rt_extra_ns), qos
+
+
+def _qos_union_ports(fab, port_keys) -> Tuple[int, ...]:
+    """Indices (into a sorted port-key union) of weighted-arbitration ports."""
+    return tuple(i for i, key in enumerate(port_keys)
+                 if fab.ports[key].qos_enabled)
 
 
 def _fabric_route_tensors(dev: FabricAttachedDevice, size: int):
     """ECMP export: per-route hop tensors over the union of ports the path
     set touches.  All equal-cost routes share one hop count, so only the
     port indices differ per route.  Returns ``(hop_port (K,H) int32,
-    hop_occ (K,H) int64, hop_after (K,H) int64, num_ports, rt_extra)``."""
+    hop_occ (K,H) int64, hop_after (K,H) int64, num_ports, rt_extra,
+    qos_ports)`` — the last being the union-port indices under weighted
+    arbitration (see the single-origin recurrence note on
+    :func:`_fabric_hops`)."""
     fab = dev.fabric
     routes = fab.paths(dev.host, dev.device_node)
     K = len(routes)
@@ -177,7 +203,8 @@ def _fabric_route_tensors(dev: FabricAttachedDevice, size: int):
             hop_port[k, h] = pidx[key]
             hop_occ[k, h] = occ_h
             hop_after[k, h] = after_h
-    return hop_port, hop_occ, hop_after, len(port_keys), ns(fab.rt_extra_ns)
+    return (hop_port, hop_occ, hop_after, len(port_keys),
+            ns(fab.rt_extra_ns), _qos_union_ports(fab, port_keys))
 
 
 def access_route_choices(device: MemDevice, addrs: np.ndarray) -> np.ndarray:
@@ -250,20 +277,21 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
                 "(Fabric.reset() or re-build it, or use engine='python')")
         if len(device.fabric.paths(device.host, device.device_node)) > 1:
             ecmp = _fabric_route_tensors(device, size)
-            hops, rt = [], ecmp[4]
+            hops, rt, qos_ports = [], ecmp[4], ecmp[5]
         else:
-            hops, rt = _fabric_hops(device, size)
+            hops, rt, qos_ports = _fabric_hops(device, size)
         inner = device.inner
         _require_fresh(inner)
     elif isinstance(device, (CXLDRAMDevice, CXLSSDDevice, CachedCXLSSDDevice)):
         hops, rt = _link_hops(device.link, size)
+        qos_ports = ()
     elif isinstance(device, (DRAMDevice, PMEMDevice)):
-        hops, rt = [], 0
+        hops, rt, qos_ports = [], 0, ()
     else:
         raise ReplayUnsupported(f"no fused model for {type(device).__name__}")
 
     if ecmp is not None:
-        hop_port, hop_occ, hop_after, n_ports, rt = ecmp
+        hop_port, hop_occ, hop_after, n_ports, rt = ecmp[:5]
         params: Dict = {
             "issue_ov": ns(issue_overhead_ns),
             # per-route port indices into the path set's port union
@@ -275,7 +303,8 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
         common = dict(outstanding=max(1, outstanding),
                       posted_writes=posted_writes,
                       num_hops=hop_occ.shape[1], num_ports=n_ports,
-                      num_routes=hop_occ.shape[0], counters=counters)
+                      num_routes=hop_occ.shape[0], counters=counters,
+                      qos_ports=qos_ports)
     else:
         params = {
             "issue_ov": ns(issue_overhead_ns),
@@ -287,7 +316,7 @@ def build_stack(device: MemDevice, *, size: int, outstanding: int,
         common = dict(outstanding=max(1, outstanding),
                       posted_writes=posted_writes,
                       num_hops=len(hops), num_ports=max(1, len(hops)),
-                      counters=counters)
+                      counters=counters, qos_ports=qos_ports)
 
     if isinstance(inner, (DRAMDevice, CXLDRAMDevice)):
         if isinstance(inner, CXLDRAMDevice) and inner is not device:

@@ -1,0 +1,72 @@
+"""Streaming replay front end: fused replay straight from a TraceStore.
+
+``replay_stream(path_or_store, device, chunk_size=...)`` replays an
+on-disk columnar trace (:class:`repro.data.trace_store.TraceStore`)
+through :class:`~repro.core.replay.engine.ReplayEngine` without ever
+holding the full trace in host or device memory:
+
+* input — each chunk is a memmap slice copied on demand; a background
+  :class:`~repro.data.pipeline.Prefetcher` keeps at most ``depth``
+  windows queued while one replays, so peak input residency is
+  ``(prefetch_depth + 1) * chunk_size * row_bytes``, independent of
+  trace length;
+* carry — the jitted chunk program donates its carry pytree, so device
+  state is a single O(config) buffer set threaded across chunks;
+* output — pass ``return_latencies=False`` (with a
+  :class:`~repro.core.replay.metrics.MetricsSpec` if you want telemetry)
+  for O(buckets + windows) outputs too; the default keeps per-access
+  latencies, which are inherently O(trace).
+
+Tick-identical to one-shot replay at any chunk size, or it refuses with
+the same :class:`~repro.core.replay.spec.ReplayUnsupported` error.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.replay.engine import ReplayEngine, ReplayResult
+from repro.core.replay.metrics import MetricsSpec
+
+
+def replay_stream(store, device, *, chunk_size: int,
+                  prefetch_depth: int = 2, outstanding: int = 32,
+                  issue_overhead_ns: float = 0.5,
+                  posted_writes: bool = True, block_size: int = 1,
+                  metrics: Optional[MetricsSpec] = None,
+                  start_tick: int = 0, return_latencies: bool = True,
+                  stats: Optional[dict] = None) -> ReplayResult:
+    """Replay ``store`` (a TraceStore or a path to one) on ``device``.
+
+    ``stats``, if given a dict, is filled with the streaming memory
+    model: ``chunks``, ``chunk_input_bytes`` (one window),
+    ``peak_input_bound_bytes`` (the analytic ``(depth + 1) * window``
+    bound: ``depth`` queued windows plus the one the producer holds
+    while the queue is full) and ``peak_buffered_bytes`` (the measured
+    high-water mark, always <= the bound).
+    """
+    from repro.data.pipeline import Prefetcher
+    from repro.data.trace_store import TraceStore
+
+    if not hasattr(store, "chunks"):
+        store = TraceStore(store)
+    chunk = int(chunk_size)
+    engine = ReplayEngine(device, outstanding=outstanding,
+                          issue_overhead_ns=issue_overhead_ns,
+                          posted_writes=posted_writes,
+                          block_size=block_size, metrics=metrics)
+    pf = Prefetcher(store.chunks(chunk), depth=prefetch_depth)
+    try:
+        res = engine.run_store(store, chunk_size=chunk,
+                               start_tick=start_tick,
+                               return_latencies=return_latencies,
+                               chunk_iter=pf)
+    finally:
+        pf.close()
+    if stats is not None:
+        window = chunk * store.row_bytes
+        stats["chunks"] = -(-store.n // chunk)
+        stats["chunk_input_bytes"] = window
+        stats["peak_input_bound_bytes"] = (prefetch_depth + 1) * window
+        stats["peak_buffered_bytes"] = pf.peak_buffered_bytes
+    return res

@@ -75,6 +75,11 @@ def scenario_names():
     names += sorted(MULTI_SSD_HOSTS)
     names.append("ssd-gc@direct")
     names += list(FAULT_SCENARIOS)
+    # single-host fabric port with weighted (QoS) arbitration: pins the
+    # qos_throttle_events counter python==fused (PR 8 — previously the
+    # fused single-host lanes hardcoded 0 and the divergence was
+    # deliberately left unpinned)
+    names.append("dram-qos@fabric")
     return names
 
 
@@ -159,6 +164,12 @@ def make_target(name: str):
 
     if name in FAULT_SCENARIOS:
         return _make_fault_target(name)
+    if name == "dram-qos@fabric":
+        # weighted-arbitration fabric port: the single-host QoS virtual
+        # clock can outrun arrivals, so the throttle counter moves
+        fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
+                           num_leaves=2, qos_weights={"h0": 3.0, "h1": 1.0})
+        return fab.mount("h1", "d1", _mk_device("dram"))
     device, attach = name.split("@")
     if device == "ssd-gc":
         return make_device("cxl-ssd-cache", ssd_cfg=_gc_ssd_cfg(750),

@@ -153,6 +153,63 @@ def test_replay_bench_fault_lane_recorded():
     assert nand["faults"]["nand_read_retries"] > 0
 
 
+def test_streaming_lane_derived_json_identical_across_runs():
+    """The streaming lane's derived results are a pure function of the
+    seeds (exactness bits, metrics parity, the analytic memory model —
+    no wall-clock or measured-peak numbers)."""
+    import replay_bench
+
+    a = replay_bench.collect_streaming_derived(accesses=2000)
+    b = replay_bench.collect_streaming_derived(accesses=2000)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_streaming_derived_exact_and_bounded():
+    """Streamed == one-shot on the derived lane, and the analytic input
+    bound is O(chunk): it scales with the chunk size, not the trace."""
+    import replay_bench
+
+    d = replay_bench.collect_streaming_derived(accesses=2000,
+                                               chunk_sizes=(64, 256))
+    c64, c256 = d["chunk_64"], d["chunk_256"]
+    for lane in (c64, c256):
+        assert lane["tick_exact_vs_oneshot"] is True
+        assert lane["metrics_equal"] is True
+    assert c256["peak_input_bound_bytes"] == \
+        4 * c64["peak_input_bound_bytes"]
+    assert c64["peak_input_bound_bytes"] < d["trace_input_bytes"]
+
+
+def test_replay_bench_streaming_lane_recorded():
+    """The committed artifact carries the >=1M-access streaming lane:
+    tick-exact at every chunk size, with peak input residency growing
+    with the chunk — not the trace."""
+    report = _load_replay_report()
+    lane = report.get("streaming")
+    assert lane is not None, \
+        "streaming section missing from results/BENCH_replay.json"
+    assert lane["n_accesses"] >= 1_000_000
+    assert len(lane["chunks"]) >= 2
+    bounds = {}
+    for ch, v in lane["chunks"].items():
+        assert v["tick_exact_vs_oneshot"] is True, \
+            f"chunk {ch} recorded as not tick-exact"
+        # the analytic O(chunk) model: (depth + 1) windows of
+        # chunk * row_bytes, far below the full trace's input bytes
+        assert v["peak_input_bound_bytes"] == \
+            (lane["prefetch_depth"] + 1) * v["chunk_input_bytes"]
+        assert v["peak_input_bound_bytes"] < lane["trace_input_bytes"]
+        assert v["peak_buffered_bytes"] <= v["peak_input_bound_bytes"]
+        bounds[int(ch)] = v["peak_input_bound_bytes"]
+    small, big = min(bounds), max(bounds)
+    assert bounds[big] * small == bounds[small] * big, \
+        "input bound must scale linearly with chunk size"
+    # streamed == one-shot scalar summaries, recorded in the artifact
+    assert all(v["tick_exact_vs_oneshot"]
+               for v in lane["derived"].values()
+               if isinstance(v, dict) and "tick_exact_vs_oneshot" in v)
+
+
 def test_replay_bench_speedups_meet_pinned_floor():
     report = _load_replay_report()
     assert report["meets_target"] is True
