@@ -408,8 +408,8 @@ def collect_fault_derived(accesses: int = FAULT_N) -> dict:
         "end_tick": int(rp.end_tick),
     }
 
-    # NAND read retries on a 2-host cached CXL-SSD fabric (the only fault
-    # class the multi-host fused lane admits; transport faults refuse)
+    # NAND read retries on a 2-host cached CXL-SSD fabric (transport
+    # faults on multi-host mounts are exercised by the availability lane)
     def mk_mh():
         fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
                            num_leaves=2)
@@ -438,6 +438,119 @@ def collect_fault_derived(accesses: int = FAULT_N) -> dict:
         "elapsed_ticks": int(rpm.elapsed_ticks),
     }
     return out
+
+
+# availability sweep: fused multi-host replay under transport faults,
+# one vmapped lane per fault seed (ISSUE 9 tentpole) — derived-only, so
+# the JSON is byte-identical across runs (CI-guarded)
+AVAIL_SEEDS = 16
+AVAIL_HOSTS = (4, 8)
+AVAIL_N = 320               # accesses per host
+
+
+def collect_availability_derived(host_counts=AVAIL_HOSTS,
+                                 n_seeds: int = AVAIL_SEEDS,
+                                 accesses: int = AVAIL_N) -> dict:
+    """Fleet-scale availability under transport faults — a pure function
+    of the seeds: per fault seed the pooled tail latencies, the
+    tick-windowed reachable-fraction curve, and the fault counters, on a
+    spine-leaf ECMP fabric at each host count.  Every seed lane of the
+    vmapped sweep is asserted tick-exact against the interpreted
+    ``MultiHostDriver``; no wall-clock numbers leak in, so the JSON is
+    byte-identical across runs (CI-guarded)."""
+    from repro.core.fabric import Fabric
+    from repro.core.faults import FaultConfig, FaultPlan, install
+    from repro.core.replay.sweep import fault_seed_sweep
+    from repro.core.workloads.driver import MultiHostDriver
+
+    fcfg = FaultConfig(link_retry_rate=0.15, link_retry_max=2,
+                       down_links=(("s0", "sp0", accesses // 4,
+                                    (3 * accesses) // 4),))
+    out = {
+        "n_seeds": n_seeds,
+        "accesses_per_host": accesses,
+        "fault_config": {
+            "link_retry_rate": 0.15, "link_retry_max": 2,
+            "down_links": [["s0", "sp0", accesses // 4,
+                            (3 * accesses) // 4]],
+        },
+    }
+    for nh in host_counts:
+        def mk(seed, nh=nh):
+            fab = Fabric.build("spine_leaf", num_hosts=nh, num_devices=nh,
+                               num_leaves=2, num_spines=2, ecmp=True)
+            tgts = [fab.mount(f"h{i}", f"d{i}", _mk_device("dram"))
+                    for i in range(nh)]
+            install(FaultPlan(fcfg, seed=seed), tgts)
+            return tgts
+
+        rng = np.random.default_rng(17)
+        traces = []
+        for _ in range(nh):
+            pages = rng.integers(0, FOOTPRINT_PAGES, accesses)
+            a = pages * 4096 + rng.integers(0, 64, accesses) * 64
+            w = rng.random(accesses) < WRITE_FRAC
+            traces.append([(int(x), 64, bool(y)) for x, y in zip(a, w)])
+        seeds = list(range(n_seeds))
+        lanes = fault_seed_sweep(mk, traces, seeds, outstanding=8)
+        exact = True
+        for lane in lanes:
+            py = MultiHostDriver(mk(lane["seed"]), outstanding=8).run(traces)
+            exact = exact and _multi_exact(py, lane["result"])
+        assert exact, "availability sweep lane diverged from the driver"
+        p = lambda lat, q: int(np.percentile(lat, q, method="higher"))
+        per_seed = {
+            str(lane["seed"]): {
+                "p50_ticks": p(lane["latency_ticks"], 50),
+                "p99_ticks": p(lane["latency_ticks"], 99),
+                "max_ticks": int(lane["latency_ticks"].max()),
+                "degraded_fraction":
+                    lane["availability"]["degraded_fraction"],
+                "failovers": lane["availability"]["failovers"],
+                "failover_latency_penalty_ticks":
+                    lane["availability"]["failover_latency_penalty_ticks"],
+                "time_in_degraded_windows_ticks":
+                    lane["availability"]["time_in_degraded_windows_ticks"],
+                "link_retries": lane["fault_stats"]["link_retries"],
+                "elapsed_ticks": int(lane["result"].elapsed_ticks),
+            } for lane in lanes}
+        av0 = lanes[0]["availability"]
+        W = av0["num_windows"]
+        # seed-averaged availability curve on the shared window axis
+        curve = {}
+        for w in range(W):
+            fracs = [lane["availability"]["windows"].get(str(w))
+                     for lane in lanes]
+            fracs = [f["reachable_fraction"] for f in fracs if f]
+            if fracs:
+                curve[str(w)] = round(sum(fracs) / len(fracs), 9)
+        p99s = [v["p99_ticks"] for v in per_seed.values()]
+        degf = [v["degraded_fraction"] for v in per_seed.values()]
+        out[f"hosts_x{nh}"] = {
+            "hosts": nh,
+            "tick_exact_vs_python": bool(exact),
+            "window_ticks": av0["window_ticks"],
+            "num_windows": W,
+            "seeds": per_seed,
+            "availability_curve": curve,
+            "tail_p99_ticks": {"min": min(p99s), "max": max(p99s),
+                               "mean": round(sum(p99s) / len(p99s), 6)},
+            "degraded_fraction": {"min": min(degf), "max": max(degf),
+                                  "mean": round(sum(degf) / len(degf), 9)},
+        }
+    return out
+
+
+def merge_availability_lane() -> str:
+    """Append/refresh ONLY the availability lane of an existing
+    ``BENCH_replay.json`` — previously recorded wall-clock timings stay
+    byte-for-byte untouched."""
+    with open(OUT_JSON) as f:
+        report = json.load(f)
+    report["availability"] = collect_availability_derived()
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return os.path.abspath(OUT_JSON)
 
 
 def bench_replay() -> List[Row]:
@@ -502,6 +615,13 @@ def bench_replay() -> List[Row]:
                          ("exact" if v["tick_exact_vs_python"]
                           else "DIVERGED")))
 
+    report["availability"] = collect_availability_derived()
+    for key, v in report["availability"].items():
+        if isinstance(v, dict) and "tick_exact_vs_python" in v:
+            rows.append((f"replay/availability/{key}", 0.0,
+                         ("exact" if v["tick_exact_vs_python"]
+                          else "DIVERGED")))
+
     report["speedup_dram_best"] = report["devices"]["dram"][
         "best_exact_speedup"]
     report["speedup_pmem_best"] = report["devices"]["pmem"][
@@ -526,6 +646,13 @@ ALL = [bench_replay]
 
 
 if __name__ == "__main__":
+    import sys
+
+    if "--availability-only" in sys.argv:
+        # refresh just the derived availability lane, leaving every
+        # previously recorded timing untouched
+        print(f"# wrote availability lane -> {merge_availability_lane()}")
+        sys.exit(0)
     print("name,us_per_call,derived")
     for fn in ALL:
         for name, us_per_call, derived in fn():

@@ -28,6 +28,33 @@ import jax
 import numpy as np
 
 
+def _fsync_write(path: Path, data) -> None:
+    """Write ``data`` (bytes or str) and fsync before returning — the
+    durability half of the tmp-dir + ``os.replace`` publish protocol: a
+    power cut after the rename can never expose a published checkpoint
+    whose contents still sit in the page cache."""
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(path, mode) as fh:
+        fh.write(data)
+        fh.flush()
+        os.fsync(fh.fileno())
+
+
+def _fsync_dir(path: Path) -> None:
+    """fsync a directory so a just-published rename survives power loss
+    (no-op on platforms whose dirfd fsync is unsupported)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -74,16 +101,18 @@ class CheckpointManager:
             # raw bytes + dtype string: np.save corrupts ml_dtypes (bfloat16)
             fname = key.replace("/", "__") + ".bin"
             raw = np.ascontiguousarray(leaf).tobytes()
-            (tmp / fname).write_bytes(raw)
+            _fsync_write(tmp / fname, raw)
             manifest["leaves"][key] = {
                 "file": fname, "shape": list(leaf.shape),
                 "dtype": str(leaf.dtype),
                 "sha256": hashlib.sha256(raw).hexdigest(),
             }
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        _fsync_write(tmp / "manifest.json", json.dumps(manifest, indent=1))
+        _fsync_dir(tmp)
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)          # atomic publish
+        _fsync_dir(self.dir)
         self._gc()
         return final
 
@@ -143,3 +172,49 @@ class CheckpointManager:
         leaves = [restored[k] for k in flat_t]
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         return tree, manifest["extra"], step
+
+    def restore_flat(self, step: Optional[int] = None, verify: bool = True):
+        """Restore a checkpoint as the flat ``{key: ndarray}`` mapping it
+        was saved from, shapes/dtypes taken from the manifest — no
+        structural template needed.  The streaming-replay resume path uses
+        this: its snapshot leaves (per-chunk output parts, fault-builder
+        accumulators) have shapes only the checkpoint itself knows."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        cdir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((cdir / "manifest.json").read_text())
+        flat = {}
+        for key, ent in manifest["leaves"].items():
+            raw = (cdir / ent["file"]).read_bytes()
+            if verify:
+                digest = hashlib.sha256(raw).hexdigest()
+                if digest != ent["sha256"]:
+                    raise IOError(f"checksum mismatch for {key!r}")
+            flat[key] = np.frombuffer(raw, dtype=np.dtype(ent["dtype"])) \
+                .reshape(ent["shape"]).copy()
+        return flat, manifest["extra"], step
+
+    def restore_latest_good(self, template: Any = None, mesh=None,
+                            specs: Any = None, verify: bool = True):
+        """Restore the newest checkpoint that passes verification, walking
+        backwards over older steps when the latest is torn or corrupt
+        (truncated leaf, checksum mismatch, unparseable manifest, missing
+        file).  ``.tmp`` directories — crashes mid-save — are invisible by
+        construction (:meth:`all_steps` excludes them).  With
+        ``template=None`` restores the flat mapping (:meth:`restore_flat`).
+        Raises ``FileNotFoundError`` when no checkpoint restores cleanly."""
+        errors = []
+        for step in sorted(self.all_steps(), reverse=True):
+            try:
+                if template is None:
+                    return self.restore_flat(step, verify=verify)
+                return self.restore(template, step, mesh=mesh, specs=specs,
+                                    verify=verify)
+            except (OSError, KeyError, ValueError,
+                    json.JSONDecodeError) as exc:
+                errors.append(f"step {step}: {type(exc).__name__}: {exc}")
+        detail = ("; ".join(errors) if errors
+                  else f"no checkpoints under {self.dir}")
+        raise FileNotFoundError(
+            f"no restorable checkpoint under {self.dir} ({detail})")

@@ -175,9 +175,23 @@ class FaultPlan:
     @property
     def has_transport_faults(self) -> bool:
         """Fault classes that ride the fabric transport (link retries,
-        down windows) or the per-access status path (poison) — the ones
-        the fused *multi-host* lane refuses."""
+        down windows) or the per-access status path (poison)."""
         return self.has_link or self.has_down or self.has_poison
+
+    def class_names(self) -> Tuple[str, ...]:
+        """The active fault classes, by human name, in schedule order —
+        refusal messages use this to say exactly *which* class a lane
+        cannot mirror (empty for an inert plan)."""
+        out = []
+        if self.has_link:
+            out.append("link-retry")
+        if self.has_down:
+            out.append("port-down")
+        if self.has_nand:
+            out.append("NAND")
+        if self.has_poison:
+            out.append("poison")
+        return tuple(out)
 
     # ------------------------------------------- class 1: link CRC retries
     def link_retries(self, port: Tuple[str, str], ordinal: int) -> int:

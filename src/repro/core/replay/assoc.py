@@ -341,8 +341,10 @@ class AssocReplayEngine:
                            "fault_plan", None)
         if plan is not None and plan.active:
             raise ReplayUnsupported(
-                "fault injection perturbs per-access service times with no "
-                "associative closed form; use engine='scan' (or "
+                f"active fault plan ({', '.join(plan.class_names())}) "
+                "perturbs per-access service times with no associative "
+                "closed form; the fused scan lane replays every fault "
+                "class tick-identically — use engine='scan' (or "
                 "engine='python')")
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,

@@ -196,105 +196,202 @@ def _transport_ecmp(cfg: StackConfig, p: Dict, pb, t, route, qacc=None,
 
 
 # ---------------------------------------------------------- fault columns
-def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
-    """Precompute the per-access transport hop columns for a fabric mount
-    under an active fault plan with link retries and/or down windows.
+class _FaultColumnBuilder:
+    """Per-access transport hop columns for a fabric mount under an active
+    link-retry / down-window plan, producible one contiguous ordinal range
+    at a time.
 
-    Walks every access ordinal through the *same* pure route selection the
+    Every access ordinal walks the *same* pure route selection the
     interpreted path uses (:meth:`Fabric.select_faulted` — degraded-set
     masking, ECMP over survivors, recomputed fallback routes) and the same
     per-hop occupancy rule (:meth:`Fabric.path_occupancy`), pre-charging
-    CRC-retry serializations into the occupancy column.  Raises
-    :class:`~repro.core.faults.DeviceUnreachable` for the same accesses the
-    python driver would.  Returns ``(cols, faulted, fstats, num_ports,
-    num_hops)``: the five ``(n, H)`` hop columns (port, retry-charged occ,
-    store-and-forward extra, on-mask, clean occ for the QoS virtual
-    clock), the host-side port/ECMP totals for metrics reconstruction, and
-    the transport fault counters."""
-    from repro.core.fabric.fabric import LINE_BYTES
-    from repro.core.fabric.routing import flow_hash
-    from repro.core.replay.spec import _link_hops
+    CRC-retry serializations into the occupancy column; the clean (retry-
+    free) occupancy rides its own column for the QoS virtual clock.
+    Raises :class:`~repro.core.faults.DeviceUnreachable` for the same
+    accesses the python driver would — at construction, since the plan's
+    down segments already determine which route sets go empty.
 
-    fab = device.fabric
-    host, node = device.host, device.device_node
+    The static shapes — the port union and the hop width ``num_hops`` —
+    are derived from the plan's :meth:`~FaultPlan.down_segments` alone
+    (route sets depend on the down set, never on the address), so columns
+    for any ordinal range compute without seeing the rest of the trace.
+    That is what lets transport faults *stream*: ``run_store`` builds
+    columns chunk by chunk, and the accumulated port/ECMP/counter totals
+    round-trip through :meth:`state`/:meth:`load_state` so a checkpointed
+    run resumes mid-trace bit-exactly."""
+
+    def __init__(self, device, plan, size: int, n: int,
+                 keep_flags: bool = True) -> None:
+        from repro.core.devices import CXLDRAMDevice
+        from repro.core.replay.spec import _link_hops
+
+        self.fab = device.fabric
+        self.plan = plan
+        self.host, self.node = device.host, device.device_node
+        self.size = int(size)
+        self.n = int(n)
+        self.keep_flags = keep_flags
+        fab = self.fab
+        segs = (plan.down_segments(self.n) if plan.has_down
+                else [(0, self.n, frozenset())])
+        # union of every path any ordinal can take: per down segment, the
+        # surviving (ECMP) set — or its recomputed failover routes — which
+        # is exactly the candidate set select_faulted chooses from.  An
+        # all-paths-down segment raises DeviceUnreachable here, matching
+        # the first access the interpreted driver would fail on.
+        self._occ: Dict[Tuple[str, ...], list] = {}
+        for _, _, down in segs:
+            ps = fab.routing.paths(self.host, self.node, down=down)
+            for q in (ps if fab.ecmp else [ps[0]]):
+                key = tuple(q)
+                if key not in self._occ:
+                    self._occ[key] = fab.path_occupancy(q, self.size)
+        self.K = len(fab.paths(self.host, self.node))
+        # a fabric-mounted CXL-DRAM kept on its private link
+        # (detach_link=False) pays one extra uncontended transport stage
+        # after the fabric — same append build_stack does for the clean
+        # route tensors
+        self._ih: list = []
+        if isinstance(device.inner, CXLDRAMDevice):
+            self._ih, _ = _link_hops(device.inner.link, self.size)
+        self.port_keys = sorted({pk for hops in self._occ.values()
+                                 for pk, _, _ in hops})
+        self._pidx = {k: i for i, k in enumerate(self.port_keys)}
+        base = len(self.port_keys)
+        self.num_hops = (max(len(h) for h in self._occ.values())
+                         + (1 if self._ih else 0))
+        self.num_ports = base + (1 if self._ih else 0)
+        self._pkts = np.zeros(max(base, 1), np.int64)
+        self._occt = np.zeros(max(base, 1), np.int64)
+        self._ecmp: Dict[str, List[int]] = {}
+        self._link_retries = 0
+        self._failovers = 0
+        self._degraded = 0
+        self._deg_parts: List[np.ndarray] = []
+        self._fo_parts: List[np.ndarray] = []
+
+    def columns(self, addrs: np.ndarray, lo: int) -> Dict[str, np.ndarray]:
+        """Hop columns for ordinals ``[lo, lo + len(addrs))``; updates the
+        running port/ECMP/counter totals and (when ``keep_flags``) the
+        per-access degraded/failover availability flags."""
+        from repro.core.fabric.fabric import LINE_BYTES
+        from repro.core.fabric.routing import flow_hash
+
+        fab, plan = self.fab, self.plan
+        host, node = self.host, self.node
+        addrs = np.asarray(addrs, np.int64)
+        m = int(addrs.size)
+        H = self.num_hops
+        P = len(self.port_keys)
+        hp = np.zeros((m, H), np.int32)
+        ho = np.zeros((m, H), np.int64)
+        ha = np.zeros((m, H), np.int64)
+        hon = np.zeros((m, H), bool)
+        hoc = np.zeros((m, H), np.int64)
+        deg = np.zeros(m, bool)
+        fo = np.zeros(m, bool)
+        for r in range(m):
+            j = lo + r
+            line_addr = int(addrs[r]) // LINE_BYTES
+            path, dg, fv = fab.select_faulted(host, node, line_addr, j)
+            if dg:
+                deg[r] = True
+                self._degraded += 1
+                if fv:
+                    fo[r] = True
+                    self._failovers += 1
+            elif fab.ecmp and self.K > 1:
+                # mirror traverse_qos: clean ECMP choices still count
+                k = flow_hash(host, node, line_addr) % self.K
+                counts = self._ecmp.setdefault(f"{host}->{node}",
+                                               [0] * self.K)
+                counts[k] += 1
+            for h, (pk, occ, after) in enumerate(self._occ[tuple(path)]):
+                rt = plan.link_retries(pk, j) if plan.has_link else 0
+                self._link_retries += rt
+                i = self._pidx[pk]
+                hp[r, h] = i
+                ho[r, h] = occ * (1 + rt)
+                ha[r, h] = after
+                hon[r, h] = True
+                hoc[r, h] = occ
+                self._pkts[i] += 1
+                self._occt[i] += occ * (1 + rt)
+            if self._ih:
+                # off-hops between row end and H-1 are no-ops, so the
+                # private hop sits at the fixed last column for every access
+                hp[r, H - 1] = P
+                ho[r, H - 1] = self._ih[0][1]
+                ha[r, H - 1] = self._ih[0][2]
+                hon[r, H - 1] = True
+                hoc[r, H - 1] = self._ih[0][1]
+        if self.keep_flags:
+            self._deg_parts.append(deg)
+            self._fo_parts.append(fo)
+        return {"hp": hp, "ho": ho, "ha": ha, "hon": hon, "hoc": hoc}
+
+    @property
+    def fstats(self) -> Dict[str, int]:
+        return {"link_retries": int(self._link_retries),
+                "failovers": int(self._failovers),
+                "degraded_accesses": int(self._degraded)}
+
+    def faulted(self) -> Dict:
+        """Host-side port/ECMP totals for metrics reconstruction."""
+        return {
+            "port_keys": self.port_keys,
+            "packets": self._pkts.copy(),
+            "bytes": self._pkts * self.size,  # goodput: retries move 0 bytes
+            "occupied": self._occt.copy(),    # retries DO occupy the wire
+            "ecmp": {k: list(v) for k, v in self._ecmp.items()},
+        }
+
+    def flags(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-access ``(degraded, failover)`` availability flags over
+        every ordinal range built so far (empty without ``keep_flags``)."""
+        if not self._deg_parts:
+            z = np.zeros(0, bool)
+            return z, z
+        return (np.concatenate(self._deg_parts),
+                np.concatenate(self._fo_parts))
+
+    # ------------------------------------------------- checkpoint support
+    def state(self) -> Dict:
+        """The accumulator totals as a flat-array pytree (checkpointable)."""
+        deg, fo = self.flags()
+        return {"pkts": self._pkts.copy(), "occt": self._occt.copy(),
+                "ecmp": {k: np.asarray(v, np.int64)
+                         for k, v in self._ecmp.items()},
+                "counters": np.asarray(
+                    [self._link_retries, self._failovers, self._degraded],
+                    np.int64),
+                "deg": deg, "fo": fo}
+
+    def load_state(self, st: Dict) -> None:
+        self._pkts = np.asarray(st["pkts"], np.int64).copy()
+        self._occt = np.asarray(st["occt"], np.int64).copy()
+        self._ecmp = {k: [int(x) for x in np.asarray(v)]
+                      for k, v in st["ecmp"].items()}
+        c = np.asarray(st["counters"], np.int64)
+        self._link_retries = int(c[0])
+        self._failovers = int(c[1])
+        self._degraded = int(c[2])
+        deg = np.asarray(st["deg"], bool)
+        fo = np.asarray(st["fo"], bool)
+        self._deg_parts = [deg.copy()] if deg.size else []
+        self._fo_parts = [fo.copy()] if fo.size else []
+
+
+def _fault_transport_cols(device, plan, addrs: np.ndarray, size: int):
+    """One-shot wrapper over :class:`_FaultColumnBuilder` for whole-trace
+    callers.  Returns ``(cols, faulted, fstats, num_ports, num_hops,
+    degraded_flags, failover_flags)``."""
     addrs = np.asarray(addrs, np.int64)
-    n = int(addrs.size)
-    K = len(fab.paths(host, node))
-    occ_cache: Dict[Tuple[str, ...], list] = {}
-    rows = []
-    link_retries = failovers = degraded = 0
-    ecmp_counts: Dict[str, List[int]] = {}
-    for j in range(n):
-        line_addr = int(addrs[j]) // LINE_BYTES
-        path, deg, fo = fab.select_faulted(host, node, line_addr, j)
-        if deg:
-            degraded += 1
-            if fo:
-                failovers += 1
-        elif fab.ecmp and K > 1:
-            # mirror traverse_qos: clean ECMP choices still count
-            k = flow_hash(host, node, line_addr) % K
-            counts = ecmp_counts.setdefault(f"{host}->{node}", [0] * K)
-            counts[k] += 1
-        key = tuple(path)
-        hops = occ_cache.get(key)
-        if hops is None:
-            hops = occ_cache[key] = fab.path_occupancy(path, size)
-        row = []
-        for pk, occ, after in hops:
-            r = plan.link_retries(pk, j) if plan.has_link else 0
-            link_retries += r
-            row.append((pk, occ * (1 + r), after, occ))
-        rows.append(row)
-
-    # a fabric-mounted CXL-DRAM kept on its private link (detach_link=False)
-    # pays one extra uncontended transport stage after the fabric — same
-    # append build_stack does for the clean route tensors
-    from repro.core.devices import CXLDRAMDevice
-    ih: list = []
-    if isinstance(device.inner, CXLDRAMDevice):
-        ih, _ = _link_hops(device.inner.link, size)
-
-    port_keys = sorted({pk for row in rows for pk, _, _, _ in row})
-    pidx = {k: i for i, k in enumerate(port_keys)}
-    P = len(port_keys)
-    H = max(len(row) for row in rows) + (1 if ih else 0)
-    hop_port = np.zeros((n, H), np.int32)
-    hop_occ = np.zeros((n, H), np.int64)
-    hop_after = np.zeros((n, H), np.int64)
-    hop_on = np.zeros((n, H), bool)
-    hop_clean = np.zeros((n, H), np.int64)
-    pkts = np.zeros(max(P, 1), np.int64)
-    occt = np.zeros(max(P, 1), np.int64)
-    for j, row in enumerate(rows):
-        for h, (pk, occ, after, clean) in enumerate(row):
-            i = pidx[pk]
-            hop_port[j, h] = i
-            hop_occ[j, h] = occ
-            hop_after[j, h] = after
-            hop_on[j, h] = True
-            hop_clean[j, h] = clean
-            pkts[i] += 1
-            occt[i] += occ
-        if ih:
-            # off-hops between row end and H-1 are no-ops, so the private
-            # hop can sit at the fixed last column for every access
-            hop_port[j, H - 1] = P
-            hop_occ[j, H - 1] = ih[0][1]
-            hop_after[j, H - 1] = ih[0][2]
-            hop_on[j, H - 1] = True
-            hop_clean[j, H - 1] = ih[0][1]
-    faulted = {
-        "port_keys": port_keys,
-        "packets": pkts,
-        "bytes": pkts * size,        # goodput: retries don't move bytes
-        "occupied": occt,            # retries DO occupy the wire
-        "ecmp": ecmp_counts,
-    }
-    fstats = {"link_retries": int(link_retries), "failovers": int(failovers),
-              "degraded_accesses": int(degraded)}
-    return ((hop_port, hop_occ, hop_after, hop_on, hop_clean), faulted,
-            fstats, P + (1 if ih else 0), H)
+    b = _FaultColumnBuilder(device, plan, size, int(addrs.size))
+    d = b.columns(addrs, 0)
+    deg, fo = b.flags()
+    return ((d["hp"], d["ho"], d["ha"], d["hon"], d["hoc"]), b.faulted(),
+            b.fstats, b.num_ports, b.num_hops, deg, fo)
 
 
 # ------------------------------------------------------------------ runner
@@ -538,8 +635,34 @@ def _dealias(tree):
     return jax.tree.map(fix, tree)
 
 
+def _restore_carry(template, flat: Dict[str, np.ndarray]):
+    """Rebuild a carry pytree from the flat ``{path: ndarray}`` form a
+    checkpoint snapshot stores, validated leaf by leaf against the
+    structure/shape/dtype of a freshly built ``template`` (so a snapshot
+    from a different config or chunk program fails loudly, never
+    silently).  Must run under ``enable_x64``."""
+    from repro.checkpoint.manager import _flatten
+
+    flat_t, treedef = _flatten(template)
+    leaves = []
+    for key, tmpl in flat_t.items():
+        arr = flat.get(key)
+        if arr is None:
+            raise KeyError(f"resume state missing carry leaf {key!r}")
+        tmpl = jnp.asarray(tmpl)
+        arr = np.asarray(arr)
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"resume carry leaf {key!r} has shape {arr.shape}, "
+                f"expected {tuple(tmpl.shape)} — snapshot from a "
+                "different replay configuration?")
+        leaves.append(jnp.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def _chunked_scan(cfg: StackConfig, p: Dict, chunks, n: int, chunk: int,
-                  start_tick, block=1, mspec=None, want_lat=True, size=64):
+                  start_tick, block=1, mspec=None, want_lat=True, size=64,
+                  carry=None, seen=0, parts=None, on_chunk=None):
     """Outer streaming loop: replay ``n`` accesses arriving as an iterator
     of ``(lo, hi, cols)`` numpy chunk dicts, threading the full carry
     pytree across chunk boundaries with buffer donation.  A short chunk is
@@ -548,11 +671,18 @@ def _chunked_scan(cfg: StackConfig, p: Dict, chunks, n: int, chunk: int,
     the jitted chunk program compiles at most twice (full chunk + masked
     chunk) and the result is tick-identical to the one-shot scan at any
     chunk size.  Must run under ``enable_x64``; ``chunks`` must cover
-    exactly ``[0, n)`` in order."""
-    carry = _init_carry(cfg, stack.init_state(cfg), _i64(start_tick),
-                        mspec, want_lat)
-    parts = []
-    seen = 0
+    exactly ``[seen, n)`` in order.
+
+    ``carry``/``seen``/``parts`` resume a previously checkpointed run from
+    access ``seen`` (default: a fresh carry from access 0).  ``on_chunk``,
+    if given, fires as ``on_chunk(seen, carry, parts)`` after each chunk
+    lands — the carry is live (not yet donated to the next chunk), so a
+    checkpoint hook can ``device_get`` it safely."""
+    if carry is None:
+        carry = _init_carry(cfg, stack.init_state(cfg), _i64(start_tick),
+                            mspec, want_lat)
+    parts = list(parts) if parts else []
+    seen = int(seen)
     for lo, hi, cols in chunks:
         m = hi - lo
         if not 0 < m <= chunk or lo != seen:
@@ -569,6 +699,8 @@ def _chunked_scan(cfg: StackConfig, p: Dict, chunks, n: int, chunk: int,
             iss, dn, fl = ys
             parts.append((np.asarray(iss[:m]), np.asarray(dn[:m]),
                           np.asarray(fl[:m])))
+        if on_chunk is not None:
+            on_chunk(seen, carry, parts)
     if seen != n:
         raise AssertionError(f"chunk iterator produced {seen} of {n} accesses")
     if want_lat:
@@ -594,6 +726,11 @@ class ReplayResult(TraceResult):
     # fault plan schedules poison; None otherwise.  Status only — a
     # poisoned read never fabricates latency.
     poison_flags: Optional[np.ndarray] = None
+    # tick-windowed availability series + degraded-mode summary
+    # (metrics.availability_series) when a transport fault plan is active
+    # and per-access outputs were kept.  Host-side observability only —
+    # deliberately outside the python-parity MetricsBundle schema.
+    availability: Optional[Dict] = None
 
     @property
     def hits(self) -> int:
@@ -683,14 +820,16 @@ class ReplayEngine:
         routes = None
         fcols = None
         faulted = None
+        deg_flags = fo_flags = None
         fstats = {"link_retries": 0, "failovers": 0, "degraded_accesses": 0}
         if (plan is not None and (plan.has_link or plan.has_down)
                 and isinstance(self.device, FabricAttachedDevice)):
             # transport faults: replace the static route tensors with
             # per-access hop columns (raises DeviceUnreachable exactly
             # where the interpreted driver would)
-            fcols, faulted, fstats, n_ports, n_hops = _fault_transport_cols(
-                self.device, plan, addrs, size)
+            (fcols, faulted, fstats, n_ports, n_hops, deg_flags,
+             fo_flags) = _fault_transport_cols(self.device, plan, addrs,
+                                               size)
             qp = tuple(
                 i for i, key in enumerate(faulted["port_keys"])
                 if self.device.fabric.ports[key].qos_enabled)
@@ -747,28 +886,38 @@ class ReplayEngine:
                 want_lat=want_lat, issues=issues, dones=dones, flags=flags,
                 final=final, aux=aux, plan=plan, fstats=fstats,
                 poisoned=poisoned, faulted=faulted, writes=writes,
-                addrs=addrs, routes=routes)
+                addrs=addrs, routes=routes, deg_flags=deg_flags,
+                fo_flags=fo_flags)
 
     def run_store(self, store, *, chunk_size: int, start_tick: int = 0,
-                  return_latencies: bool = True,
-                  chunk_iter=None) -> ReplayResult:
+                  return_latencies: bool = True, chunk_iter=None,
+                  resume_state: Optional[Dict] = None,
+                  on_chunk=None) -> ReplayResult:
         """Streaming replay from an on-disk columnar trace
         (:class:`~repro.data.trace_store.TraceStore`, or anything
         duck-typed like one: ``n``, ``size``, ``max_addr``, ``writes()``
-        and ``chunks(chunk_size)``).  Input residency is O(chunk) —
-        columns are memmap-sliced per chunk (optionally through a
-        prefetching ``chunk_iter``; see
+        and ``chunks(chunk_size, start=...)``).  Input residency is
+        O(chunk) — columns are memmap-sliced per chunk (optionally through
+        a prefetching ``chunk_iter``; see
         :func:`repro.core.replay.stream.replay_stream`), the jitted chunk
         program donates its carry, and nothing host-side ever holds the
         full addr column.  With ``return_latencies=True`` the per-access
         *outputs* are still materialized (inherently O(trace)); pass
         ``return_latencies=False`` for bounded-memory replay end to end.
 
-        Transport fault plans (link retries / down windows) refuse: their
-        hop columns are precomputed from the whole trace host-side, which
-        defeats streaming — use ``run_arrays(chunk_size=...)`` or
-        ``engine='python'`` for those.  NAND and poison fault plans
-        stream fine."""
+        Every active fault class streams, transport included: link-retry /
+        down-window plans get their per-access hop columns built chunk by
+        chunk (:class:`_FaultColumnBuilder` — static shapes derive from
+        the plan's down segments, never from the trace), tick-identical to
+        the one-shot fault lane.
+
+        ``on_chunk(seen, snapshot)`` fires after each chunk lands;
+        ``snapshot()`` captures the full resumable state (carry pytree,
+        per-access output parts, feed accumulators) as host numpy — the
+        checkpoint layer decides cadence and persistence.  Passing a
+        previously captured snapshot back as ``resume_state`` (with
+        ``chunk_iter`` starting at ``resume_state['seen']``, or ``None``
+        to let the store seek) continues the run bit-exactly."""
         n = int(store.n)
         size = int(store.size)
         chunk = int(chunk_size)
@@ -778,18 +927,26 @@ class ReplayEngine:
         mspec = self.metrics
         want_lat = bool(return_latencies)
         plan = self._active_plan()
+        builder = None
         if (plan is not None and (plan.has_link or plan.has_down)
                 and isinstance(self.device, FabricAttachedDevice)):
-            raise ReplayUnsupported(
-                "transport fault plans (link retries / down windows) need "
-                "per-access hop columns over the whole trace; load the "
-                "trace and use run_arrays(chunk_size=...) or "
-                "engine='python'")
+            builder = _FaultColumnBuilder(self.device, plan, size, n,
+                                          keep_flags=want_lat)
         cfg, params = build_stack(
             self.device, size=size, outstanding=self.outstanding,
             issue_overhead_ns=self.issue_overhead_ns,
             posted_writes=self.posted_writes, n_accesses=n,
             max_addr=int(store.max_addr), counters=mspec is not None)
+        if builder is not None:
+            qp = tuple(
+                i for i, key in enumerate(builder.port_keys)
+                if self.device.fabric.ports[key].qos_enabled)
+            cfg = dataclasses.replace(cfg, fault_hops=True,
+                                      num_hops=builder.num_hops,
+                                      num_ports=builder.num_ports,
+                                      num_routes=1, qos_ports=qp)
+            params = {k: v for k, v in params.items()
+                      if k not in ("hop_port", "hop_occ", "hop_after")}
         ecmp = cfg.num_routes > 1
         K = 0
         route_counts = None
@@ -800,7 +957,30 @@ class ReplayEngine:
         has_poison = plan is not None and plan.has_poison
         psum = 0
         poison_parts: List[np.ndarray] = []
-        src = chunk_iter if chunk_iter is not None else store.chunks(chunk)
+        seen0 = 0
+        parts0 = None
+        if resume_state is not None:
+            seen0 = int(resume_state["seen"])
+            if not 0 <= seen0 <= n:
+                raise ValueError(
+                    f"resume cursor {seen0} outside trace of {n} accesses")
+            parts0 = ([tuple(np.asarray(a) for a in t)
+                       for t in resume_state["parts"]] if want_lat else None)
+            psum = int(resume_state.get("psum", 0))
+            poison_parts = [np.asarray(x, bool)
+                            for x in resume_state.get("poison_parts", [])]
+            if route_counts is not None and \
+                    resume_state.get("route_counts") is not None:
+                route_counts[:] = np.asarray(resume_state["route_counts"])
+            if builder is not None and \
+                    resume_state.get("builder") is not None:
+                builder.load_state(resume_state["builder"])
+        if chunk_iter is not None:
+            src = chunk_iter
+        elif seen0:
+            src = store.chunks(chunk, start=seen0)
+        else:
+            src = store.chunks(chunk)   # duck-typed stores may lack start=
 
         def _feed():
             nonlocal psum
@@ -809,7 +989,9 @@ class ReplayEngine:
             for lo, hi, cols in src:
                 d = {"addr": np.asarray(cols["addr"], np.int64),
                      "wr": np.asarray(cols["wr"], bool)}
-                if ecmp:
+                if builder is not None:
+                    d.update(builder.columns(d["addr"], lo))
+                elif ecmp:
                     r = flow_choices(self.device.host,
                                      self.device.device_node,
                                      d["addr"] // LINE_BYTES, K)
@@ -823,26 +1005,64 @@ class ReplayEngine:
                         poison_parts.append(np.asarray(pz, bool))
                 yield lo, hi, d
 
+        def _snapshot(seen, carry, parts):
+            # everything the run needs to continue from `seen`, as host
+            # numpy — feed accumulators are exactly in sync because the
+            # feed builds columns lazily, one pulled chunk at a time
+            from repro.checkpoint.manager import _flatten
+            return {
+                "seen": int(seen),
+                "carry": {k: np.asarray(jax.device_get(v))
+                          for k, v in _flatten(carry)[0].items()},
+                "parts": [tuple(np.asarray(a) for a in t) for t in parts],
+                "psum": int(psum),
+                "route_counts": (None if route_counts is None
+                                 else route_counts.copy()),
+                "poison_parts": [np.asarray(x, bool) for x in poison_parts],
+                "builder": builder.state() if builder is not None else None,
+            }
+
+        cb = None
+        if on_chunk is not None:
+            def cb(seen, carry, parts):
+                on_chunk(seen, lambda: _snapshot(seen, carry, parts))
+
         with enable_x64():
             pj = jax.tree.map(jnp.asarray, params)
+            carry0 = None
+            if resume_state is not None:
+                template = _init_carry(cfg, stack.init_state(cfg),
+                                       _i64(start_tick), mspec, want_lat)
+                carry0 = _restore_carry(template, resume_state["carry"])
             issues, dones, flags, final, aux = _chunked_scan(
                 cfg, pj, _feed(), n, chunk, start_tick, self.block_size,
-                mspec, want_lat, size)
+                mspec, want_lat, size, carry=carry0, seen=seen0,
+                parts=parts0, on_chunk=cb)
             poisoned = None
             if has_poison:
                 poisoned = (np.concatenate(poison_parts) if want_lat
                             else None)
-            fstats = {"link_retries": 0, "failovers": 0,
-                      "degraded_accesses": 0, "poisoned_reads": psum}
+            deg_flags = fo_flags = None
+            if builder is not None:
+                fstats = dict(builder.fstats)
+                fstats["poisoned_reads"] = psum
+                faulted = builder.faulted()
+                if want_lat:
+                    deg_flags, fo_flags = builder.flags()
+            else:
+                fstats = {"link_retries": 0, "failovers": 0,
+                          "degraded_accesses": 0, "poisoned_reads": psum}
+                faulted = None
             return self._finish(
                 cfg, n=n, size=size, start_tick=start_tick,
                 want_lat=want_lat, issues=issues, dones=dones, flags=flags,
                 final=final, aux=aux, plan=plan, fstats=fstats,
-                poisoned=poisoned, faulted=None,
+                poisoned=poisoned, faulted=faulted,
                 writes=(store.writes() if (mspec is not None and want_lat)
                         else None),
                 addrs=None, routes=None, n_accesses=n,
-                route_counts=route_counts, poison_total=psum)
+                route_counts=route_counts, poison_total=psum,
+                deg_flags=deg_flags, fo_flags=fo_flags)
 
     # shared post-processing: health check, poison bit, fault counters,
     # metrics bundle, result assembly (identical for one-shot / chunked /
@@ -850,7 +1070,7 @@ class ReplayEngine:
     def _finish(self, cfg, *, n, size, start_tick, want_lat, issues, dones,
                 flags, final, aux, plan, fstats, poisoned, faulted, writes,
                 addrs, routes, n_accesses=None, route_counts=None,
-                poison_total=None):
+                poison_total=None, deg_flags=None, fo_flags=None):
         bad, gcs = stack.flash_health(final)
         bad, gcs = bool(bad), int(gcs)
         if want_lat:
@@ -899,6 +1119,13 @@ class ReplayEngine:
                 "FTL ran out of free blocks during GC (device overfilled) — "
                 "the interpreted path raises there too; shrink the trace or "
                 "use engine='python' for the exact error")
+        avail = None
+        if (want_lat and deg_flags is not None
+                and int(np.asarray(deg_flags).size) == n):
+            from repro.core.replay import metrics as _metrics
+            avail = _metrics.availability_series(
+                issues, dones, deg_flags, fo_flags,
+                spec=self.metrics, start_tick=start_tick)
         if want_lat:
             first = int(issues[0])
             last = max(int(dones.max(initial=0)), start_tick)
@@ -919,5 +1146,6 @@ class ReplayEngine:
             gc_runs=gcs,
             poison_flags=(((flags >> 6) & 1).astype(bool)
                           if want_lat and poisoned is not None else None),
+            availability=avail,
             metrics=mb,
         )

@@ -830,12 +830,18 @@ def bundle_multi_fused(spec: MetricsSpec, meta: Dict, mcfg, acc, med,
                        queued, qthr, flash_cnt, devs: np.ndarray,
                        routes: np.ndarray, lens: np.ndarray, size: int,
                        params: Dict,
-                       faults: Optional[Dict[str, int]] = None
-                       ) -> MetricsBundle:
+                       faults: Optional[Dict[str, int]] = None,
+                       faulted: Optional[Dict] = None) -> MetricsBundle:
     """Assemble the bundle after a multi-host fused run.  Per-port
     byte/packet/occupancy and per-host attribution are reconstructed from
     the hop tensors + route choices (numpy, exact); ``queued``/``qthr``
-    are the in-scan per-port queueing and QoS-throttle accumulators."""
+    are the in-scan per-port queueing and QoS-throttle accumulators.
+    ``faulted`` (from the multi-host transport-fault precompute) overrides
+    the clean reconstruction — under down-window reroutes and CRC retries
+    the static hop tensors no longer describe the paths taken, so the
+    precompute's accumulated per-port/per-host/ECMP totals (indexed over
+    the same global sorted port set as ``queued``/``qthr``) are used
+    verbatim."""
     hosts, nodes = meta["hosts"], meta["nodes"]
     fabric = meta["fabric"]
     H, D = len(hosts), len(nodes)
@@ -844,29 +850,39 @@ def bundle_multi_fused(spec: MetricsSpec, meta: Dict, mcfg, acc, med,
     names = MEDIA_COUNTERS[mcfg.stack.kind]
     media = [dict(zip(names, (int(x) for x in med[d]))) for d in range(D)]
 
-    port_keys = sorted(fabric.ports)
-    P = len(port_keys)
-    nbytes = np.zeros(P, np.int64)
-    npkts = np.zeros(P, np.int64)
-    nocc = np.zeros(P, np.int64)
-    by_host = np.zeros((P, H), np.int64)
-    hop_port, hop_occ = params["hop_port"], params["hop_occ"]
-    hop_on = params["hop_on"]
     lens = np.asarray(lens)
-    for i in range(H):
-        L = int(lens[i])
-        if not L:
-            continue
-        d = np.asarray(devs)[i, :L]
-        r = np.asarray(routes)[i, :L]
-        for h in range(mcfg.max_hops):
-            on = hop_on[i, d, r, h]
-            pi = hop_port[i, d, r, h][on]
-            occ = hop_occ[i, d, r, h][on]
-            np.add.at(npkts, pi, 1)
-            np.add.at(nbytes, pi, size)
-            np.add.at(nocc, pi, occ)
-            np.add.at(by_host[:, i], pi, size)
+    ecmp: Dict[str, List[int]] = {}
+    if faulted is not None:
+        port_keys = list(faulted["port_keys"])
+        P = len(port_keys)
+        npkts = np.asarray(faulted["packets"], np.int64)
+        nbytes = np.asarray(faulted["bytes"], np.int64)
+        nocc = np.asarray(faulted["occupied"], np.int64)
+        by_host = np.asarray(faulted["by_host"], np.int64)
+        ecmp = {k: list(v) for k, v in sorted(faulted["ecmp"].items())}
+    else:
+        port_keys = sorted(fabric.ports)
+        P = len(port_keys)
+        nbytes = np.zeros(P, np.int64)
+        npkts = np.zeros(P, np.int64)
+        nocc = np.zeros(P, np.int64)
+        by_host = np.zeros((P, H), np.int64)
+        hop_port, hop_occ = params["hop_port"], params["hop_occ"]
+        hop_on = params["hop_on"]
+        for i in range(H):
+            L = int(lens[i])
+            if not L:
+                continue
+            d = np.asarray(devs)[i, :L]
+            r = np.asarray(routes)[i, :L]
+            for h in range(mcfg.max_hops):
+                on = hop_on[i, d, r, h]
+                pi = hop_port[i, d, r, h][on]
+                occ = hop_occ[i, d, r, h][on]
+                np.add.at(npkts, pi, 1)
+                np.add.at(nbytes, pi, size)
+                np.add.at(nocc, pi, occ)
+                np.add.at(by_host[:, i], pi, size)
     queued = np.asarray(queued).reshape(-1)
     qthr = (np.asarray(qthr).reshape(-1) if qthr is not None
             else np.zeros(P, np.int64))
@@ -883,30 +899,116 @@ def bundle_multi_fused(spec: MetricsSpec, meta: Dict, mcfg, acc, med,
                               for i in range(H) if by_host[j, i]},
         }
 
-    ecmp: Dict[str, List[int]] = {}
-    route_count = meta["route_count"]
-    for i in range(H):
-        L = int(lens[i])
-        if not L:
-            continue
-        d_col = np.asarray(devs)[i, :L]
-        r_col = np.asarray(routes)[i, :L]
-        for d in np.unique(d_col):
-            K = int(route_count[i, d])
-            if K <= 1:
+    if faulted is None:
+        route_count = meta["route_count"]
+        for i in range(H):
+            L = int(lens[i])
+            if not L:
                 continue
-            m = d_col == d
-            if not m.any():
-                continue
-            counts = np.bincount(r_col[m], minlength=K)
-            key = f"{hosts[i]}->{nodes[d]}"
-            prev = ecmp.get(key)
-            if prev is None:
-                ecmp[key] = [int(c) for c in counts]
-            else:                      # same (host, node) reached twice
-                ecmp[key] = [int(a + b) for a, b in zip(prev, counts)]
+            d_col = np.asarray(devs)[i, :L]
+            r_col = np.asarray(routes)[i, :L]
+            for d in np.unique(d_col):
+                K = int(route_count[i, d])
+                if K <= 1:
+                    continue
+                m = d_col == d
+                if not m.any():
+                    continue
+                counts = np.bincount(r_col[m], minlength=K)
+                key = f"{hosts[i]}->{nodes[d]}"
+                prev = ecmp.get(key)
+                if prev is None:
+                    ecmp[key] = [int(c) for c in counts]
+                else:                  # same (host, node) reached twice
+                    ecmp[key] = [int(a + b) for a, b in zip(prev, counts)]
     return MetricsBundle(
         spec=spec, hosts=list(hosts), devices=list(nodes), hist=hist,
         dev_hist=dev_hist, windows=windows, media=media,
         flash=_flash_dicts(flash_cnt), ports=ports, ecmp=ecmp,
         faults=faults)
+
+
+# -------------------------------------------------- availability (faults)
+def availability_series(issues, dones, degraded, failover=None, *,
+                        spec: Optional[MetricsSpec] = None,
+                        start_tick: int = 0,
+                        window_ticks: Optional[int] = None,
+                        num_windows: Optional[int] = None) -> Dict:
+    """Tick-windowed availability series + degraded-mode summary from the
+    per-access ``degraded``/``failover`` flags the transport-fault
+    precompute emits: per issue-tick window the access count, degraded
+    count and reachable fraction; overall the degraded fraction, the
+    failover latency penalty (mean failover latency minus mean
+    clean-route latency, in ticks) and the total tick time spent in
+    windows with any degraded access.
+
+    Deliberately OUTSIDE the python-parity :class:`MetricsBundle` schema:
+    the interpreted driver keeps no per-access flag column, so this rides
+    the replay result (``ReplayResult.availability``) and the benchmark
+    artifacts, never the golden-pinned bundle."""
+    issues = np.asarray(issues, np.int64)
+    dones = np.asarray(dones, np.int64)
+    deg = np.asarray(degraded, bool)
+    fo = (np.asarray(failover, bool) if failover is not None
+          else np.zeros(deg.shape, bool))
+    n = int(issues.size)
+    T = int(window_ticks if window_ticks is not None
+            else (spec.window_ticks if spec is not None else 1_000_000))
+    W = int(num_windows if num_windows is not None
+            else (spec.num_windows if spec is not None else 64))
+    wdx = np.clip((issues - int(start_tick)) // T, 0, W - 1)
+    total = np.bincount(wdx, minlength=W).astype(np.int64)
+    degw = np.bincount(wdx[deg], minlength=W).astype(np.int64)
+    lat = dones - issues
+    nd = int(deg.sum())
+    nf = int(fo.sum())
+    clean = lat[~deg]
+    penalty = 0.0
+    if nf and clean.size:
+        penalty = float(lat[fo].mean() - clean.mean())
+    return {
+        "window_ticks": T,
+        "num_windows": W,
+        "accesses": n,
+        "windows": {
+            str(w): {"accesses": int(total[w]), "degraded": int(degw[w]),
+                     "reachable_fraction": float((total[w] - degw[w])
+                                                 / total[w])}
+            for w in range(W) if total[w]},
+        "degraded_accesses": nd,
+        "degraded_fraction": float(nd / n) if n else 0.0,
+        "failovers": nf,
+        "failover_latency_penalty_ticks": penalty,
+        "time_in_degraded_windows_ticks": int(T * int((degw > 0).sum())),
+    }
+
+
+def down_window_spans(plan, issues_by_host: Sequence[np.ndarray],
+                      hosts: Optional[Sequence[str]] = None) -> List[Dict]:
+    """Each down-link window of ``plan`` as a duration span on the tick
+    axis, one per host whose trace reaches into it: the window is declared
+    over per-host access ordinals, and trace order *is* ordinal order, so
+    the per-host issue column maps ordinal bounds to ticks exactly.
+    Windows past the trace end are dropped; ones cut by it are clamped.
+    ``obs.export.to_perfetto`` renders these as Perfetto "X" events."""
+    spans: List[Dict] = []
+    if plan is None or not plan.has_down:
+        return spans
+    for i, iss in enumerate(issues_by_host):
+        iss = np.asarray(iss, np.int64)
+        L = int(iss.size)
+        host = hosts[i] if hosts is not None else f"host{i}"
+        for u, v, a0, a1 in plan.config.down_links:
+            lo = max(int(a0), 0)
+            hi = min(int(a1), L)
+            if hi <= lo:
+                continue
+            spans.append({
+                "host": host,
+                "link": f"{u}<->{v}",
+                "first_ordinal": lo,
+                "last_ordinal_exclusive": hi,
+                "start_tick": int(iss[lo]),
+                "end_tick": int(iss[hi - 1]),
+            })
+    return spans

@@ -38,6 +38,19 @@ so interleave and segment modes cost nothing in the scan.  Anything else
 raises :class:`ReplayUnsupported` naming the widest lane that still covers
 the shape (the ``engine='python'`` fallback) — lanes refuse, they never
 silently diverge.
+
+Transport faults (link CRC-retry bursts, port/link down windows with ECMP
+exclusion and failover reroutes, poison status) mirror tick-identically on
+per-host mounts: every (host, ordinal) pair walks the same pure
+:meth:`Fabric.select_faulted` route selection the interpreted mount
+performs — keyed on that host's own access ordinal, exactly the per-mount
+``_fault_ord`` counter — and the hop columns ride per-access ``(H, L,
+max_hops)`` tensors with CRC retries pre-charged into the physical
+occupancy while the QoS virtual clock paces on the clean column.  Pool
+views with link/down faults refuse (interleaving scrambles the per-host
+fault ordinals); an unreachable down segment raises
+:class:`~repro.core.faults.DeviceUnreachable` at prepare, matching the
+first access the python driver would fail on.
 """
 
 from __future__ import annotations
@@ -56,7 +69,7 @@ from repro.core.devices import (CXLDRAMDevice, DRAMDevice, NullLink,
 from repro.core.engine import ns
 from repro.core.fabric.fabric import LINE_BYTES, Fabric, FabricAttachedDevice
 from repro.core.fabric.pool import HostPortView
-from repro.core.fabric.routing import flow_choices
+from repro.core.fabric.routing import flow_choices, flow_hash
 from repro.core.fabric.switch import ACTIVE_WINDOW_OCC
 from repro.core.replay import stack
 from repro.core.replay.spec import (DRAM, ReplayUnsupported, StackConfig,
@@ -86,6 +99,9 @@ class MultiCfg:
     # host indices in sorted-host-name order: the QoS weight sum must add
     # floats in exactly the order SwitchPort.qos_update's sorted() walk does
     host_order: Tuple[int, ...] = ()
+    # transport faults active: hop columns ride per-access (H, L, max_hops)
+    # tensors instead of the static per-(host, dev, route) hop tensors
+    fault_hops: bool = False
 
 
 def _port_index(fabric: Fabric) -> Dict[Tuple[str, str], int]:
@@ -162,10 +178,13 @@ def _extract_targets(targets: Sequence, size: int):
                                  for t in targets) if q is not None), None)
     if plan is not None and not plan.active:
         plan = None
-    if plan is not None and plan.has_transport_faults:
+    if (plan is not None and (plan.has_link or plan.has_down)
+            and mapper is not None):
         raise ReplayUnsupported(
-            "multi-host fused replay mirrors NAND faults only; link "
-            "retries, down windows and poison need engine='python'")
+            f"multi-host fused replay mirrors transport faults "
+            f"({', '.join(plan.class_names())}) on per-host fabric mounts "
+            "only — pool address interleaving scrambles the per-host fault "
+            "ordinals; use engine='python' for faulted pools")
 
     pidx = _port_index(fabric)
     pairs = ([(i, i) for i in range(len(hosts))] if mapper is None else
@@ -203,11 +222,20 @@ def _extract_targets(targets: Sequence, size: int):
              for key in ports_sorted], np.float64)
         host_order = tuple(int(j) for j in
                            sorted(range(H), key=lambda j: hosts[j]))
+    # transport faults ride the fabric: the interpreted mount passes an
+    # ordinal into traverse_qos only when the plan sits on the *fabric*
+    # (FabricAttachedDevice.service checks fabric.fault_plan), so the
+    # fused columns key on exactly that
+    fab_plan = getattr(fabric, "fault_plan", None)
+    if fab_plan is not None and not fab_plan.active:
+        fab_plan = None
+    transport_plan = (fab_plan if fab_plan is not None
+                      and (fab_plan.has_link or fab_plan.has_down) else None)
     meta = dict(fabric=fabric, mapper=mapper, hosts=hosts, nodes=nodes,
                 inners=inners, route_count=route_count, qos=qos,
                 host_order=host_order, num_ports=len(pidx),
                 max_hops=max_hops, max_routes=K, num_devs=NDEV,
-                fault_plan=plan)
+                fault_plan=plan, transport_plan=transport_plan)
     return params, meta
 
 
@@ -320,10 +348,15 @@ def _multi_init(cfg: MultiCfg, start_tick, mspec=None,
 def _make_multi_step(cfg: MultiCfg, p: Dict, lens, lookup, mspec=None,
                      want_lat: bool = True, size: int = 64):
     """The per-step body of the multi-host scan, parameterized by
-    ``lookup(i, ix) -> (addr, write, dev, route)`` so the same compiled
-    logic can read either the full padded ``(H, L)`` trace arrays (the
-    one-shot path) or a per-host ``(H, S)`` sliding window re-based on the
-    carry's trace cursors (the chunked path)."""
+    ``lookup(i, ix) -> (addr, write, dev, route, fault_cols)`` so the same
+    compiled logic can read either the full padded ``(H, L)`` trace arrays
+    (the one-shot path) or a per-host ``(H, S)`` sliding window re-based on
+    the carry's trace cursors (the chunked path).  ``fault_cols`` is
+    ``None`` on the clean path; under an active transport plan it is a
+    dict of five per-access hop columns (port / charged occupancy / after /
+    on-mask / clean occupancy) — the QoS mirror paces on the *clean*
+    occupancy while the physical busy-until charges retries, exactly like
+    ``SwitchPort.qos_update`` + ``transmit(retries=...)``."""
     H = cfg.num_hosts
 
     def step(carry, _):
@@ -335,27 +368,36 @@ def _make_multi_step(cfg: MultiCfg, p: Dict, lens, lookup, mspec=None,
         row = slots[i]
         k = jnp.argmin(row)
         issue = jnp.maximum(now[i], row[k])
-        a, wr, dev, r = lookup(i, idx[i])
+        a, wr, dev, r, fc = lookup(i, idx[i])
         posted = wr if cfg.posted_writes else jnp.zeros((), bool)
         t = issue
         floor = _i64(0)
         qacc = aux.get("q")
         qthr = aux.get("qthr")
         for h in range(cfg.max_hops):
-            on = p["hop_on"][i, dev, r, h]
-            pi = p["hop_port"][i, dev, r, h]
-            occ_h = p["hop_occ"][i, dev, r, h]
+            if fc is not None:
+                on = fc["on"][h]
+                pi = fc["p"][h]
+                occ_h = fc["o"][h]      # retries charged: occ * (1 + r)
+                occ_c = fc["oc"][h]     # clean: the QoS entitlement
+                after_h = fc["a"][h]
+            else:
+                on = p["hop_on"][i, dev, r, h]
+                pi = p["hop_port"][i, dev, r, h]
+                occ_h = p["hop_occ"][i, dev, r, h]
+                occ_c = occ_h
+                after_h = p["hop_after"][i, dev, r, h]
             if cfg.qos:
                 # mirror of SwitchPort.qos_update at arrival tick t
                 qon = on & p["qos_on"][pi]
                 prev = vft[pi, i]
-                win = occ_h * ACTIVE_WINDOW_OCC
+                win = occ_c * ACTIVE_WINDOW_OCC
                 w_active = jnp.float64(0.0)
                 for j in cfg.host_order:   # sorted-name order, like dict walk
                     member = (j == i) | (last_arr[pi, j] + win > t)
                     w_active = w_active + jnp.where(member, p["qos_w"][pi, j],
                                                     0.0)
-                pace = (occ_h.astype(jnp.float64)
+                pace = (occ_c.astype(jnp.float64)
                         * (w_active / p["qos_w"][pi, i])).astype(jnp.int64)
                 floor = jnp.maximum(
                     floor, jnp.where(qon & (prev > t), prev + pace, 0))
@@ -375,7 +417,7 @@ def _make_multi_step(cfg: MultiCfg, p: Dict, lens, lookup, mspec=None,
             done_h = start + occ_h
             port_busy = port_busy.at[pi].set(
                 jnp.where(on, done_h, port_busy[pi]))
-            t = jnp.where(on, done_h + p["hop_after"][i, dev, r, h], t)
+            t = jnp.where(on, done_h + after_h, t)
         t = t + p["rt_extra"]
         if cfg.stack.kind == DRAM:
             # DRAM-class media keeps per-device timing arrays (heterogeneous
@@ -441,7 +483,10 @@ def _run_multi(cfg: MultiCfg, p: Dict, devs, addrs, writes, lens, start_tick,
 
     def lookup(i, ix):
         r = p["route"][i, ix] if cfg.max_routes > 1 else 0
-        return addrs[i, ix], writes[i, ix], devs[i, ix], r
+        fc = ({"p": p["fhp"][i, ix], "o": p["fho"][i, ix],
+               "a": p["fha"][i, ix], "on": p["fhon"][i, ix],
+               "oc": p["fhoc"][i, ix]} if cfg.fault_hops else None)
+        return addrs[i, ix], writes[i, ix], devs[i, ix], r, fc
 
     step = _make_multi_step(cfg, p, lens, lookup, mspec, want_lat, size)
     # Blocked replay: `block` steps per sequential scan iteration (unroll).
@@ -475,7 +520,10 @@ def _run_multi_chunk(cfg: MultiCfg, carry, p: Dict, wins: Dict, lens, base,
     def lookup(i, ix):
         j = jnp.clip(ix - base[i], 0, S - 1)
         r = wins["route"][i, j] if cfg.max_routes > 1 else 0
-        return wins["addr"][i, j], wins["wr"][i, j], wins["dev"][i, j], r
+        fc = ({"p": wins["fhp"][i, j], "o": wins["fho"][i, j],
+               "a": wins["fha"][i, j], "on": wins["fhon"][i, j],
+               "oc": wins["fhoc"][i, j]} if cfg.fault_hops else None)
+        return wins["addr"][i, j], wins["wr"][i, j], wins["dev"][i, j], r, fc
 
     step = _make_multi_step(cfg, p, lens, lookup, mspec, want_lat, size)
     return jax.lax.scan(step, carry, None, length=S, unroll=block)
@@ -494,6 +542,104 @@ def _map_addrs(mapper, host_idx: int, addrs: np.ndarray):
     if (dev64 >= mapper.num_devices).any():
         raise ReplayUnsupported("address beyond pool capacity")
     return dev64.astype(np.int32), local
+
+
+# -------------------------------------------------- transport fault columns
+def _fault_cols_multi(meta: Dict, plan, addrs: np.ndarray,
+                      lens: np.ndarray, size: int):
+    """Per-host per-access transport hop columns under the installed
+    link-retry / down-window plan — the multi-host twin of the single-host
+    :class:`~repro.core.replay.engine._FaultColumnBuilder`, with the host
+    axis and the *global* sorted-port index (so the shared ``port_busy`` /
+    QoS ``vft``/``last_arr`` carries and the ``qos_on``/``qos_w`` params
+    keep their indexing untouched).
+
+    Every (host, ordinal) walks the same pure route selection the
+    interpreted mount performs (:meth:`Fabric.select_faulted`, keyed on
+    that host's *own* access ordinal — the per-mount ``_fault_ord``
+    counter) and the same per-hop occupancy rule, pre-charging CRC-retry
+    serializations into the occupancy column; the clean occupancy rides a
+    separate column for the QoS virtual clock.  Raises
+    :class:`~repro.core.faults.DeviceUnreachable` at precompute for the
+    same segments the python driver would fail on.
+
+    Returns ``(cols, num_hops, faulted, fstats, deg, fo)``: the five
+    ``(H, L, num_hops)`` hop columns, the widest (failover-inclusive) hop
+    count, the accumulated per-port/per-host/ECMP totals for
+    :func:`~repro.core.replay.metrics.bundle_multi_fused`'s ``faulted=``
+    override, the shared fault-counter totals, and per-host ``(H, L)``
+    degraded/failover availability flags."""
+    fab = meta["fabric"]
+    hosts, nodes = meta["hosts"], meta["nodes"]
+    pidx = _port_index(fab)
+    P = len(pidx)
+    H, L = addrs.shape
+    lens = np.asarray(lens, np.int64)
+    # candidate path set per host: one entry per distinct down segment —
+    # the route chosen for an ordinal depends only on its segment's down
+    # set and the flow hash, never on the ordinal itself
+    occ_of: List[Dict[Tuple[str, ...], list]] = [dict() for _ in range(H)]
+    for i in range(H):
+        n_i = int(lens[i])
+        if not n_i:
+            continue
+        segs = (plan.down_segments(n_i) if plan.has_down
+                else [(0, n_i, frozenset())])
+        for _, _, down in segs:
+            ps = fab.routing.paths(hosts[i], nodes[i], down=down)
+            for q in (ps if fab.ecmp else [ps[0]]):
+                key = tuple(q)
+                if key not in occ_of[i]:
+                    occ_of[i][key] = fab.path_occupancy(q, size)
+    FH = max((len(hops) for d in occ_of for hops in d.values()), default=1)
+    fhp = np.zeros((H, L, FH), np.int32)
+    fho = np.zeros((H, L, FH), np.int64)
+    fha = np.zeros((H, L, FH), np.int64)
+    fhon = np.zeros((H, L, FH), bool)
+    fhoc = np.zeros((H, L, FH), np.int64)
+    deg = np.zeros((H, L), bool)
+    fo = np.zeros((H, L), bool)
+    pkts = np.zeros(P, np.int64)
+    occt = np.zeros(P, np.int64)
+    by_host = np.zeros((P, H), np.int64)
+    ecmp: Dict[str, List[int]] = {}
+    link_retries = failovers = degraded = 0
+    for i in range(H):
+        host, node = hosts[i], nodes[i]
+        K = len(fab.paths(host, node))
+        for j in range(int(lens[i])):
+            line_addr = int(addrs[i, j]) // LINE_BYTES
+            path, dg, fv = fab.select_faulted(host, node, line_addr, j)
+            if dg:
+                deg[i, j] = True
+                degraded += 1
+                if fv:
+                    fo[i, j] = True
+                    failovers += 1
+            elif fab.ecmp and K > 1:
+                # mirror traverse_qos: clean ECMP choices still count
+                k = flow_hash(host, node, line_addr) % K
+                ecmp.setdefault(f"{host}->{node}", [0] * K)[k] += 1
+            for h, (pk, occ, after) in enumerate(occ_of[i][tuple(path)]):
+                rt = plan.link_retries(pk, j) if plan.has_link else 0
+                link_retries += rt
+                pi = pidx[pk]
+                fhp[i, j, h] = pi
+                fho[i, j, h] = occ * (1 + rt)
+                fha[i, j, h] = after
+                fhon[i, j, h] = True
+                fhoc[i, j, h] = occ
+                pkts[pi] += 1
+                occt[pi] += occ * (1 + rt)
+                by_host[pi, i] += size    # goodput: retries move 0 bytes
+    faulted = {"port_keys": sorted(fab.ports), "packets": pkts,
+               "bytes": pkts * size, "occupied": occt, "by_host": by_host,
+               "ecmp": ecmp}
+    fstats = {"link_retries": int(link_retries),
+              "failovers": int(failovers),
+              "degraded_accesses": int(degraded)}
+    cols = {"fhp": fhp, "fho": fho, "fha": fha, "fhon": fhon, "fhoc": fhoc}
+    return cols, FH, faulted, fstats, deg, fo
 
 
 class MultiHostReplay:
@@ -540,12 +686,13 @@ class MultiHostReplay:
         routes = np.zeros((H, L), np.int32)
         lens = np.asarray([a.size for a, _, _ in parsed], np.int64)
         mapper, route_count = meta["mapper"], meta["route_count"]
+        tplan = meta["transport_plan"]
         for i, (a, w, _) in enumerate(parsed):
             dev, local = _map_addrs(mapper, i, a)
             addrs[i, :a.size] = local
             writes[i, :a.size] = w
             devs[i, :a.size] = dev
-            if meta["max_routes"] > 1:
+            if meta["max_routes"] > 1 and tplan is None:
                 # same hash, same flow key (device-local line address) as
                 # HostPortView / FabricAttachedDevice evaluate per access
                 for d in np.unique(dev):
@@ -567,14 +714,50 @@ class MultiHostReplay:
         params["flash_of"] = flash_of
         params["issue_ov"] = ns(self.issue_overhead_ns)
         params["route"] = routes
+        max_hops, max_routes = meta["max_hops"], meta["max_routes"]
+        if tplan is not None:
+            # link-retry / down-window columns: per-access hop tensors
+            # replace the static per-(host, dev, route) ones; the ECMP
+            # choice (over survivors) is baked into the columns, so the
+            # route axis collapses
+            fcols, fh, faulted, fstats, degf, fof = _fault_cols_multi(
+                meta, tplan, addrs, lens, size)
+            params.update(fcols)
+            meta["faulted"] = faulted
+            meta["fault_stats"] = fstats
+            meta["deg_flags"] = degf
+            meta["fo_flags"] = fof
+            max_hops, max_routes = fh, 1
+        # poison status parity: the driver tallies each target plan's
+        # deterministic (host, ordinal) poison flags on the service path
+        poisoned = 0
+        for i, tgt in enumerate(self.targets):
+            tp = getattr(tgt, "fault_plan", None)
+            if tp is not None and tp.has_poison:
+                n_i = int(lens[i])
+                poisoned += int(tp.poisoned_np(
+                    i, np.arange(n_i, dtype=np.int64),
+                    writes[i, :n_i]).sum())
+        meta["poisoned_reads"] = poisoned
         cfg = MultiCfg(num_hosts=H, outstanding=self.outstanding,
                        posted_writes=self.posted_writes,
                        num_ports=meta["num_ports"],
-                       max_hops=meta["max_hops"], num_devs=meta["num_devs"],
+                       max_hops=max_hops, num_devs=meta["num_devs"],
                        stack=stack_cfg, n_flash=n_flash,
-                       max_routes=meta["max_routes"], qos=meta["qos"],
-                       host_order=meta["host_order"])
+                       max_routes=max_routes, qos=meta["qos"],
+                       host_order=meta["host_order"],
+                       fault_hops=tplan is not None)
         return cfg, params, devs, addrs, writes, lens, size
+
+    @property
+    def fault_flags(self):
+        """Per-host ``(degraded, failover)`` flag arrays (each ``(H, L)``
+        bool) from the last :meth:`prepare` under an active transport
+        plan, else ``None`` — the availability-sweep lane folds these into
+        reachable-fraction / time-in-degraded curves."""
+        if self._meta is None or "deg_flags" not in self._meta:
+            return None
+        return self._meta["deg_flags"], self._meta["fo_flags"]
 
     @staticmethod
     def aggregate(who, issues, dones, lens, size: int,
@@ -655,8 +838,11 @@ class MultiHostReplay:
         if chunk < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk!r}")
         routes = params["route"]
+        fkeys = ("fhp", "fho", "fha", "fhon", "fhoc")
+        fcols = ({k: params[k] for k in fkeys} if cfg.fault_hops else None)
+        skip = {"route", *fkeys}
         pj = jax.tree.map(jnp.asarray,
-                          {k: v for k, v in params.items() if k != "route"})
+                          {k: v for k, v in params.items() if k not in skip})
         lens_np = np.asarray(lens, np.int64)
         lj = jnp.asarray(lens_np)
         H = cfg.num_hosts
@@ -670,6 +856,8 @@ class MultiHostReplay:
             ww = np.zeros((H, chunk), bool)
             wd = np.zeros((H, chunk), np.int32)
             wr_ = np.zeros((H, chunk), np.int32)
+            wf = ({k: np.zeros((H, chunk) + v.shape[2:], v.dtype)
+                   for k, v in fcols.items()} if fcols is not None else None)
             for i in range(H):
                 b = int(base[i])
                 e = min(b + chunk, int(lens_np[i]))
@@ -679,10 +867,15 @@ class MultiHostReplay:
                     wd[i, :e - b] = devs[i, b:e]
                     if cfg.max_routes > 1:
                         wr_[i, :e - b] = routes[i, b:e]
+                    if wf is not None:
+                        for k, v in fcols.items():
+                            wf[k][i, :e - b] = v[i, b:e]
             wins = {"addr": jnp.asarray(wa), "wr": jnp.asarray(ww),
                     "dev": jnp.asarray(wd)}
             if cfg.max_routes > 1:
                 wins["route"] = jnp.asarray(wr_)
+            if wf is not None:
+                wins.update({k: jnp.asarray(v) for k, v in wf.items()})
             carry, ys = _run_multi_chunk(
                 cfg, _dealias(carry), pj, wins, lj, jnp.asarray(base),
                 self.block_size, mspec, want_lat, size)
@@ -736,20 +929,22 @@ class MultiHostReplay:
             from repro.core.replay import metrics as _metrics
             fcnt = (np.asarray(aux["flash"]) if "flash" in aux else None)
             fdict = None
-            if self._meta.get("fault_plan") is not None:
+            if (self._meta.get("fault_plan") is not None
+                    or self._meta.get("poisoned_reads")):
                 rr, rb = (np.asarray(aux["faults"]) if "faults" in aux
                           else (0, 0))
-                # multi-host fused admits NAND faults only (transport
-                # faults refuse at prepare), so the other counters are 0
-                fdict = {"link_retries": 0, "failovers": 0,
-                         "degraded_accesses": 0,
+                fs = self._meta.get("fault_stats") or {}
+                fdict = {"link_retries": fs.get("link_retries", 0),
+                         "failovers": fs.get("failovers", 0),
+                         "degraded_accesses": fs.get("degraded_accesses", 0),
                          "nand_read_retries": int(rr),
                          "retired_blocks": int(rb),
-                         "poisoned_reads": 0}
+                         "poisoned_reads":
+                             int(self._meta.get("poisoned_reads", 0))}
             bundle = _metrics.bundle_multi_fused(
                 mspec, self._meta, cfg, aux["acc"], aux["med"], aux["q"],
                 aux.get("qthr"), fcnt, devs, params["route"], lens, size,
-                params, faults=fdict)
+                params, faults=fdict, faulted=self._meta.get("faulted"))
         self.last_metrics = bundle
         if want_lat:
             who, issues, dones = (np.asarray(who), np.asarray(issues),

@@ -97,9 +97,10 @@ def run_pallas(device, addrs: np.ndarray, writes: np.ndarray, *,
         plan = getattr(getattr(device, "fabric", None), "fault_plan", None)
     if plan is not None and plan.active:
         raise ReplayUnsupported(
-            "fault injection perturbs per-access service times; the "
-            "pallas kernel models the fault-free cached CXL-SSD — use "
-            "engine='scan' (or engine='python')")
+            f"active fault plan ({', '.join(plan.class_names())}): the "
+            "pallas kernel models the fault-free cached CXL-SSD; the "
+            "fused scan lane replays every fault class tick-identically "
+            "— use engine='scan' (or engine='python')")
     kw = pallas_params(device, issue_overhead_ns)
     # int32-nanosecond budget: arrival/busy cursors grow by at most
     # (miss_occ + issue) per access, plus one service term on top.

@@ -14,6 +14,11 @@ against the same (or per-lane) traces:
 * :func:`host_count_sweep` — batch over **host count** on the fused
   multi-host replay: one compiled program, one vmap lane per host count,
   inactive hosts masked out of the issue race by zero-length traces.
+* :func:`fault_seed_sweep` — batch over **fault-plan seed** on the fused
+  multi-host replay under an active transport fault plan: the per-seed
+  precomputed hop columns (retry-stretched occupancies, failover routes)
+  are the ONLY batched leaves, so one compiled program yields the full
+  tail-latency-under-failure / availability distribution across seeds.
 
 On CPU these amortize compile time and per-step dispatch; on TPU/GPU the
 lanes vectorize across the batch dimension, which is where the
@@ -32,6 +37,7 @@ from jax.experimental import enable_x64
 
 from repro.core.replay import stack
 from repro.core.replay.engine import _scan_stack
+from repro.core.replay.metrics import availability_series
 from repro.core.replay.multihost import MultiHostReplay, _run_multi
 from repro.core.replay.spec import SSD_CACHE, ReplayUnsupported, build_stack
 from repro.core.replay.stack import MAX_ACCESSES, PAGE_FIELD, _i64
@@ -60,6 +66,21 @@ def _run_cache_lanes(cfg, pj: Dict, trace_args, batched: frozenset,
         return _scan_stack(cfg, p1, st, a1, w1, _i64(0))
 
     return jax.vmap(one, in_axes=(axes, trace_ax, trace_ax))(pj, a, w)
+
+
+#: the per-seed transport-fault hop columns — the only params leaves that
+#: change with the FaultPlan seed (down segments, and hence every static
+#: shape, come from the FaultConfig alone)
+_FAULT_KEYS = ("fhp", "fho", "fha", "fhon", "fhoc")
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def _run_fault_lanes(cfg, pj: Dict, devs, addrs, writes, lens,
+                     batched: frozenset):
+    axes = {k: (0 if k in batched else None) for k in pj}
+    return jax.vmap(
+        lambda p1: _run_multi(cfg, p1, devs, addrs, writes, lens, _i64(0)),
+        in_axes=(axes,))(pj)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -192,3 +213,105 @@ def host_count_sweep(targets: Sequence, traces: Sequence,
                 "blocks during GC; use engine='python'")
     return [eng.aggregate(who[k], issues[k], dones[k], lane_lens[k], size)
             for k in range(len(host_counts))]
+
+
+def fault_seed_sweep(make_targets, traces: Sequence, seeds: Sequence[int],
+                     *, outstanding: int = 32,
+                     issue_overhead_ns: float = 0.5,
+                     posted_writes: bool = True,
+                     window_ticks: Optional[int] = None,
+                     num_windows: int = 32) -> List[Dict]:
+    """Replay one multi-host scenario under B transport-fault seeds in ONE
+    compiled vmapped call — the fleet-scale availability sweep.
+
+    ``make_targets(seed)`` builds fresh fabric-mounted targets with a
+    ``FaultPlan(cfg, seed=seed)`` installed; every seed must share the
+    FaultConfig (down windows and the derived hop/port shapes are config
+    properties — a seed that changed them could not share the compiled
+    program, and the sweep refuses).  Only the precomputed per-access hop
+    columns (retry-stretched occupancies, failover paths) differ across
+    lanes, so they are the sole batched leaves.
+
+    Lane k is tick-identical to
+    ``MultiHostReplay(make_targets(seeds[k])).run(traces)`` (and hence to
+    the interpreted ``MultiHostDriver``).  Each returned dict carries the
+    per-seed ``result`` (:class:`MultiHostResult`), pooled
+    ``latency_ticks`` (valid accesses, global issue order),
+    ``availability`` (:func:`~repro.core.replay.metrics.availability_series`
+    over the pooled per-access degraded/failover flags) and the
+    ``fault_stats`` counter dict.  With ``window_ticks=None`` the window
+    width is derived from the batch (max completion tick over all lanes /
+    ``num_windows``) so every lane's availability curve shares one axis.
+    """
+    cfg0 = base = devs = addrs = writes = lens = None
+    size = 0
+    stacked: Dict[str, List] = {k: [] for k in _FAULT_KEYS}
+    flags, stats = [], []
+    for s in seeds:
+        eng = MultiHostReplay(make_targets(s), outstanding=outstanding,
+                              issue_overhead_ns=issue_overhead_ns,
+                              posted_writes=posted_writes)
+        cfg, params, dv, ad, wr, ln, sz = eng.prepare(traces)
+        if not cfg.fault_hops:
+            raise ReplayUnsupported(
+                "fault_seed_sweep needs an active transport fault plan "
+                "(link-retry and/or down-window classes) installed on the "
+                "shared fabric; for fault-free host scaling use "
+                "host_count_sweep")
+        if cfg0 is None:
+            cfg0, base, devs, addrs, writes, lens, size = \
+                cfg, params, dv, ad, wr, ln, sz
+        elif cfg != cfg0:
+            raise ReplayUnsupported(
+                "fault seeds changed the compiled shape — down windows "
+                "(and the hop/port geometry they induce) must come from "
+                "the shared FaultConfig, not the per-lane seed")
+        for k in _FAULT_KEYS:
+            stacked[k].append(params[k])
+        flags.append(eng.fault_flags)
+        stats.append(dict(eng._meta["fault_stats"]))
+    pj = dict(base)
+    for k in _FAULT_KEYS:
+        pj[k] = np.stack(stacked[k])
+    with enable_x64():
+        pj = jax.tree.map(jnp.asarray, pj)
+        who, issues, dones, bad, _, _ = _run_fault_lanes(
+            cfg0, pj, jnp.asarray(devs), jnp.asarray(addrs),
+            jnp.asarray(writes), jnp.asarray(lens),
+            frozenset(_FAULT_KEYS))
+        who = np.asarray(who)
+        issues = np.asarray(issues)
+        dones = np.asarray(dones)
+        bad = np.asarray(bad)
+    lens = np.asarray(lens)
+    total = int(lens.sum())
+    valid = np.arange(who.shape[1]) < total
+    if window_ticks is None:
+        max_end = int(dones[:, valid].max(initial=0)) if total else 1
+        window_ticks = max(1, -(-max_end // num_windows))
+    out: List[Dict] = []
+    for k, s in enumerate(seeds):
+        if total and bool(bad[k, total - 1]):
+            raise ReplayUnsupported(
+                f"fault seed lane {s}: FTL ran out of free blocks during "
+                "GC (device overfilled); use engine='python'")
+        res = MultiHostReplay.aggregate(who[k], issues[k], dones[k],
+                                        lens, size)
+        deg, fo = flags[k]
+        iss_h, dn_h, deg_h, fo_h = [], [], [], []
+        for i in range(lens.size):
+            m = valid & (who[k] == i)
+            iss_h.append(issues[k][m])
+            dn_h.append(dones[k][m])
+            deg_h.append(deg[i, :lens[i]])
+            fo_h.append(fo[i, :lens[i]])
+        iss = np.concatenate(iss_h)
+        dn = np.concatenate(dn_h)
+        av = availability_series(iss, dn, np.concatenate(deg_h),
+                                 np.concatenate(fo_h),
+                                 window_ticks=window_ticks,
+                                 num_windows=num_windows)
+        out.append({"seed": int(s), "result": res,
+                    "latency_ticks": dn - iss,
+                    "availability": av, "fault_stats": stats[k]})
+    return out

@@ -27,6 +27,7 @@ size its stack without scanning the address column first.
 
 from __future__ import annotations
 
+import hashlib
 import json
 from pathlib import Path
 from typing import Dict, Iterator, Optional, Tuple
@@ -36,6 +37,14 @@ import numpy as np
 HEADER = "header.json"
 FORMAT = 1
 LINE_BYTES = 64
+
+
+class TraceStoreCorrupt(ValueError):
+    """A column file failed integrity validation — truncated, bit-flipped
+    (checksum mismatch), or otherwise unreadable.  Typed so streaming
+    consumers (:class:`~repro.data.pipeline.Prefetcher` forwards producer
+    exceptions) can distinguish data corruption from configuration
+    errors."""
 
 #: column name -> required dtype (anything else in the header is rejected)
 _COLUMN_DTYPES = {
@@ -71,6 +80,9 @@ class TraceStore:
         self._size = int(hdr["size"])
         self._max_addr = int(hdr["max_addr"])
         self._columns: Dict[str, str] = dict(hdr["columns"])
+        # optional (absent in stores written before integrity landed):
+        # sha256 over each column's full .npy file bytes
+        self._checksums: Dict[str, str] = dict(hdr.get("checksums", {}))
         for name in _REQUIRED:
             if name not in self._columns:
                 raise ValueError(f"TraceStore missing required column "
@@ -141,15 +153,56 @@ class TraceStore:
             "wr": np.array(self.column("op")[lo:hi], np.uint8) != 0,
         }
 
-    def chunks(self, chunk_size: int) -> Iterator[Tuple[int, int, Dict]]:
+    def chunks(self, chunk_size: int,
+               start: int = 0) -> Iterator[Tuple[int, int, Dict]]:
         """Yield ``(lo, hi, columns)`` windows of at most ``chunk_size``
-        rows, in order.  Each window is an independent copy, safe to hand
-        to a prefetch thread."""
+        rows, in order, beginning at row ``start`` (a chunk-aligned resume
+        cursor: a checkpointed run re-enters the stream exactly where the
+        snapshot left off).  Each window is an independent copy, safe to
+        hand to a prefetch thread."""
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
-        for lo in range(0, self._n, chunk_size):
+        if not 0 <= start <= self._n:
+            raise IndexError(f"start {start} out of range for n={self._n}")
+        for lo in range(int(start), self._n, chunk_size):
             hi = min(lo + chunk_size, self._n)
             yield lo, hi, self.slice(lo, hi)
+
+    # ----------------------------------------------------------- integrity
+    def validate(self) -> None:
+        """Verify every column file against the header: readable as an
+        ``.npy``, row count matching ``n``, and (when the header carries
+        per-column checksums) byte-exact SHA-256.  Raises
+        :class:`TraceStoreCorrupt` naming the first bad column — truncated
+        files fail the load/length checks even on stores written before
+        checksums landed."""
+        for name in sorted(self._columns):
+            fpath = self.path / f"{name}.npy"
+            try:
+                raw = fpath.read_bytes()
+            except OSError as exc:
+                raise TraceStoreCorrupt(
+                    f"column {name!r} unreadable: {exc}") from exc
+            digest = self._checksums.get(name)
+            if digest is not None:
+                got = hashlib.sha256(raw).hexdigest()
+                if got != digest:
+                    raise TraceStoreCorrupt(
+                        f"column {name!r} checksum mismatch "
+                        f"(bit-flip or partial write): header pins "
+                        f"{digest[:12]}…, file hashes {got[:12]}…")
+            try:
+                import io
+                arr = np.load(io.BytesIO(raw))
+            except Exception as exc:
+                raise TraceStoreCorrupt(
+                    f"column {name!r} is not a readable .npy "
+                    f"(truncated?): {exc}") from exc
+            if arr.shape != (self._n,):
+                raise TraceStoreCorrupt(
+                    f"column {name!r} has {arr.shape[0] if arr.ndim else 0} "
+                    f"rows, header pins n={self._n} (truncated or "
+                    f"mismatched header)")
 
     # ------------------------------------------------------------- writing
     @classmethod
@@ -185,8 +238,11 @@ class TraceStore:
             if arr.shape != addrs.shape:
                 raise ValueError(f"column {name!r} length mismatch")
             cols[name] = arr
+        checksums = {}
         for name, arr in cols.items():
             np.save(path / f"{name}.npy", arr)
+            checksums[name] = hashlib.sha256(
+                (path / f"{name}.npy").read_bytes()).hexdigest()
         header = {
             "format": FORMAT,
             "n": int(addrs.size),
@@ -194,6 +250,7 @@ class TraceStore:
             "max_addr": int(addrs.max()),
             "columns": {name: str(arr.dtype)
                         for name, arr in sorted(cols.items())},
+            "checksums": dict(sorted(checksums.items())),
         }
         with open(path / HEADER, "w") as fh:
             json.dump(header, fh, indent=1, sort_keys=True)

@@ -18,7 +18,12 @@ metadata so ui.perfetto.dev groups them):
 * when the run carried an active fault plan, one ``faults`` process with
   an instant event (``ph: "i"``) per nonzero fault counter (link CRC
   retries, failovers, degraded accesses, NAND read retries, retired
-  blocks, poisoned reads) plus one summary event carrying all counters.
+  blocks, poisoned reads) plus one summary event carrying all counters;
+  pass ``down_windows=`` (the span dicts from
+  :func:`repro.core.replay.metrics.down_window_spans`) to additionally
+  render each down-link window as a duration event (``ph: "X"``) on the
+  tick axis, one track per (host, link) — the degraded intervals line up
+  under the host bandwidth/occupancy tracks they explain.
 
 Timestamps are microseconds (the trace_events unit); 1 tick = 1 ps, so
 ``ts = ticks / 1e6``.  The output is plain JSON — no Perfetto SDK, no
@@ -67,9 +72,12 @@ def _pcts_args(hist_row) -> Dict[str, int]:
     return out
 
 
-def to_perfetto(bundle_or_result) -> Dict:
+def to_perfetto(bundle_or_result, down_windows=None) -> Dict:
     """Build the ``trace_events`` JSON document (as a dict) for a metrics
-    bundle, or for any replay/driver result carrying one."""
+    bundle, or for any replay/driver result carrying one.  ``down_windows``
+    optionally adds the transport down-link spans
+    (:func:`repro.core.replay.metrics.down_window_spans`) to the faults
+    track group."""
     mb = _bundle_of(bundle_or_result)
     wt = mb.spec.window_ticks
     events: List[Dict] = []
@@ -137,18 +145,35 @@ def to_perfetto(bundle_or_result) -> Dict:
                        "args": args})
 
     # -------------------------------------------------------------- faults
-    if mb.faults is not None:
+    if mb.faults is not None or down_windows:
         pid = len(mb.hosts) + 3
         proc(pid, "faults")
-        events.append({"name": "fault_counters", "ph": "X", "pid": pid,
-                       "tid": 0, "ts": 0.0, "dur": dur,
-                       "args": {k: int(v) for k, v in mb.faults.items()}})
-        for tid, (k, v) in enumerate(sorted(mb.faults.items()), start=1):
-            if not int(v):
-                continue
-            events.append({"name": f"{k}={int(v)}", "ph": "i", "pid": pid,
-                           "tid": tid, "ts": dur, "s": "p",
-                           "args": {k: int(v)}})
+        tid = 1
+        if mb.faults is not None:
+            events.append({"name": "fault_counters", "ph": "X", "pid": pid,
+                           "tid": 0, "ts": 0.0, "dur": dur,
+                           "args": {k: int(v)
+                                    for k, v in mb.faults.items()}})
+            for k, v in sorted(mb.faults.items()):
+                if not int(v):
+                    continue
+                events.append({"name": f"{k}={int(v)}", "ph": "i",
+                               "pid": pid, "tid": tid, "ts": dur, "s": "p",
+                               "args": {k: int(v)}})
+                tid += 1
+        # one track per (host, link): the window a down link was declared
+        # over, mapped from access ordinals to ticks by the issue column
+        tracks: Dict[str, int] = {}
+        for span in down_windows or ():
+            label = f"down {span['link']} @{span['host']}"
+            t = tracks.setdefault(label, tid + len(tracks))
+            ts = span["start_tick"] / _TICKS_PER_US
+            events.append({
+                "name": label, "ph": "X", "pid": pid, "tid": t, "ts": ts,
+                "dur": max(span["end_tick"] / _TICKS_PER_US - ts,
+                           1.0 / _TICKS_PER_US),
+                "args": {k: (int(v) if not isinstance(v, str) else v)
+                         for k, v in span.items()}})
 
     return {"traceEvents": events, "displayTimeUnit": "ns",
             "otherData": {
@@ -160,9 +185,10 @@ def to_perfetto(bundle_or_result) -> Dict:
 
 
 def write_perfetto(bundle_or_result, path: str,
-                   indent: Optional[int] = None) -> str:
+                   indent: Optional[int] = None,
+                   down_windows=None) -> str:
     """Serialize :func:`to_perfetto` output to ``path``; returns ``path``."""
-    doc = to_perfetto(bundle_or_result)
+    doc = to_perfetto(bundle_or_result, down_windows=down_windows)
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=indent)
     return path

@@ -66,6 +66,13 @@ FAULT_SCENARIOS = ("faults-linkretry@spine_leaf",
                    "faults-portdown-failover@mesh",
                    "faults-nand-retry@direct")
 
+# multi-host transport-fault scenarios (PR 9): the fused multi-host lanes
+# mirror fabric fault plans on per-host mounts; the pins carry each
+# host's per-access latencies AND the aggregated fault counters
+# (degraded accesses, ECMP failovers, link retries)
+MULTI_FAULT_HOSTS = {"faults-portdown@multihost_x2": 2,
+                     "faults-linkretry@spine_leaf_x4": 4}
+
 
 def scenario_names():
     names = [f"{d}@{attach}" for d in DEVICES
@@ -80,12 +87,13 @@ def scenario_names():
     # fused single-host lanes hardcoded 0 and the divergence was
     # deliberately left unpinned)
     names.append("dram-qos@fabric")
+    names += sorted(MULTI_FAULT_HOSTS)
     return names
 
 
 def is_multi(name: str) -> bool:
     """Multi-host scenarios pin one latency list per host."""
-    return name.startswith("multihost")
+    return name.startswith("multihost") or name in MULTI_FAULT_HOSTS
 
 
 def scenario_outstanding(name: str) -> int:
@@ -184,6 +192,27 @@ def make_target(name: str):
     return dev
 
 
+def _make_multi_fault_targets(name: str):
+    """Per-host fabric mounts on one spine-leaf with a deterministic
+    transport FaultPlan installed — a down window that forces ECMP
+    failover (x2) or CRC link-retry bursts (x4)."""
+    from repro.core.devices import make_device
+    from repro.core.fabric import Fabric
+    from repro.core.faults import FaultConfig, FaultPlan, install
+
+    nh = MULTI_FAULT_HOSTS[name]
+    fab = Fabric.build("spine_leaf", num_hosts=nh, num_devices=nh,
+                       num_leaves=2, num_spines=2, ecmp=True)
+    tgts = [fab.mount(f"h{i}", f"d{i}", make_device("dram"))
+            for i in range(nh)]
+    if name == "faults-portdown@multihost_x2":
+        cfg = FaultConfig(down_links=(("s0", "sp0", 20, 90),))
+    else:
+        cfg = FaultConfig(link_retry_rate=0.2, link_retry_max=2)
+    install(FaultPlan(cfg, seed=11), tgts)
+    return tgts
+
+
 def make_multi_targets(name: str = "multihost-qos-ecmp"):
     """Fresh targets + traces builder inputs for the multi-host scenarios."""
     from repro.core.cache.dram_cache import DRAMCacheConfig
@@ -191,6 +220,8 @@ def make_multi_targets(name: str = "multihost-qos-ecmp"):
     from repro.core.fabric import Fabric, MemoryPool
     from repro.core.ssd.hil import HIL
 
+    if name in MULTI_FAULT_HOSTS:
+        return _make_multi_fault_targets(name)
     if name == "multihost-qos-ecmp":
         fab = Fabric.build("spine_leaf", num_hosts=MULTI["num_hosts"],
                            num_devices=2, num_leaves=MULTI["num_leaves"],
@@ -219,6 +250,8 @@ def make_multi_targets(name: str = "multihost-qos-ecmp"):
 
 
 def multi_traces(name: str = "multihost-qos-ecmp"):
+    if name in MULTI_FAULT_HOSTS:
+        return [make_trace(400 + h) for h in range(MULTI_FAULT_HOSTS[name])]
     if name == "multihost-ssd-sharedflash":
         # write-heavy churn past the 16-page cache: reaches the tiny shared
         # flash's GC watermark (sustained, clean-victim collections)

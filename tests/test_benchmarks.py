@@ -210,6 +210,44 @@ def test_replay_bench_streaming_lane_recorded():
                if isinstance(v, dict) and "tick_exact_vs_oneshot" in v)
 
 
+def test_replay_bench_availability_derived_identical_across_runs():
+    """The fleet availability sweep (vmapped fault-seed lane) is a pure
+    function of its seeds: two runs emit byte-identical derived JSON
+    (tail percentiles, availability curves, fault counters — no
+    wall-clock numbers), so BENCH availability diffs across PRs are
+    always simulation changes."""
+    import replay_bench
+
+    kw = dict(host_counts=(2,), n_seeds=3, accesses=96)
+    a = replay_bench.collect_availability_derived(**kw)
+    b = replay_bench.collect_availability_derived(**kw)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert a["hosts_x2"]["tick_exact_vs_python"] is True
+
+
+def test_replay_bench_availability_lane_recorded():
+    """The committed artifact carries the 4- and 8-host availability
+    sweeps: every per-seed lane verified tick-exact against the
+    interpreted driver, the shared down window visible as a dip in the
+    seed-averaged reachable-fraction curve, and live fault activity."""
+    report = _load_replay_report()
+    avail = report.get("availability")
+    assert avail is not None, \
+        "availability section missing from results/BENCH_replay.json"
+    for key in ("hosts_x4", "hosts_x8"):
+        lane = avail[key]
+        assert lane["tick_exact_vs_python"] is True, \
+            f"{key} recorded as not tick-exact vs the interpreted driver"
+        assert len(lane["seeds"]) == avail["n_seeds"]
+        curve = [lane["availability_curve"][str(w)]
+                 for w in range(lane["num_windows"])]
+        assert min(curve) < 1.0, \
+            f"{key}: down window left no dip in the availability curve"
+        assert lane["degraded_fraction"]["max"] > 0
+        assert lane["tail_p99_ticks"]["min"] <= lane["tail_p99_ticks"]["max"]
+        assert any(s["link_retries"] > 0 for s in lane["seeds"].values())
+
+
 def test_replay_bench_speedups_meet_pinned_floor():
     report = _load_replay_report()
     assert report["meets_target"] is True

@@ -304,27 +304,106 @@ def test_parity_multihost_nand_qos_ecmp():
     assert py2.elapsed_ticks == rp2.elapsed_ticks
 
 
-# ------------------------------------------------------ typed refusals
-def test_multihost_fused_refuses_transport_faults():
+# ---------------------------------------- multi-host transport parity
+def _mh_parity(cfg, seed=5, qos=False, ecmp=False, chunk=None):
+    """Fused multi-host replay under transport faults: per-host latency
+    streams and the full metrics bundle (fault counters included) must be
+    tick/byte-identical to the interpreted MultiHostDriver."""
+    traces = [_trace(21, n=120, write_frac=0.5),
+              _trace(22, n=120, write_frac=0.5)]
+    py = MultiHostDriver(_mh_targets(cfg, seed, qos, ecmp),
+                         outstanding=OUT, metrics=MetricsSpec()).run(traces)
+    eng = MultiHostReplay(_mh_targets(cfg, seed, qos, ecmp),
+                          outstanding=OUT, metrics=MetricsSpec())
+    rp, lat = eng.run_recorded(traces, chunk_size=chunk)
+    taps = [ServiceTap(t) for t in _mh_targets(cfg, seed, qos, ecmp)]
+    MultiHostDriver(taps, outstanding=OUT).run(traces)
+    for tap, l in zip(taps, lat):
+        assert np.array_equal(np.asarray(tap.latencies), np.asarray(l))
+    js = rp.metrics.to_jsonable()
+    assert py.metrics.to_jsonable() == js
+    return rp, js
+
+
+def test_parity_multihost_link_retries():
+    rp, js = _mh_parity(FaultConfig(link_retry_rate=0.3))
+    assert js["faults"]["link_retries"] > 0
+
+
+def test_parity_multihost_port_down_ecmp_and_failover():
+    rp, js = _mh_parity(FaultConfig(down_links=(("s0", "sp0", 20, 90),)),
+                        ecmp=True)
+    assert js["faults"]["degraded_accesses"] > 0
+    # non-ECMP spine-leaf: the same window forces failover reroutes
+    rp2, js2 = _mh_parity(FaultConfig(down_links=(("s0", "sp0", 20, 90),)))
+    assert js2["faults"]["failovers"] > 0
+
+
+def test_parity_multihost_poison_status():
+    rp, js = _mh_parity(FaultConfig(poison_rate=0.2))
+    assert js["faults"]["poisoned_reads"] > 0
+
+
+def test_parity_multihost_mixed_qos_ecmp():
+    rp, js = _mh_parity(FaultConfig(link_retry_rate=0.2,
+                                    down_links=(("s0", "sp1", 30, 100),),
+                                    poison_rate=0.1),
+                        qos=True, ecmp=True)
+    for k in ("link_retries", "degraded_accesses", "poisoned_reads"):
+        assert js["faults"][k] > 0
+
+
+def test_multihost_fault_flags_exposed_for_availability():
+    cfg = FaultConfig(down_links=(("s0", "sp0", 20, 90),))
+    traces = [_trace(21, n=120), _trace(22, n=120)]
+    eng = MultiHostReplay(_mh_targets(cfg, ecmp=True), outstanding=OUT)
+    eng.run(traces)
+    deg, fo = eng.fault_flags
+    assert deg.shape == (2, 120) and fo.shape == (2, 120)
+    assert deg[:, :20].sum() == 0 and deg[:, 20:90].any()
+
+
+def test_multihost_unreachable_raises_at_prepare():
+    # both spines down for the whole run: no surviving route, typed error
+    cfg = FaultConfig(down_links=(("s0", "sp0", 0, 1000),
+                                  ("s0", "sp1", 0, 1000)))
     traces = [_trace(31, n=16), _trace(32, n=16)]
-    for cfg in (FaultConfig(link_retry_rate=0.3),
-                FaultConfig(down_links=(("s0", "sp0", 0, 50),)),
-                FaultConfig(poison_rate=0.1)):
-        with pytest.raises(ReplayUnsupported, match="NAND faults only"):
-            MultiHostReplay(_mh_targets(cfg)).run(traces)
+    with pytest.raises(DeviceUnreachable):
+        MultiHostReplay(_mh_targets(cfg, ecmp=True)).run(traces)
 
 
-def test_assoc_and_pallas_refuse_active_plans():
+# ------------------------------------------------------ typed refusals
+def test_multihost_pool_refuses_transport_faults_naming_classes():
+    from repro.core.devices import DRAMDevice
+    fab = Fabric.build("two_level", num_hosts=2, num_devices=2,
+                       num_leaves=2)
+    pool = MemoryPool(fab, {"d0": DRAMDevice(), "d1": DRAMDevice()})
+    views = pool.views(["h0", "h1"])
+    # install() refuses pool views, so wire the plan onto the fabric the
+    # way a mounted topology would carry it
+    fab.fault_plan = FaultPlan(FaultConfig(link_retry_rate=0.3,
+                                           down_links=(("s0", "l0", 0,
+                                                        50),)), seed=2)
+    traces = [_trace(31, n=16), _trace(32, n=16)]
+    with pytest.raises(ReplayUnsupported,
+                       match="link-retry, port-down.*pool address "
+                             "interleaving.*engine='python'"):
+        MultiHostReplay(views).run(traces)
+
+
+def test_assoc_and_pallas_refusals_name_fault_class_and_lane():
     tgt = _mount("dram")
-    install(FaultPlan(FaultConfig(link_retry_rate=0.3), seed=2), [tgt])
-    with pytest.raises(ReplayUnsupported, match="fault injection"):
+    install(FaultPlan(FaultConfig(link_retry_rate=0.3,
+                                  poison_rate=0.1), seed=2), [tgt])
+    with pytest.raises(ReplayUnsupported,
+                       match="link-retry, poison.*engine='scan'"):
         AssocReplayEngine(tgt, outstanding=OUT).run(_trace(4, n=32))
     from repro.core.replay.pallas_engine import run_pallas
     dev = _mk_device("cxl-ssd-cache")
     install(FaultPlan(FaultConfig(nand_read_retry_rate=0.3), seed=2), [dev])
     addrs = np.asarray([a for a, _, _ in _trace(4, n=32)], np.int64)
     writes = np.asarray([w for _, _, w in _trace(4, n=32)], bool)
-    with pytest.raises(ReplayUnsupported, match="fault injection"):
+    with pytest.raises(ReplayUnsupported, match="NAND.*engine='scan'"):
         run_pallas(dev, addrs, writes)
     # an inert plan (all rates zero) constrains nothing
     t2 = _mount("dram")
@@ -371,6 +450,34 @@ def test_perfetto_export_carries_fault_instants(tmp_path):
     assert "faults" not in procs2
 
 
+def test_perfetto_export_renders_down_window_spans(tmp_path):
+    import json
+
+    from repro.core.replay.metrics import down_window_spans
+    from repro.obs import write_perfetto
+
+    cfg = FaultConfig(down_links=(("s0", "sp0", 30, 90),))
+    tgt = _mount("dram", ecmp=True)
+    plan = install(FaultPlan(cfg, seed=4), [tgt])
+    res = ReplayEngine(tgt, outstanding=OUT,
+                       metrics=MetricsSpec()).run(_trace(11))
+    iss = np.cumsum(np.full(160, 100, np.int64))
+    spans = down_window_spans(plan, [iss], hosts=["h0"])
+    assert spans and spans[0]["link"] == "s0<->sp0"
+    assert spans[0]["start_tick"] == int(iss[30])
+    doc = json.load(open(write_perfetto(res, str(tmp_path / "d.json"),
+                                        down_windows=spans)))
+    xs = [e for e in doc["traceEvents"]
+          if e["ph"] == "X" and e["name"].startswith("down ")]
+    assert len(xs) == len(spans)
+    assert xs[0]["args"]["link"] == "s0<->sp0"
+    assert xs[0]["dur"] > 0
+    # spans land in the faults process group
+    pids = {e["pid"]: e["args"]["name"] for e in doc["traceEvents"]
+            if e["name"] == "process_name"}
+    assert pids[xs[0]["pid"]] == "faults"
+
+
 # --------------------------------------------- property suite (hypothesis)
 # Random seeded FaultPlans; skips cleanly when the dev extra is absent.
 try:
@@ -393,3 +500,21 @@ if HAVE_HYPOTHESIS:
     def test_random_fault_plans_replay_tick_exact(kw, seed, device):
         _parity(lambda: _mount(device, ecmp=True), FaultConfig(**kw),
                 seed=seed, trace=_trace(13))
+
+    MH_PLANS = st.fixed_dictionaries({
+        "link_retry_rate": st.floats(0.0, 0.4),
+        "link_retry_max": st.integers(1, 3),
+        "poison_rate": st.floats(0.0, 0.2),
+    })
+
+    @settings(max_examples=6, deadline=None)
+    @given(kw=MH_PLANS, seed=st.integers(0, 2**31 - 1),
+           qos=st.booleans(), ecmp=st.booleans(), down=st.booleans())
+    def test_random_multihost_transport_plans_tick_exact(kw, seed, qos,
+                                                         ecmp, down):
+        """Fused multi-host transport faults across the QoS x ECMP grid on
+        spine-leaf: tick/byte-identical to the interpreted driver for any
+        seeded plan mix (down windows included)."""
+        if down:
+            kw = dict(kw, down_links=(("s0", "sp0", 20, 90),))
+        _mh_parity(FaultConfig(**kw), seed=seed, qos=qos, ecmp=ecmp)

@@ -136,6 +136,20 @@ def test_fixture_covers_multihost_cached_and_gc(fixture):
     assert len(fixture["multihost-ssd-sharedflash"]["python_scan"]) == 2
 
 
+def test_fixture_pins_multihost_transport_fault_counters(fixture):
+    """The PR-9 multi-host transport-fault scenarios are pinned with live
+    degradation counters: the down window degrades accesses and forces
+    ECMP failovers at x2 hosts, the CRC schedule charges link retries at
+    x4 — so a fused lane that silently stops mirroring fabric faults
+    (counters collapsing to zero) fails here, not just in parity."""
+    x2 = fixture["faults-portdown@multihost_x2"]
+    x4 = fixture["faults-linkretry@spine_leaf_x4"]
+    assert len(x2["python_scan"]) == 2 and len(x4["python_scan"]) == 4
+    assert x2["metrics"]["faults"]["degraded_accesses"] > 0
+    assert x2["metrics"]["faults"]["failovers"] > 0
+    assert x4["metrics"]["faults"]["link_retries"] > 0
+
+
 def test_regen_refuses_dropping_or_rewriting_pins():
     """The fixture is append-only: regen aborts when a pinned scenario
     disappears from the table or regenerates to different values."""

@@ -25,7 +25,7 @@ from repro.core.replay import (MultiHostReplay, ReplayEngine,
 from repro.core.replay.metrics import MetricsSpec
 from repro.core.workloads.driver import MultiHostDriver, TraceDriver
 from repro.data.pipeline import Prefetcher
-from repro.data.trace_store import TraceStore
+from repro.data.trace_store import TraceStore, TraceStoreCorrupt
 
 CACHE_KW = dict(capacity_bytes=16 * 4096, mshr_entries=4, writeback_buffer=2)
 DEVICES = ["dram", "cxl-dram", "pmem", "cxl-ssd", "cxl-ssd-cache"]
@@ -218,6 +218,9 @@ def test_trace_store_roundtrip(tmp_path):
     assert got["addr"].tolist() == [a for a, _, _ in trace[10:20]]
     spans = [(lo, hi) for lo, hi, _ in st2.chunks(77)]
     assert spans[0] == (0, 77) and spans[-1][1] == len(trace)
+    # chunk-aligned resume: iteration picks up mid-store
+    tail = [(lo, hi) for lo, hi, _ in st2.chunks(77, start=154)]
+    assert tail == spans[2:]
 
 
 def test_trace_store_validation(tmp_path):
@@ -237,6 +240,49 @@ def test_trace_store_optional_columns(tmp_path):
                           hosts=[0, 1, 0], routes=[1, 0, 1])
     assert "host" in st.column_names and "route" in st.column_names
     assert np.asarray(st.column("host")).tolist() == [0, 1, 0]
+
+
+def test_trace_store_validate_detects_bit_flip(tmp_path):
+    st = TraceStore.from_trace(tmp_path / "t.store", _trace(17, n=64))
+    st.validate()  # pristine store passes
+    f = tmp_path / "t.store" / "addr.npy"
+    raw = bytearray(f.read_bytes())
+    raw[-5] ^= 0x01
+    f.write_bytes(bytes(raw))
+    with pytest.raises(TraceStoreCorrupt, match="checksum mismatch"):
+        TraceStore(tmp_path / "t.store").validate()
+
+
+def test_trace_store_validate_detects_truncation(tmp_path):
+    st = TraceStore.from_trace(tmp_path / "t.store", _trace(18, n=64))
+    f = tmp_path / "t.store" / "op.npy"
+    f.write_bytes(f.read_bytes()[: len(f.read_bytes()) // 2])
+    with pytest.raises(TraceStoreCorrupt, match="checksum|truncated"):
+        TraceStore(tmp_path / "t.store").validate()
+    # legacy store without checksums: row-count check still catches it
+    hdr = tmp_path / "t.store" / "header.json"
+    meta = json.loads(hdr.read_text())
+    meta.pop("checksums")
+    hdr.write_text(json.dumps(meta))
+    full = np.asarray(TraceStore.from_trace(
+        tmp_path / "u.store", _trace(18, n=64)).column("op"))
+    np.save(f, full[:40])
+    reopened = TraceStore(tmp_path / "t.store")
+    with pytest.raises(TraceStoreCorrupt, match="truncated|rows"):
+        reopened.validate()
+    (tmp_path / "t.store" / "addr.npy").unlink()
+    with pytest.raises(TraceStoreCorrupt, match="unreadable"):
+        reopened.validate()
+
+
+def test_stream_surfaces_corrupt_store_instead_of_hanging(tmp_path):
+    st = TraceStore.from_trace(tmp_path / "t.store", _trace(19, n=64))
+    f = tmp_path / "t.store" / "addr.npy"
+    f.write_bytes(f.read_bytes()[:30])  # partial .npy header
+    pf = Prefetcher(TraceStore(tmp_path / "t.store").chunks(16), depth=2)
+    with pytest.raises(Exception):
+        list(pf)
+    pf.close()
 
 
 # ---------------------------------------------------------- replay_stream
@@ -268,12 +314,145 @@ def test_replay_stream_bounded_output(tmp_path):
     assert res.end_tick == base.end_tick
 
 
-def test_replay_stream_transport_faults_refuse(tmp_path):
-    st = TraceStore.from_trace(tmp_path / "t.store", _trace(15, n=32))
+def _transport_target(seed=7, down=(("s0", "sp0", 40, 180),)):
     tgt = _ecmp_target()
-    install(FaultPlan(FaultConfig(link_retry_rate=0.25), seed=7), [tgt])
-    with pytest.raises(ReplayUnsupported, match="streaming|whole trace"):
-        replay_stream(st, tgt, chunk_size=8, outstanding=8)
+    install(FaultPlan(FaultConfig(link_retry_rate=0.25, down_links=down,
+                                  poison_rate=0.1), seed=seed), [tgt])
+    return tgt
+
+
+def test_replay_stream_transport_faults_exact(tmp_path):
+    """Transport fault plans (link-retry + down window + poison) stream
+    tick-identically: the per-access hop columns are built chunk by chunk
+    on the host side, never from the whole trace."""
+    trace = _trace(15)
+    st = TraceStore.from_trace(tmp_path / "t.store", trace)
+    base = ReplayEngine(_transport_target(), outstanding=8,
+                        metrics=MetricsSpec()).run(trace)
+    for chunk in (32, 77, N):
+        res = replay_stream(st, _transport_target(), chunk_size=chunk,
+                            outstanding=8, metrics=MetricsSpec())
+        _assert_same(base, res, chunk)
+        assert np.array_equal(res.poison_flags, base.poison_flags)
+
+
+def test_fault_window_at_chunk_seams(tmp_path):
+    """A port-down window opening AND closing exactly at a chunk seam
+    (window [C, 3C)), replayed at chunk sizes {1, C-1, C, C+1}: the
+    chunked fault-column builder must agree with one-shot at every
+    alignment of window edge vs chunk edge."""
+    C = 40
+
+    def mk():
+        tgt = _ecmp_target()
+        install(FaultPlan(FaultConfig(down_links=(("s0", "sp0", C, 3 * C),)),
+                          seed=3), [tgt])
+        return tgt
+
+    trace = _trace(23, n=160)
+    st = TraceStore.from_trace(tmp_path / "t.store", trace)
+    base = ReplayEngine(mk(), outstanding=8, metrics=MetricsSpec()).run(trace)
+    for chunk in (1, C - 1, C, C + 1):
+        res = replay_stream(st, mk(), chunk_size=chunk, outstanding=8,
+                            metrics=MetricsSpec())
+        _assert_same(base, res, chunk)
+
+
+# ------------------------------------------------- crash-safe checkpoints
+class _Crashy:
+    """Store wrapper whose chunk iterator dies after ``die_after`` chunks —
+    a deterministic stand-in for kill -9 mid-trace."""
+
+    def __init__(self, store, die_after):
+        self._s = store
+        self.die_after = die_after
+
+    def __getattr__(self, name):
+        return getattr(self._s, name)
+
+    def chunks(self, chunk_size, start=0):
+        for k, item in enumerate(self._s.chunks(chunk_size, start=start)):
+            if k == self.die_after:
+                raise RuntimeError("simulated crash")
+            yield item
+
+
+def test_replay_stream_crash_resume_byte_identical(tmp_path):
+    """Kill a checkpointed run mid-trace, resume: latencies, poison flags
+    and the full MetricsBundle must be byte-identical to the
+    uninterrupted run — with an active transport fault plan, at chunk
+    sizes that do and don't divide the trace.  One of the resume points
+    lands INSIDE the down window [40, 180)."""
+    trace = _trace(24, n=240)
+    st = TraceStore.from_trace(tmp_path / "t.store", trace)
+    base = ReplayEngine(_transport_target(), outstanding=8,
+                        metrics=MetricsSpec()).run(trace)
+    resumed_in_window = False
+    for chunk, die_after in ((32, 2), (32, 4), (80, 1), (80, 2)):
+        ck = tmp_path / f"ck_{chunk}_{die_after}"
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            replay_stream(_Crashy(st, die_after), _transport_target(),
+                          chunk_size=chunk, outstanding=8,
+                          metrics=MetricsSpec(),
+                          checkpoint_dir=str(ck), checkpoint_every=1)
+        stats = {}
+        res = replay_stream(st, _transport_target(), chunk_size=chunk,
+                            outstanding=8, metrics=MetricsSpec(),
+                            checkpoint_dir=str(ck), checkpoint_every=1,
+                            resume=True, stats=stats)
+        assert stats["resumed_from"] == chunk * die_after
+        resumed_in_window |= 40 < stats["resumed_from"] < 180
+        _assert_same(base, res, (chunk, die_after))
+        assert np.array_equal(res.poison_flags, base.poison_flags)
+    assert resumed_in_window, "no tested resume point fell in the window"
+
+
+def test_replay_stream_torn_checkpoint_falls_back(tmp_path):
+    """A bit-flipped (torn) newest checkpoint is skipped: resume walks
+    back to the previous good snapshot and still matches one-shot."""
+    trace = _trace(25, n=240)
+    st = TraceStore.from_trace(tmp_path / "t.store", trace)
+    base = ReplayEngine(_transport_target(), outstanding=8,
+                        metrics=MetricsSpec()).run(trace)
+    ck = tmp_path / "ck"
+    with pytest.raises(RuntimeError):
+        replay_stream(_Crashy(st, 4), _transport_target(), chunk_size=40,
+                      outstanding=8, metrics=MetricsSpec(),
+                      checkpoint_dir=str(ck), checkpoint_every=1)
+    steps = sorted(int(p.name.split("_")[1]) for p in ck.glob("step_*"))
+    assert len(steps) >= 2
+    victim = sorted((ck / f"step_{steps[-1]:08d}").glob("*.bin"))[0]
+    raw = bytearray(victim.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    stats = {}
+    res = replay_stream(st, _transport_target(), chunk_size=40,
+                        outstanding=8, metrics=MetricsSpec(),
+                        checkpoint_dir=str(ck), checkpoint_every=1,
+                        resume=True, stats=stats)
+    assert stats["resumed_from"] == steps[-2]
+    _assert_same(base, res)
+
+
+def test_replay_stream_resume_guards(tmp_path):
+    st = TraceStore.from_trace(tmp_path / "t.store", _trace(26, n=64))
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        replay_stream(st, _mk("dram"), chunk_size=8, resume=True)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        replay_stream(st, _mk("dram"), chunk_size=8, checkpoint_every=2)
+    # resume with no checkpoint on disk is a fresh start
+    base = ReplayEngine(_mk("dram"), outstanding=8).run(_trace(26, n=64))
+    stats = {}
+    res = replay_stream(st, _mk("dram"), chunk_size=8, outstanding=8,
+                        checkpoint_dir=str(tmp_path / "empty"),
+                        checkpoint_every=2, resume=True, stats=stats)
+    assert stats["resumed_from"] == 0 and stats["checkpoints_written"] > 0
+    assert res.latency_ticks.tolist() == base.latency_ticks.tolist()
+    # a checkpoint from a different trace is rejected, typed
+    st2 = TraceStore.from_trace(tmp_path / "t2.store", _trace(27, n=32))
+    with pytest.raises(ValueError, match="different trace"):
+        replay_stream(st2, _mk("dram"), chunk_size=8,
+                      checkpoint_dir=str(tmp_path / "empty"), resume=True)
 
 
 def test_replay_stream_nand_faults_ok(tmp_path):
