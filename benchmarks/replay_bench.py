@@ -12,7 +12,12 @@ Three device classes, every fast lane the repo has, one JSON artifact:
 * ``scan_metrics`` — each device's scan re-run with telemetry enabled
   (``metrics=MetricsSpec()``): records the p50/p99 and counter summaries
   plus ``overhead_vs_scan``, the relative cost of observability over the
-  bare scan, timed interleaved with it (CI-guarded at <10%).
+  bare scan, timed interleaved with it (CI-guarded at <10%);
+* ``fleet`` — 64 hosts on a 4-pod datacenter fabric, >=100k accesses
+  synthesized on device by the jnp workload twin, the ``shard_map``
+  sharded lane exactness-flagged against the unsharded fused lane and
+  the interpreted driver at the recorded scale (derived-only; re-record
+  alone with ``--lanes fleet``).
 
 Methodology (the numbers this file writes are compared across PRs):
 
@@ -541,16 +546,120 @@ def collect_availability_derived(host_counts=AVAIL_HOSTS,
     return out
 
 
-def merge_availability_lane() -> str:
-    """Append/refresh ONLY the availability lane of an existing
+# fleet lane: rack-scale sharded replay (ISSUE 10 tentpole) — 64 hosts on
+# a 4-pod datacenter fabric, >=100k accesses synthesized ON DEVICE by the
+# jnp workload twin, the shard_map lane exactness-flagged against the
+# unsharded fused lane (and the unsharded lane against the interpreted
+# driver) at the full recorded scale.  Derived-only, so the JSON is
+# byte-identical across runs (CI-guarded).
+FLEET_HOSTS = 64
+FLEET_N = 1_600             # accesses per host -> 102_400 total
+FLEET_PODS = 4
+FLEET_SEED = 23
+
+
+def collect_fleet_derived(num_hosts: int = FLEET_HOSTS,
+                          accesses: int = FLEET_N,
+                          num_pods: int = FLEET_PODS,
+                          check_python: bool = True) -> dict:
+    """Derived (simulated) results of the rack-scale sharded fleet lane —
+    a pure function of the workload seed: per-lane exactness bits, the
+    mesh shape, fleet-pooled tail percentiles and the media counters.  No
+    wall-clock numbers leak in, so the JSON is byte-identical across runs
+    (CI-guarded); CI re-runs it scaled down and double-checks the bits."""
+    from jax.experimental import enable_x64
+
+    from repro.core.fabric import Fabric
+    from repro.core.replay import (MetricsSpec, MultiHostReplay,
+                                   ShardedMultiHostReplay)
+    from repro.core.workloads.driver import MultiHostDriver
+    from repro.data import WorkloadSpec, host_trace_jnp, make_traces
+
+    spec = WorkloadSpec("zipfian", num_pages=FOOTPRINT_PAGES, zipf_s=1.1,
+                        write_frac=WRITE_FRAC)
+    # on-device synthesis: the traced twin builds every host column as a
+    # pure function of (seed, host, i) — no python per-access objects
+    with enable_x64():
+        cols = [host_trace_jnp(spec, FLEET_SEED, h, accesses)
+                for h in range(num_hosts)]
+        addrs = np.stack([np.asarray(a, np.int64) for a, _ in cols])
+        writes = np.stack([np.asarray(w, bool) for _, w in cols])
+
+    def mk():
+        fab = Fabric.build("multi_pod", forward_ns=10.0, rt_extra_ns=4.0,
+                           num_pods=num_pods,
+                           hosts_per_pod=num_hosts // num_pods)
+        return [fab.mount(f"h{i}", f"d{i}", _mk_device("dram"))
+                for i in range(num_hosts)]
+
+    un = MultiHostReplay(mk(), outstanding=8, metrics=MetricsSpec())
+    ru = un.run_arrays(addrs, writes)
+    shd = ShardedMultiHostReplay(mk(), outstanding=8, metrics=MetricsSpec())
+    rs = shd.run_arrays(addrs, writes)
+    sh_exact = _multi_exact(ru, rs) and all(
+        a.accesses == b.accesses and a.bytes_moved == b.bytes_moved
+        for a, b in zip(ru.per_host, rs.per_host))
+    metrics_equal = (ru.metrics.to_jsonable() == rs.metrics.to_jsonable())
+    assert sh_exact and metrics_equal, \
+        "sharded fleet replay diverged from the unsharded fused lane"
+    out = {
+        "hosts": num_hosts,
+        "accesses_per_host": accesses,
+        "n_accesses": num_hosts * accesses,
+        "workload": {"kind": spec.kind, "num_pages": spec.num_pages,
+                     "zipf_s": spec.zipf_s, "write_frac": spec.write_frac,
+                     "seed": FLEET_SEED, "synthesis": "jnp (on device)"},
+        "fabric": {"kind": "multi_pod", "num_pods": num_pods,
+                   "hosts_per_pod": num_hosts // num_pods},
+        "mesh": dict(shd.last_mesh),
+        "tick_exact_sharded_vs_unsharded": bool(sh_exact),
+        "metrics_equal_sharded_vs_unsharded": bool(metrics_equal),
+        "elapsed_ticks": int(rs.elapsed_ticks),
+        "sum_latency_ticks": int(sum(r.sum_latency_ticks
+                                     for r in rs.per_host)),
+        "p50_ticks": rs.metrics.percentile_ticks(50),
+        "p99_ticks": rs.metrics.percentile_ticks(99),
+    }
+    if check_python:
+        py = MultiHostDriver(mk(), outstanding=8).run(
+            make_traces(spec, FLEET_SEED, num_hosts, accesses))
+        py_exact = _multi_exact(py, ru)
+        assert py_exact, "fused fleet replay diverged from the driver"
+        out["tick_exact_vs_python"] = bool(py_exact)
+    return out
+
+
+#: the append-only single-lane re-record map: ``--lanes a,b`` refreshes
+#: just these keys of an existing BENCH_replay.json, leaving every other
+#: recorded number byte-for-byte untouched
+LANE_COLLECTORS = {
+    "faults": ("faults", collect_fault_derived),
+    "availability": ("availability", collect_availability_derived),
+    "fleet": ("fleet", collect_fleet_derived),
+}
+
+
+def merge_lanes(lanes) -> str:
+    """Append/refresh ONLY the named derived lanes of an existing
     ``BENCH_replay.json`` — previously recorded wall-clock timings stay
     byte-for-byte untouched."""
+    unknown = [x for x in lanes if x not in LANE_COLLECTORS]
+    if unknown:
+        raise SystemExit(f"unknown lane(s) {unknown}; "
+                         f"choose from {sorted(LANE_COLLECTORS)}")
     with open(OUT_JSON) as f:
         report = json.load(f)
-    report["availability"] = collect_availability_derived()
+    for lane in lanes:
+        key, fn = LANE_COLLECTORS[lane]
+        report[key] = fn()
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)
     return os.path.abspath(OUT_JSON)
+
+
+def merge_availability_lane() -> str:
+    """Back-compat alias: ``merge_lanes(["availability"])``."""
+    return merge_lanes(["availability"])
 
 
 def bench_replay() -> List[Row]:
@@ -622,6 +731,13 @@ def bench_replay() -> List[Row]:
                          ("exact" if v["tick_exact_vs_python"]
                           else "DIVERGED")))
 
+    fleet = report["fleet"] = collect_fleet_derived()
+    rows.append((
+        f"replay/fleet/multipod{fleet['fabric']['num_pods']}"
+        f"-x{fleet['hosts']}", 0.0,
+        f"{'exact' if fleet['tick_exact_sharded_vs_unsharded'] else 'DIVERGED'},"
+        f"D{fleet['mesh']['device_count']}"))
+
     report["speedup_dram_best"] = report["devices"]["dram"][
         "best_exact_speedup"]
     report["speedup_pmem_best"] = report["devices"]["pmem"][
@@ -652,6 +768,12 @@ if __name__ == "__main__":
         # refresh just the derived availability lane, leaving every
         # previously recorded timing untouched
         print(f"# wrote availability lane -> {merge_availability_lane()}")
+        sys.exit(0)
+    if "--lanes" in sys.argv:
+        # re-record only the named derived lanes (e.g. --lanes fleet):
+        # append-only merge into the existing artifact
+        names = sys.argv[sys.argv.index("--lanes") + 1].split(",")
+        print(f"# wrote lane(s) {names} -> {merge_lanes(names)}")
         sys.exit(0)
     print("name,us_per_call,derived")
     for fn in ALL:

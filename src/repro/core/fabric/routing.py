@@ -78,6 +78,25 @@ def flow_choices(src: str, dst: str, line_addrs: np.ndarray,
     return (x % np.uint64(num_paths)).astype(np.int32)
 
 
+def flow_choices_jnp(src: str, dst: str, line_addrs, num_paths: int):
+    """Traced twin of :func:`flow_choices` (``jnp.uint64`` arithmetic wraps
+    mod 2^64 exactly like numpy), so route-choice columns for traces that
+    are *synthesized on-device* (``repro.data.workloads``) never leave the
+    accelerator.  Requires x64 (run under the ``enable_x64()`` scope every
+    replay engine already opens); bit-equal to the scalar and numpy twins
+    (property-tested)."""
+    import jax.numpy as jnp
+
+    if num_paths <= 1:
+        return jnp.zeros(jnp.shape(line_addrs), jnp.int32)
+    x = jnp.asarray(line_addrs).astype(jnp.uint64)
+    x = x ^ jnp.uint64(pair_salt(src, dst))
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return (x % jnp.uint64(num_paths)).astype(jnp.int32)
+
+
 _EMPTY_DOWN: FrozenSet[Tuple[str, str]] = frozenset()
 
 

@@ -17,10 +17,16 @@ Builders cover the shapes evaluated in multi-host CXL studies
                    canonical ECMP shape: ``num_spines`` equal-cost paths
                    between endpoints on different leaves
 ``mesh``           2-D grid of switches, hosts/devices attached round-robin
+``multi_pod``      datacenter fabric: ``num_pods`` spine_leaf pods joined by
+                   a core switch tier (every pod spine uplinks to every core
+                   switch).  Hosts are block-assigned to pods; each host's
+                   private device lives one pod over, so ``h_i -> d_i``
+                   traffic always crosses the core tier and ECMP fans out
+                   over ``spines x cores x spines`` pod-egress paths.
 
-Node names are ``h<i>`` (hosts), ``s<i>`` / ``s<r>_<c>`` (switches), and
-``d<i>`` (devices).  Topologies are immutable once handed to a ``Fabric``;
-routing results are cached under that assumption.
+Node names are ``h<i>`` (hosts), ``s<i>`` / ``s<r>_<c>`` / ``p<k>s<j>`` /
+``c<j>`` (switches), and ``d<i>`` (devices).  Topologies are immutable once
+handed to a ``Fabric``; routing results are cached under that assumption.
 """
 
 from __future__ import annotations
@@ -233,12 +239,74 @@ def mesh(num_hosts: int, num_devices: int, rows: int = 2, cols: int = 2,
     return topo
 
 
+def multi_pod(num_pods: int = 2, hosts_per_pod: int = 4,
+              devices_per_pod: int | None = None, num_leaves: int = 2,
+              num_spines: int = 2, num_core: int = 2,
+              bw_gbps: float = DEFAULT_LINK_BW_GBPS,
+              uplink_bw_gbps: float | None = None,
+              core_bw_gbps: float | None = None) -> Topology:
+    """Multi-pod datacenter fabric: ``num_pods`` spine_leaf pods joined by a
+    core tier.  Pod ``k`` owns leaves ``p<k>s<j>`` and spines ``p<k>sp<j>``
+    (full leaf-spine bipartite, like :func:`spine_leaf`); every pod spine
+    uplinks to every core switch ``c<j>``.
+
+    Hosts are **block-assigned**: pod ``k`` holds hosts
+    ``h[k*hosts_per_pod : (k+1)*hosts_per_pod]``, round-robin over the pod's
+    leaves — the contiguous host blocks are exactly what the sharded replay
+    partitions across JAX devices.  Device ``d<i>`` sits in the pod *after*
+    its host's pod (``(pod(i) + 1) % num_pods``), so every ``h_i -> d_i``
+    mount crosses the core tier: leaf -> spine (``num_spines`` choices) ->
+    core (``num_core`` choices) -> spine -> leaf, i.e.
+    ``num_spines * num_core * num_spines`` equal-cost ECMP paths (capped by
+    routing's :data:`~repro.core.fabric.routing.MAX_ECMP_PATHS`).  With a
+    single pod the core tier still carries no host->device traffic shortcut
+    — require ``num_pods >= 2`` so the shape is honest."""
+    if num_pods < 2:
+        raise ValueError("multi_pod needs at least two pods "
+                         "(use spine_leaf for a single pod)")
+    if hosts_per_pod < 1:
+        raise ValueError("multi_pod needs at least one host per pod")
+    if num_leaves < 1 or num_spines < 1 or num_core < 1:
+        raise ValueError("multi_pod needs >= 1 leaf, spine and core switch")
+    dpp = hosts_per_pod if devices_per_pod is None else devices_per_pod
+    if dpp < 1:
+        raise ValueError("multi_pod needs at least one device per pod")
+    up = uplink_bw_gbps if uplink_bw_gbps is not None else bw_gbps
+    core_bw = core_bw_gbps if core_bw_gbps is not None else up
+    topo = Topology(name="multi_pod")
+    cores = [topo.add_switch(f"c{j}") for j in range(num_core)]
+    leaves: List[List[str]] = []
+    for k in range(num_pods):
+        pod_spines = [topo.add_switch(f"p{k}sp{j}")
+                      for j in range(num_spines)]
+        pod_leaves = [topo.add_switch(f"p{k}s{j}") for j in range(num_leaves)]
+        leaves.append(pod_leaves)
+        for leaf in pod_leaves:
+            for spine in pod_spines:
+                topo.connect(leaf, spine, bw_gbps=up)
+        for spine in pod_spines:
+            for core in cores:
+                topo.connect(spine, core, bw_gbps=core_bw)
+    for i in range(num_pods * hosts_per_pod):
+        k = i // hosts_per_pod
+        topo.connect(topo.add_host(f"h{i}"),
+                     leaves[k][(i % hosts_per_pod) % num_leaves],
+                     bw_gbps=bw_gbps)
+    for i in range(num_pods * dpp):
+        k = (i // dpp + 1) % num_pods
+        topo.connect(topo.add_device(f"d{i}"),
+                     leaves[k][(i % dpp) % num_leaves], bw_gbps=bw_gbps)
+    topo.validate()
+    return topo
+
+
 TOPOLOGY_BUILDERS = {
     "direct": direct,
     "single_switch": single_switch,
     "two_level": two_level,
     "spine_leaf": spine_leaf,
     "mesh": mesh,
+    "multi_pod": multi_pod,
 }
 
 

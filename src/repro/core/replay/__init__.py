@@ -16,6 +16,10 @@ that are tick-identical to the interpreted
   and pooled media (the :class:`MultiHostDriver` fast path), blocked the
   same way — any stack-layer media, cached CXL-SSD with private or shared
   flash included.
+* :class:`ShardedMultiHostReplay` — the same program ``shard_map``-ed
+  over the host axis (:mod:`repro.core.replay.shard`): ``H`` hosts on
+  ``D`` devices at ``~H/D`` per-device state, tick-identical to the
+  unsharded lane (private-flash fabric mounts; pooled shapes refuse).
 * :mod:`repro.core.replay.stack` — the host-stackable device-state layer
   both engines consume (``init_state(cfg, n_hosts)`` / ``step(state,
   access)`` pytrees with a leading host axis; greedy FTL GC inside the
@@ -43,6 +47,7 @@ from repro.core.replay.assoc import (
 from repro.core.replay.engine import ReplayEngine, ReplayResult
 from repro.core.replay.metrics import MetricsBundle, MetricsSpec
 from repro.core.replay.multihost import MultiHostReplay
+from repro.core.replay.shard import ShardedMultiHostReplay, shard_count
 from repro.core.replay.spec import (
     ReplayUnsupported,
     StackConfig,
@@ -62,6 +67,8 @@ __all__ = [
     "ReplayResult",
     "MultiHostReplay",
     "ReplayUnsupported",
+    "ShardedMultiHostReplay",
+    "shard_count",
     "StackConfig",
     "build_stack",
     "busy_until",

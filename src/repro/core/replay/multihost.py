@@ -74,7 +74,8 @@ from repro.core.fabric.switch import ACTIVE_WINDOW_OCC
 from repro.core.replay import stack
 from repro.core.replay.spec import (DRAM, ReplayUnsupported, StackConfig,
                                     media_stack, trace_to_arrays,
-                                    validate_block_size)
+                                    validate_block_size,
+                                    validate_trace_columns)
 from repro.core.replay.stack import MAX_ACCESSES, _i64
 from repro.core.workloads.driver import MultiHostResult, TraceResult
 
@@ -676,28 +677,49 @@ class MultiHostReplay:
         size = parsed[0][2]
         if any(pz != size for _, _, pz in parsed):
             raise ReplayUnsupported("hosts must share one access size")
-        params, meta = _extract_targets(self.targets, size)
-        self._meta = meta        # labels/fabric for metrics bundle assembly
         H = len(self.targets)
         L = max(a.size for a, _, _ in parsed)
         addrs = np.zeros((H, L), np.int64)
         writes = np.zeros((H, L), bool)
+        lens = np.asarray([a.size for a, _, _ in parsed], np.int64)
+        for i, (a, w, _) in enumerate(parsed):
+            addrs[i, :a.size] = a
+            writes[i, :a.size] = w
+        return self.prepare_arrays(addrs, writes, lens=lens, size=size)
+
+    def prepare_arrays(self, addrs, writes, *, lens=None, size: int = 64):
+        """:meth:`prepare` for traces that already live as ``(H, L)``
+        columns — on-device workload synthesis (:mod:`repro.data.workloads`)
+        or :class:`~repro.data.trace_store.TraceStore` loads — so fleet-scale
+        inputs never round-trip through per-access python tuples.  Pool
+        address mapping and ECMP route-choice hashing stay host-side
+        numpy column ops (pure per-address arithmetic, bit-equal to the
+        per-access scalar path)."""
+        addrs, writes, lens = validate_trace_columns(
+            addrs, writes, lens, size=size)
+        H, L = addrs.shape
+        if H != len(self.targets):
+            raise ValueError(f"{H} trace rows for "
+                             f"{len(self.targets)} host targets")
+        params, meta = _extract_targets(self.targets, size)
+        self._meta = meta        # labels/fabric for metrics bundle assembly
         devs = np.zeros((H, L), np.int32)
         routes = np.zeros((H, L), np.int32)
-        lens = np.asarray([a.size for a, _, _ in parsed], np.int64)
         mapper, route_count = meta["mapper"], meta["route_count"]
         tplan = meta["transport_plan"]
-        for i, (a, w, _) in enumerate(parsed):
-            dev, local = _map_addrs(mapper, i, a)
-            addrs[i, :a.size] = local
-            writes[i, :a.size] = w
-            devs[i, :a.size] = dev
+        if mapper is not None:
+            addrs = addrs.copy()    # mapping rewrites to device-local addrs
+        for i in range(H):
+            n = int(lens[i])
+            dev, local = _map_addrs(mapper, i, addrs[i, :n])
+            addrs[i, :n] = local
+            devs[i, :n] = dev
             if meta["max_routes"] > 1 and tplan is None:
                 # same hash, same flow key (device-local line address) as
                 # HostPortView / FabricAttachedDevice evaluate per access
                 for d in np.unique(dev):
                     m = dev == d
-                    routes[i, :a.size][m] = flow_choices(
+                    routes[i, :n][m] = flow_choices(
                         meta["hosts"][i], meta["nodes"][d],
                         local[m] // LINE_BYTES, int(route_count[i, d]))
         stack_cfg, media_params, flash_of, n_flash = _media_setup(
@@ -890,23 +912,36 @@ class MultiHostReplay:
 
     def _execute(self, traces: Sequence, start_tick: int,
                  want_lat: bool = True, chunk_size=None):
-        cfg, params, devs, addrs, writes, lens, size = self.prepare(traces)
+        return self._execute_prepared(self.prepare(traces), start_tick,
+                                      want_lat, chunk_size)
+
+    def _dispatch(self, cfg, params, devs, addrs, writes, lens, start_tick,
+                  mspec, want_lat, size, chunk_size):
+        """The raw compiled-run dispatch (called under ``enable_x64``) —
+        the single override point for lanes that run the same prepared
+        tensors through a different program (the sharded fleet lane)."""
+        if chunk_size is not None:
+            return self._run_chunked(
+                cfg, params, devs, addrs, writes, lens, start_tick,
+                mspec, want_lat, size, int(chunk_size))
+        pj = jax.tree.map(jnp.asarray, params)
+        return _run_multi(
+            cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
+            jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
+            self.block_size, mspec, want_lat, size)
+
+    def _execute_prepared(self, prep, start_tick: int,
+                          want_lat: bool = True, chunk_size=None):
+        cfg, params, devs, addrs, writes, lens, size = prep
         if cfg.qos and start_tick < 0:
             raise ReplayUnsupported(
                 "QoS replay needs start_tick >= 0 (the virtual-clock and "
                 "arrival sentinels assume non-negative ticks)")
         mspec = self.metrics
         with enable_x64():
-            if chunk_size is not None:
-                who, issues, dones, bad, gcs, aux = self._run_chunked(
-                    cfg, params, devs, addrs, writes, lens, start_tick,
-                    mspec, want_lat, size, int(chunk_size))
-            else:
-                pj = jax.tree.map(jnp.asarray, params)
-                who, issues, dones, bad, gcs, aux = _run_multi(
-                    cfg, pj, jnp.asarray(devs), jnp.asarray(addrs),
-                    jnp.asarray(writes), jnp.asarray(lens), _i64(start_tick),
-                    self.block_size, mspec, want_lat, size)
+            who, issues, dones, bad, gcs, aux = self._dispatch(
+                cfg, params, devs, addrs, writes, lens, start_tick,
+                mspec, want_lat, size, chunk_size)
             if want_lat:
                 bad = np.asarray(bad)
                 gcs = np.asarray(gcs)
@@ -964,6 +999,23 @@ class MultiHostReplay:
             chunk_size=None) -> MultiHostResult:
         who, issues, dones, lens, size, aux, bundle = self._execute(
             traces, start_tick, want_lat=bool(return_latencies),
+            chunk_size=chunk_size)
+        if return_latencies:
+            res = self.aggregate(who, issues, dones, lens, size, start_tick)
+        else:
+            res = self._aggregate_scalars(aux, lens, size, start_tick)
+        return self._attach(res, bundle)
+
+    def run_arrays(self, addrs, writes, *, lens=None, size: int = 64,
+                   start_tick: int = 0, return_latencies: bool = True,
+                   chunk_size=None) -> MultiHostResult:
+        """:meth:`run` over already-columnar ``(H, L)`` trace arrays (see
+        :meth:`prepare_arrays`) — the fleet-scale entry point: synthesized
+        or store-loaded traces replay without ever materializing python
+        tuple lists."""
+        prep = self.prepare_arrays(addrs, writes, lens=lens, size=size)
+        who, issues, dones, lens, size, aux, bundle = self._execute_prepared(
+            prep, start_tick, want_lat=bool(return_latencies),
             chunk_size=chunk_size)
         if return_latencies:
             res = self.aggregate(who, issues, dones, lens, size, start_tick)

@@ -516,3 +516,39 @@ def trace_to_arrays(trace, *, line: int = 64) -> Tuple[np.ndarray, np.ndarray, i
     if (addrs < 0).any():
         raise ReplayUnsupported("negative addresses")
     return addrs, writes, size
+
+
+def validate_trace_columns(addrs, writes, lens=None, *, size: int = 64,
+                           line: int = 64
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Validate already-columnar ``(H, L)`` multi-host trace arrays — the
+    array twin of :func:`trace_to_arrays` for traces that were synthesized
+    as tensors (``repro.data.workloads``) or loaded from a
+    :class:`~repro.data.trace_store.TraceStore` and never existed as python
+    tuple lists.  Returns canonical ``(addrs int64, writes bool,
+    lens int64)``; ``lens=None`` means every host plays all ``L`` columns.
+    The same single-line containment rule applies (only the first ``lens[i]``
+    entries of each row are checked — padding is never replayed)."""
+    addrs = np.ascontiguousarray(np.asarray(addrs, np.int64))
+    writes = np.ascontiguousarray(np.asarray(writes, bool))
+    if addrs.ndim != 2 or writes.shape != addrs.shape:
+        raise ReplayUnsupported(
+            f"trace columns must be matching (hosts, accesses) arrays, got "
+            f"addrs {addrs.shape} / writes {writes.shape}")
+    H, L = addrs.shape
+    if lens is None:
+        lens = np.full(H, L, np.int64)
+    else:
+        lens = np.asarray(lens, np.int64)
+        if lens.shape != (H,) or (lens < 0).any() or (lens > L).any():
+            raise ReplayUnsupported(
+                f"lens must be (hosts,) within [0, {L}], got {lens!r}")
+    if not lens.any():
+        raise ReplayUnsupported("empty trace")
+    live = np.arange(L) < lens[:, None]
+    if size < 1 or ((addrs % line) + size > line)[live].any():
+        raise ReplayUnsupported(
+            "fused replay needs accesses contained in one 64 B line")
+    if (addrs < 0)[live].any():
+        raise ReplayUnsupported("negative addresses")
+    return addrs, writes, lens

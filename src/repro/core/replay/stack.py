@@ -617,10 +617,18 @@ def step(cfg: StackConfig, p: Dict, state: Dict, access: Dict
     monotone stamp).  Returns ``(state, out)`` with ``out`` carrying
     ``done`` (completion tick) and ``hit``/``evict`` flags.
 
+    An optional ``en`` key (scalar bool) gates the lane *writeback*: when
+    false the step still executes — every SPMD replica of a sharded replay
+    runs the same program — but the lane state is left untouched, so only
+    the shard that owns the issuing host commits the mutation.  Callers
+    gating with ``en`` must also gate every use of ``out`` (``done`` and the
+    event flags are garbage on a disabled step).
+
     With one lane the gather/scatter degenerates to static slicing, so the
     compiled single-host program is exactly the pre-refactor scan body.
     """
     media, flash = state["media"], state["flash"]
+    en = access.get("en")
     single = _n_lanes(media) == 1
     lane = 0 if single else access["lane"]
     md = jax.tree.map(lambda x: x[lane], media)
@@ -632,9 +640,13 @@ def step(cfg: StackConfig, p: Dict, state: Dict, access: Dict
     md, f, done, ex = media_step(
         cfg, p, md, f, access["t"], access["addr"], access["write"],
         access["posted"], access["ctr"])
-    media = jax.tree.map(lambda full, v: full.at[lane].set(v), media, md)
+    if en is None:
+        wb = lambda full, v, i: full.at[i].set(v)
+    else:
+        wb = lambda full, v, i: full.at[i].set(jnp.where(en, v, full[i]))
+    media = jax.tree.map(lambda full, v: wb(full, v, lane), media, md)
     if flash is not None:
-        flash = jax.tree.map(lambda full, v: full.at[flane].set(v), flash, f)
+        flash = jax.tree.map(lambda full, v: wb(full, v, flane), flash, f)
     false = jnp.zeros((), bool)
     return ({"media": media, "flash": flash},
             {**ex, "done": done, "hit": ex.get("hit", false),

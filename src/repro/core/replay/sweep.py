@@ -13,7 +13,10 @@ against the same (or per-lane) traces:
   config (tested).
 * :func:`host_count_sweep` — batch over **host count** on the fused
   multi-host replay: one compiled program, one vmap lane per host count,
-  inactive hosts masked out of the issue race by zero-length traces.
+  inactive hosts masked out of the issue race by zero-length traces
+  (``sharded=True`` instead reuses one cached shard_map program — the
+  masked lengths are traced — across every host count sharing the shard
+  shape).
 * :func:`fault_seed_sweep` — batch over **fault-plan seed** on the fused
   multi-host replay under an active transport fault plan: the per-seed
   precomputed hop columns (retry-stretched occupancies, failover routes)
@@ -176,9 +179,12 @@ def host_count_sweep(targets: Sequence, traces: Sequence,
                      host_counts: Sequence[int],
                      outstanding: int = 32,
                      issue_overhead_ns: float = 0.5,
-                     posted_writes: bool = True) -> List[MultiHostResult]:
-    """Replay the same multi-host scenario at several host counts in ONE
-    compiled vmapped call.
+                     posted_writes: bool = True,
+                     sharded: bool = False,
+                     devices: Optional[Sequence] = None,
+                     info: Optional[Dict] = None) -> List[MultiHostResult]:
+    """Replay the same multi-host scenario at several host counts with ONE
+    compiled program.
 
     ``targets``/``traces`` describe the largest configuration; lane k keeps
     the first ``host_counts[k]`` hosts and masks the rest out with
@@ -189,11 +195,49 @@ def host_count_sweep(targets: Sequence, traces: Sequence,
     fabric* (tested against :class:`MultiHostDriver`).  Any stack-layer
     media works, cached CXL-SSD included — absent hosts leave their private
     cache lanes (and the shared flash) untouched.
+
+    ``sharded=True`` runs each host count through
+    :class:`~repro.core.replay.shard.ShardedMultiHostReplay` on ``devices``
+    (default ``jax.devices()``): the masked length vector is a *traced*
+    argument of the cached shard_map program, so every host count sharing
+    the shard shape reuses one compiled program — the same amortization the
+    unsharded path gets from vmap lanes, at ``~H/D`` per-device state.
+    Pass a dict as ``info`` to receive the execution report
+    (``{"sharded", "device_count", "hosts_per_device"}``).
     """
+    if sharded:
+        from repro.core.replay.shard import ShardedMultiHostReplay
+        eng = ShardedMultiHostReplay(targets, outstanding=outstanding,
+                                     issue_overhead_ns=issue_overhead_ns,
+                                     posted_writes=posted_writes,
+                                     devices=devices)
+        cfg, params, devs, addrs, writes, lens, size = eng.prepare(traces)
+        out: List[MultiHostResult] = []
+        with enable_x64():
+            for h in host_counts:
+                lane = np.where(np.arange(lens.size) < h, lens, 0)
+                who, issues, dones, bad, _, _ = eng._dispatch(
+                    cfg, params, devs, addrs, writes, lane, 0,
+                    None, True, size, None)
+                who = np.asarray(who)
+                issues = np.asarray(issues)
+                dones = np.asarray(dones)
+                total = int(lane.sum())
+                if total and bool(np.asarray(bad)[total - 1]):
+                    raise ReplayUnsupported(
+                        f"host-count lane {h}: FTL ran out of free blocks "
+                        "during GC; use engine='python'")
+                out.append(eng.aggregate(who, issues, dones, lane, size))
+        if info is not None:
+            info.update(dict(eng.last_mesh, sharded=True))
+        return out
     eng = MultiHostReplay(targets, outstanding=outstanding,
                           issue_overhead_ns=issue_overhead_ns,
                           posted_writes=posted_writes)
     cfg, params, devs, addrs, writes, lens, size = eng.prepare(traces)
+    if info is not None:
+        info.update({"sharded": False, "device_count": 1,
+                     "hosts_per_device": int(lens.size)})
     lane_lens = np.stack([
         np.where(np.arange(lens.size) < h, lens, 0) for h in host_counts])
     with enable_x64():

@@ -1,3 +1,24 @@
 from repro.data.pipeline import ShardedLoader, make_batch_spec
+from repro.data.workloads import (
+    WORKLOAD_KINDS,
+    WorkloadSpec,
+    access_at,
+    host_trace_jnp,
+    host_trace_np,
+    make_traces,
+    traces_np,
+    zipf_cdf,
+)
 
-__all__ = ["ShardedLoader", "make_batch_spec"]
+__all__ = [
+    "ShardedLoader",
+    "WORKLOAD_KINDS",
+    "WorkloadSpec",
+    "access_at",
+    "host_trace_jnp",
+    "host_trace_np",
+    "make_batch_spec",
+    "make_traces",
+    "traces_np",
+    "zipf_cdf",
+]

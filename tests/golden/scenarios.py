@@ -73,6 +73,16 @@ FAULT_SCENARIOS = ("faults-linkretry@spine_leaf",
 MULTI_FAULT_HOSTS = {"faults-portdown@multihost_x2": 2,
                      "faults-linkretry@spine_leaf_x4": 4}
 
+# rack-scale fleet scenario (PR 10): a synthesized Zipfian fleet on a
+# 2-pod datacenter fabric (cross-pod host->device paths through the core
+# tier), replayed by the SHARDED shard_map lane — the pin holds the
+# interpreted MultiHostDriver's latencies, so golden conformance certifies
+# sharded == python tick-for-tick at whatever device count the run forces
+# (D=1 in the default tier; the CI fleet-smoke job re-runs it on 8 forced
+# host-platform devices)
+FLEET_SCENARIO = "fleet-zipf@multipod_2x4"
+FLEET_GOLDEN_HOSTS = 8
+
 
 def scenario_names():
     names = [f"{d}@{attach}" for d in DEVICES
@@ -88,12 +98,14 @@ def scenario_names():
     # deliberately left unpinned)
     names.append("dram-qos@fabric")
     names += sorted(MULTI_FAULT_HOSTS)
+    names.append(FLEET_SCENARIO)
     return names
 
 
 def is_multi(name: str) -> bool:
     """Multi-host scenarios pin one latency list per host."""
-    return name.startswith("multihost") or name in MULTI_FAULT_HOSTS
+    return (name.startswith("multihost") or name in MULTI_FAULT_HOSTS
+            or name.startswith("fleet"))
 
 
 def scenario_outstanding(name: str) -> int:
@@ -222,6 +234,13 @@ def make_multi_targets(name: str = "multihost-qos-ecmp"):
 
     if name in MULTI_FAULT_HOSTS:
         return _make_multi_fault_targets(name)
+    if name == FLEET_SCENARIO:
+        from repro.core.devices import make_device
+
+        fab = Fabric.build("multi_pod", ecmp=True, num_pods=2,
+                           hosts_per_pod=FLEET_GOLDEN_HOSTS // 2)
+        return [fab.mount(f"h{i}", f"d{i}", make_device("dram"))
+                for i in range(FLEET_GOLDEN_HOSTS)]
     if name == "multihost-qos-ecmp":
         fab = Fabric.build("spine_leaf", num_hosts=MULTI["num_hosts"],
                            num_devices=2, num_leaves=MULTI["num_leaves"],
@@ -252,6 +271,13 @@ def make_multi_targets(name: str = "multihost-qos-ecmp"):
 def multi_traces(name: str = "multihost-qos-ecmp"):
     if name in MULTI_FAULT_HOSTS:
         return [make_trace(400 + h) for h in range(MULTI_FAULT_HOSTS[name])]
+    if name == FLEET_SCENARIO:
+        # synthesized (hash-seeded) Zipfian fleet traffic — the workload
+        # generator twins, pinned end-to-end through the replay engines
+        from repro.data import WorkloadSpec, make_traces
+
+        spec = WorkloadSpec("zipfian", num_pages=48, zipf_s=1.1)
+        return make_traces(spec, 29, FLEET_GOLDEN_HOSTS, N_ACCESSES)
     if name == "multihost-ssd-sharedflash":
         # write-heavy churn past the 16-page cache: reaches the tiny shared
         # flash's GC watermark (sustained, clean-victim collections)
@@ -327,13 +353,17 @@ def run_python(name: str):
 def run_scan(name: str, block_size: int = 1):
     """Fused lax.scan replay (optionally blocked): per-access latencies +
     scalar summary.  Any ``block_size`` must match the ``python_scan``
-    pins exactly."""
-    from repro.core.replay import MultiHostReplay, ReplayEngine
+    pins exactly.  ``fleet-*`` scenarios replay through the SHARDED
+    shard_map lane, so the pins certify it at the run's device count."""
+    from repro.core.replay import (MultiHostReplay, ReplayEngine,
+                                   ShardedMultiHostReplay)
 
     if is_multi(name):
-        eng = MultiHostReplay(make_multi_targets(name),
-                              outstanding=OUTSTANDING,
-                              block_size=block_size)
+        cls = (ShardedMultiHostReplay if name.startswith("fleet")
+               else MultiHostReplay)
+        eng = cls(make_multi_targets(name),
+                  outstanding=OUTSTANDING,
+                  block_size=block_size)
         res, lat = eng.run_recorded(multi_traces(name))
         return [_summ(l.tolist(), host)
                 for l, host in zip(lat, res.per_host)]
@@ -364,15 +394,19 @@ def run_python_metrics(name: str):
 
 def run_scan_metrics(name: str):
     """Fused-lane metrics bundle (JSON form): in-scan accumulation must
-    match the interpreted stats dicts exactly."""
-    from repro.core.replay import MultiHostReplay, ReplayEngine
+    match the interpreted stats dicts exactly (``fleet-*`` through the
+    sharded lane — its psum-folded accumulators included)."""
+    from repro.core.replay import (MultiHostReplay, ReplayEngine,
+                                   ShardedMultiHostReplay)
     from repro.core.replay.metrics import MetricsSpec
 
     spec = MetricsSpec()
     if is_multi(name):
-        res = MultiHostReplay(make_multi_targets(name),
-                              outstanding=OUTSTANDING,
-                              metrics=spec).run(multi_traces(name))
+        cls = (ShardedMultiHostReplay if name.startswith("fleet")
+               else MultiHostReplay)
+        res = cls(make_multi_targets(name),
+                  outstanding=OUTSTANDING,
+                  metrics=spec).run(multi_traces(name))
     else:
         res = ReplayEngine(make_target(name),
                            outstanding=scenario_outstanding(name),

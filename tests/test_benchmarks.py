@@ -248,6 +248,54 @@ def test_replay_bench_availability_lane_recorded():
         assert any(s["link_retries"] > 0 for s in lane["seeds"].values())
 
 
+def test_fleet_lane_derived_json_identical_across_runs():
+    """The rack-scale fleet lane is a pure function of its workload seed:
+    two runs must produce byte-identical derived JSON (exactness bits,
+    mesh shape, tail percentiles — no wall-clock numbers)."""
+    import replay_bench
+
+    kw = dict(num_hosts=8, accesses=120, num_pods=2)
+    a = replay_bench.collect_fleet_derived(**kw)
+    b = replay_bench.collect_fleet_derived(**kw)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert a["tick_exact_sharded_vs_unsharded"] is True
+    assert a["tick_exact_vs_python"] is True
+
+
+def test_replay_bench_fleet_lane_recorded():
+    """The committed artifact carries the rack-scale fleet lane: >=64
+    hosts, >=100k on-device-synthesized accesses on a multi-pod fabric,
+    the sharded lane recorded tick-exact against the unsharded lane and
+    the interpreted driver at that scale."""
+    report = _load_replay_report()
+    fleet = report.get("fleet")
+    assert fleet is not None, \
+        "fleet section missing from results/BENCH_replay.json"
+    assert fleet["hosts"] >= 64
+    assert fleet["n_accesses"] >= 100_000
+    assert fleet["n_accesses"] == fleet["hosts"] * fleet["accesses_per_host"]
+    assert fleet["workload"]["synthesis"].startswith("jnp")
+    assert fleet["fabric"]["kind"] == "multi_pod"
+    assert fleet["fabric"]["num_pods"] >= 2
+    assert fleet["tick_exact_sharded_vs_unsharded"] is True
+    assert fleet["metrics_equal_sharded_vs_unsharded"] is True
+    assert fleet["tick_exact_vs_python"] is True
+    mesh = fleet["mesh"]
+    assert mesh["device_count"] * mesh["hosts_per_device"] == fleet["hosts"]
+
+
+def test_replay_bench_lane_merge_map_covers_fleet():
+    """--lanes re-records single derived lanes append-only; the map must
+    cover every derived-only section of the artifact."""
+    import replay_bench
+
+    assert set(replay_bench.LANE_COLLECTORS) == \
+        {"faults", "availability", "fleet"}
+    for key, (section, fn) in replay_bench.LANE_COLLECTORS.items():
+        assert callable(fn)
+        assert section in _load_replay_report()
+
+
 def test_replay_bench_speedups_meet_pinned_floor():
     report = _load_replay_report()
     assert report["meets_target"] is True

@@ -1,0 +1,67 @@
+"""Fleet smoke: the sharded replay exercised end-to-end on whatever JAX
+device mesh the process has.
+
+In the default test tier this runs the degenerate single-shard mesh (the
+same SPMD program).  The CI ``fleet-smoke`` job re-runs it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the winner
+election and record broadcast cross real shard boundaries, and checks the
+golden ``fleet-zipf@multipod_2x4`` pin through the sharded lane at that
+device count."""
+
+import jax
+
+from golden import scenarios as sc
+from repro.core.devices import make_device
+from repro.core.fabric import Fabric
+from repro.core.replay import (
+    MultiHostReplay,
+    ShardedMultiHostReplay,
+    shard_count,
+)
+from repro.data import WorkloadSpec, traces_np
+
+
+def _mounts(nh):
+    fab = Fabric.build("multi_pod", ecmp=True, num_pods=2,
+                       hosts_per_pod=nh // 2)
+    return [fab.mount(f"h{i}", f"d{i}", make_device("dram"))
+            for i in range(nh)]
+
+
+def test_fleet_smoke_sharded_equals_unsharded_on_forced_mesh():
+    nh = 8
+    spec = WorkloadSpec("zipfian", num_pages=128, zipf_s=1.1)
+    addrs, writes = traces_np(spec, 31, nh, 100)
+    ru = MultiHostReplay(_mounts(nh), outstanding=8).run_arrays(
+        addrs, writes)
+    eng = ShardedMultiHostReplay(_mounts(nh), outstanding=8)
+    rs = eng.run_arrays(addrs, writes)
+    assert ru.elapsed_ticks == rs.elapsed_ticks
+    for a, b in zip(ru.per_host, rs.per_host):
+        assert (a.accesses, a.elapsed_ticks, a.sum_latency_ticks,
+                a.end_tick) == (b.accesses, b.elapsed_ticks,
+                                b.sum_latency_ticks, b.end_tick)
+    # the mesh must use every device the platform offers (up to H): under
+    # the CI job's 8 forced devices this asserts a genuinely distributed
+    # run, not a silent single-shard fallback
+    assert eng.last_mesh["device_count"] == shard_count(nh)
+    if jax.device_count() >= nh:
+        assert eng.last_mesh["device_count"] == nh
+
+
+def test_fleet_smoke_golden_pin_through_sharded_lane():
+    """The committed fleet-zipf@multipod_2x4 pin (interpreted
+    MultiHostDriver latencies) reproduced by the sharded lane at this
+    run's device count."""
+    fixture = sc.load_fixture()["scenarios"]
+    expected = fixture[sc.FLEET_SCENARIO]["python_scan"]
+    actual = sc.run_scan(sc.FLEET_SCENARIO)
+    assert len(actual) == sc.FLEET_GOLDEN_HOSTS
+    for h, (e, a) in enumerate(zip(expected, actual)):
+        assert a["latency_ticks"] == e["latency_ticks"], \
+            f"host {h}: sharded per-access latencies diverged from the pin"
+        assert a["elapsed_ticks"] == e["elapsed_ticks"]
+        assert a["sum_latency_ticks"] == e["sum_latency_ticks"]
+        assert a["end_tick"] == e["end_tick"]
+    assert sc.run_scan_metrics(sc.FLEET_SCENARIO) == \
+        fixture[sc.FLEET_SCENARIO]["metrics"]
